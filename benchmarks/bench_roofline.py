@@ -1,0 +1,51 @@
+"""Roofline report: reads the dry-run sweep artifacts (§Roofline).
+
+Re-emits the per-(arch x shape x mesh) three-term roofline from
+``results/dryrun_all.json`` (produced by ``repro.launch.dryrun``); does not
+itself compile.  Run ``PYTHONPATH=src python -m repro.launch.dryrun
+--both-meshes --out results/dryrun_all.json`` to regenerate.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import RESULTS_DIR, Reporter
+
+SWEEP = os.path.join(RESULTS_DIR, "dryrun_all.json")
+
+
+def main(rep: Reporter) -> dict:
+    if not os.path.exists(SWEEP):
+        rep.add("roofline_missing", 0.0,
+                "run repro.launch.dryrun --both-meshes first")
+        return {}
+    with open(SWEEP) as f:
+        records = json.load(f)
+    ok = 0
+    for r in records:
+        if r["status"] != "ok":
+            continue
+        if r["multi_pod"]:
+            continue  # roofline table is single-pod per the assignment
+        ok += 1
+        rl = r["roofline"]
+        dom = max(rl["t_compute_s"], rl["t_memory_s"], rl["t_collective_s"])
+        frac = rl["t_compute_s"] / max(1e-12, dom)
+        rep.add(
+            f"roofline_{r['arch']}_{r['shape']}",
+            dom * 1e6,
+            f"bn={rl['bottleneck']} comp={rl['t_compute_s']:.3e}s "
+            f"mem={rl['t_memory_s']:.3e}s coll={rl['t_collective_s']:.3e}s "
+            f"frac={frac:.3f} useful={rl['useful_flops_ratio']:.2f}",
+        )
+    n_err = sum(1 for r in records if r["status"] == "error")
+    n_skip = sum(1 for r in records if r["status"] == "skipped")
+    rep.add("roofline_summary", 0.0,
+            f"cells_ok={ok} errors={n_err} skipped={n_skip} "
+            f"(skips = long_500k on full-attention archs)")
+    return {"records": ok}
+
+
+if __name__ == "__main__":
+    main(Reporter())

@@ -1,0 +1,135 @@
+"""Experiment 4 (Fig. 5c,d): batching-parameter sensitivity + routing policy.
+
+(c) throughput vs ``max_num_seqs`` x ``max_num_batched_tokens`` on a fixed
+prompt subset — the paper finds max_num_seqs dominates.
+(d) strong scaling of a fixed heterogeneous prompt set (lognormal lengths,
+the 4k-50k-token LUCID analogue scaled down) across 1-4 service instances
+under randomized vs token-aware balanced routing.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import ResourceDescription, Rhapsody, ServiceDescription
+from repro.core.router import make_router
+from repro.serving.client import llm_service_factory
+
+from .common import Reporter
+
+
+def engine_cfg():
+    return get_config("rhapsody-demo").scaled(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=512)
+
+
+def hetero_prompts(n: int, seed: int = 0, lo: int = 8, hi: int = 96):
+    rng = np.random.RandomState(seed)
+    lens = np.clip(np.exp(rng.normal(3.0, 0.8, size=n)).astype(int), lo, hi)
+    return [list(rng.randint(0, 512, size=int(L))) for L in lens]
+
+
+# ---------------------------------------------------------------------------
+# (c) batching parameter sensitivity
+# ---------------------------------------------------------------------------
+
+
+def sweep_batching(rep: Reporter, *, n_prompts: int = 24) -> list:
+    cfg = engine_cfg()
+    prompts = hetero_prompts(n_prompts, seed=1)
+    out = []
+    for max_num_seqs in (2, 4, 8):
+        for max_tokens in (128, 512):
+            rh = Rhapsody(ResourceDescription(nodes=1, cores_per_node=8),
+                          n_workers=1)
+            try:
+                ep = rh.add_service(ServiceDescription(
+                    name="llm", factory=llm_service_factory(
+                        cfg, max_num_seqs=max_num_seqs,
+                        max_num_batched_tokens=max_tokens,
+                        max_len=128, prefill_buckets=(32, 64, 128))))
+                t0 = time.perf_counter()
+                futs = [ep.request({"prompt": p, "max_new_tokens": 8})
+                        for p in prompts]
+                res = [f.result(timeout=600) for f in futs]
+                dt = time.perf_counter() - t0
+                tokens = sum(len(r["tokens"]) + r["n_prompt"] for r in res)
+                row = {"max_num_seqs": max_num_seqs,
+                       "max_num_batched_tokens": max_tokens,
+                       "tokens_per_s": tokens / dt, "seconds": dt}
+                out.append(row)
+                rep.add(f"exp4_batch_s{max_num_seqs}_t{max_tokens}",
+                        dt * 1e6 / n_prompts,
+                        f"{row['tokens_per_s']:.0f} tok/s")
+            finally:
+                rh.close()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# (d) routing policy strong scaling
+# ---------------------------------------------------------------------------
+
+
+def routed_run(n_services: int, policy: str, prompts) -> dict:
+    cfg = engine_cfg()
+    rh = Rhapsody(ResourceDescription(nodes=n_services, cores_per_node=8),
+                  n_workers=1)
+    try:
+        eps = [rh.add_service(ServiceDescription(
+            name=f"llm{i}", factory=llm_service_factory(
+                cfg, max_num_seqs=4, max_len=128,
+                prefill_buckets=(32, 64, 128), seed=i)))
+            for i in range(n_services)]
+        router = make_router(policy)
+        assign = router.assign(prompts, n_services, cost=len)
+        results = []
+        lock = threading.Lock()
+
+        def feed(si: int):
+            futs = [eps[si].request({"prompt": prompts[i],
+                                     "max_new_tokens": 8})
+                    for i in assign[si]]
+            out = [f.result(timeout=600) for f in futs]
+            with lock:
+                results.extend(out)
+
+        t0 = time.perf_counter()
+        th = [threading.Thread(target=feed, args=(s,))
+              for s in range(n_services)]
+        for t in th:
+            t.start()
+        for t in th:
+            t.join()
+        dt = time.perf_counter() - t0
+        tokens = sum(len(r["tokens"]) + r["n_prompt"] for r in results)
+        loads = [sum(len(prompts[i]) for i in a) for a in assign]
+        return {"services": n_services, "policy": policy, "seconds": dt,
+                "tokens_per_s": tokens / dt,
+                "load_imbalance": max(loads) / max(1, min(loads))}
+    finally:
+        rh.close()
+
+
+def main(rep: Reporter, *, n_prompts: int = 24,
+         service_counts=(1, 2, 4)) -> dict:
+    sens = sweep_batching(rep, n_prompts=min(12, n_prompts))
+    prompts = hetero_prompts(n_prompts, seed=2)
+    scaling = []
+    for n in service_counts:
+        for policy in ("random", "balanced"):
+            r = routed_run(n, policy, prompts)
+            scaling.append(r)
+            rep.add(f"exp4_route_{policy}_s{n}",
+                    r["seconds"] * 1e6 / n_prompts,
+                    f"{r['tokens_per_s']:.0f} tok/s "
+                    f"imbalance={r['load_imbalance']:.2f}")
+    return {"sensitivity": sens, "scaling": scaling}
+
+
+if __name__ == "__main__":
+    main(Reporter())

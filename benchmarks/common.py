@@ -1,0 +1,31 @@
+"""Shared benchmark helpers + CSV emission."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Callable
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+class Reporter:
+    def __init__(self):
+        self.rows = []
+
+    def add(self, name: str, us_per_call: float, derived: str = ""):
+        self.rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+    def save_json(self, name: str, payload):
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        path = os.path.join(RESULTS_DIR, name)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1)
+        return path
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return time.perf_counter() - t0, out

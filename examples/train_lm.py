@@ -1,0 +1,61 @@
+"""Train the demo LM for a few hundred steps with checkpoint/restart.
+
+Run: PYTHONPATH=src python examples/train_lm.py [--steps 200] [--resume]
+"""
+import argparse
+import os
+
+import jax
+
+from repro.configs import get_config
+from repro.models import get_model, make_batch
+from repro.training.checkpoint import Checkpointer
+from repro.training.optim import OptimizerConfig
+from repro.training.train import TrainConfig, init_state, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/rhapsody_train_lm")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config("rhapsody-demo")
+    api = get_model(cfg)
+    tcfg = TrainConfig(
+        global_batch=args.batch, seq_len=args.seq, microbatches=2,
+        optimizer=OptimizerConfig(lr=3e-3, warmup_steps=20,
+                                  decay_steps=args.steps),
+        checkpoint_every=50)
+    ck = Checkpointer(args.ckpt_dir, keep=2)
+
+    state, _ = init_state(jax.random.PRNGKey(0), api, cfg, tcfg.optimizer)
+    start = 0
+    if args.resume:
+        restored, start = ck.restore_latest(state)
+        if restored is not None:
+            state = restored
+            print(f"resumed from step {start}")
+
+    def data():
+        k = jax.random.PRNGKey(1234)
+        while True:
+            k, s = jax.random.split(k)
+            yield make_batch(cfg, args.batch, args.seq, s)
+
+    def log(step, m):
+        print(f"step {step:4d}  loss {m['loss']:.4f}  "
+              f"lr {m['lr']:.2e}  gnorm {m['grad_norm']:.2f}")
+
+    state, hist = train_loop(api, cfg, tcfg, steps=args.steps,
+                             data_iter=data(), state=state, start_step=start,
+                             checkpointer=ck, log_every=20, on_metrics=log)
+    print(f"final loss {hist[-1]['loss']:.4f} "
+          f"(from {hist[0]['loss']:.4f}); checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

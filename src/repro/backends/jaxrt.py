@@ -1,0 +1,80 @@
+"""JAX compute backend: executes jitted array payloads on local devices.
+
+The middleware composes this *alongside* the pool backend (the paper's
+central claim: multiple runtimes coexist in one allocation, each serving the
+partition it's suited for).  Payloads are ``fn(*args)`` returning jax arrays;
+the backend jit-caches by function identity, runs on a dedicated executor
+thread (keeping device work off middleware worker threads), and blocks until
+results are materialized so task completion means data-ready.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.core.task import Task, TaskKind
+from .base import Backend, BackendCapabilities
+
+
+class JaxBackend(Backend):
+    name = "jax"
+
+    def __init__(self, *, jit_payloads: bool = True):
+        self.jit_payloads = jit_payloads
+        self._jit_cache: dict = {}
+        self._queue: "queue.Queue" = queue.Queue()
+        self._on_complete = None
+        self._alive = True
+        self._thread: Optional[threading.Thread] = None
+        self.executed = 0
+
+    # -- Backend API --------------------------------------------------------
+    def start(self, on_complete):
+        self._on_complete = on_complete
+        self._thread = threading.Thread(target=self._loop,
+                                        name="jax-backend", daemon=True)
+        self._thread.start()
+        return self
+
+    def submit(self, task: Task):
+        self._queue.put(task)
+
+    def capabilities(self):
+        return BackendCapabilities(
+            kinds=(TaskKind.FUNCTION, TaskKind.EXECUTABLE, TaskKind.COUPLED),
+            max_concurrency=1,  # one device stream
+            supports_gpu=True,
+        )
+
+    def shutdown(self, wait=True):
+        self._alive = False
+        self._queue.put(None)
+        if wait and self._thread is not None:
+            self._thread.join(timeout=2.0)
+
+    def stats(self):
+        return {"executed": self.executed, "queued": self._queue.qsize(),
+                "jit_cache": len(self._jit_cache)}
+
+    # -- internals ------------------------------------------------------------
+    def _loop(self):
+        while self._alive:
+            task = self._queue.get()
+            if task is None:
+                break
+            try:
+                fn = task.desc.fn
+                if self.jit_payloads and not task.desc.kwargs:
+                    key = id(fn)
+                    if key not in self._jit_cache:
+                        self._jit_cache[key] = jax.jit(fn)
+                    fn = self._jit_cache[key]
+                result = fn(*task.desc.args, **task.desc.kwargs)
+                result = jax.block_until_ready(result)
+                self.executed += 1
+                self._on_complete(task, result, None)
+            except BaseException as e:  # noqa: BLE001
+                self._on_complete(task, None, e)

@@ -1,0 +1,14 @@
+"""RHAPSODY middleware core: tasks, services, resources, policies, coupling."""
+from .middleware import Rhapsody
+from .policy import ExecutionPolicy
+from .resources import Allocation, Placement, ResourceDescription, partition
+from .service import ServiceDescription, ServiceEndpoint
+from .task import (ResourceRequirements, Task, TaskDescription, TaskKind,
+                   TaskState)
+
+__all__ = [
+    "Rhapsody", "ExecutionPolicy", "ResourceDescription", "Allocation",
+    "Placement", "partition", "ServiceDescription", "ServiceEndpoint",
+    "TaskDescription", "TaskKind", "TaskState", "Task",
+    "ResourceRequirements",
+]

@@ -1,0 +1,94 @@
+"""Agentic AI-HPC control loop (Exp 6, Fig 7).
+
+An ``Agent`` repeatedly (1) issues an inference request to a middleware
+service (the decision), (2) realizes the decision as HPC task submissions,
+(3) observes results and decides again — with feedback: high realization
+backlog moderates the decision rate (the emergent behavior the paper
+observes).  Decision events are tagged in the event log so the benchmark can
+compute decision rate vs ARR and their lag.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Optional
+
+from .middleware import Rhapsody
+from .task import TaskDescription, TaskKind, ResourceRequirements
+
+
+@dataclasses.dataclass
+class AgentConfig:
+    name: str = "agent"
+    service: str = "llm"
+    n_decisions: int = 10
+    tasks_per_decision: int = 2
+    decision_payload: Callable[[int], Any] = lambda i: [1, 2, 3]
+    make_task: Optional[Callable[[int, int], TaskDescription]] = None
+    backlog_limit: int = 16  # feedback: pause deciding when backlog high
+    think_time: float = 0.0
+
+
+class Agent(threading.Thread):
+    """One autonomous agent driving decisions -> HPC realizations."""
+
+    def __init__(self, rhapsody: Rhapsody, cfg: AgentConfig):
+        super().__init__(name=f"agent-{cfg.name}", daemon=True)
+        self.rh = rhapsody
+        self.cfg = cfg
+        self.submitted: list = []
+        self.decisions = 0
+        self.error: Optional[BaseException] = None
+
+    def run(self):
+        try:
+            ep = self.rh.get_service(self.cfg.service)
+            for i in range(self.cfg.n_decisions):
+                # feedback loop: wait while too many realized tasks pending
+                while self._backlog() > self.cfg.backlog_limit:
+                    time.sleep(0.001)
+                fut = ep.request(self.cfg.decision_payload(i))
+                result = fut.result(timeout=60.0)
+                self.decisions += 1
+                self.rh.events.emit(f"{self.cfg.name}.d{i}", "DECISION",
+                                    "agent", "decision")
+                descs = []
+                for j in range(self.cfg.tasks_per_decision):
+                    if self.cfg.make_task is not None:
+                        descs.append(self.cfg.make_task(i, j))
+                    else:
+                        from repro.substrate.simulation import noop
+
+                        descs.append(TaskDescription(
+                            kind=TaskKind.FUNCTION, fn=noop,
+                            task_type="agent_tool",
+                        ))
+                self.submitted.extend(self.rh.submit(descs))
+                if self.cfg.think_time:
+                    time.sleep(self.cfg.think_time)
+        except BaseException as e:  # noqa: BLE001
+            self.error = e
+
+    def _backlog(self) -> int:
+        n = 0
+        for uid in self.submitted[-64:]:
+            if not self.rh.tasks[uid].state.terminal:
+                n += 1
+        return n
+
+
+def run_agent_population(rhapsody: Rhapsody, configs) -> dict:
+    agents = [Agent(rhapsody, c) for c in configs]
+    for a in agents:
+        a.start()
+    for a in agents:
+        a.join()
+    uids = [u for a in agents for u in a.submitted]
+    rhapsody.wait(uids)
+    return {
+        "agents": len(agents),
+        "decisions": sum(a.decisions for a in agents),
+        "tasks": len(uids),
+        "errors": [repr(a.error) for a in agents if a.error],
+    }

@@ -1,0 +1,27 @@
+"""Execution policies: high-level constraints guiding task->resource mapping."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class ExecutionPolicy:
+    # scheduling
+    oversubscription: float = 4.0  # ready tasks kept per free core (backfill)
+    backfill: bool = True  # smaller tasks may jump blocked head-of-line tasks
+    backfill_window: int = 64  # how deep into the ready queue backfill looks
+    # placement
+    default_partition: Optional[str] = None
+    colocate_coupled: bool = True  # coupled pairs pinned to the same node
+    # routing (inference)
+    routing: str = "balanced"  # random | round_robin | balanced
+    # fault tolerance
+    max_retries: int = 1
+    straggler_factor: float = 0.0  # >0: duplicate tasks slower than
+    #                                factor x median runtime (first wins)
+    straggler_min_samples: int = 10
+    # services
+    service_ready_timeout: float = 30.0
+    service_heartbeat: float = 5.0
+    restart_failed_services: bool = True

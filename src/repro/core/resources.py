@@ -1,0 +1,155 @@
+"""Declarative resources, partitions, and the resource mapper (§III-C).
+
+``ResourceDescription`` declares what the middleware may use; ``Allocation``
+tracks free cores/gpus per node with O(1) freelists; ``ResourceMapper`` binds
+task requirements (ranks x cores x gpus) to concrete node/core/gpu ids.
+Allocations can be partitioned into disjoint node sets, each servable by a
+different backend (e.g. MPI partition + function-task partition).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourceDescription:
+    nodes: int = 1
+    cores_per_node: int = 8
+    gpus_per_node: int = 0
+
+    @property
+    def total_cores(self) -> int:
+        return self.nodes * self.cores_per_node
+
+    @property
+    def total_gpus(self) -> int:
+        return self.nodes * self.gpus_per_node
+
+
+@dataclasses.dataclass
+class Placement:
+    """Concrete binding: rank -> (node, cores, gpus)."""
+
+    ranks: list  # [(node_id, (core ids...), (gpu ids...)), ...]
+
+    @property
+    def nodes(self):
+        return sorted({r[0] for r in self.ranks})
+
+
+class NodeState:
+    __slots__ = ("node_id", "free_cores", "free_gpus")
+
+    def __init__(self, node_id: int, cores: int, gpus: int):
+        self.node_id = node_id
+        self.free_cores = list(range(cores))
+        self.free_gpus = list(range(gpus))
+
+
+class Allocation:
+    """Mutable free-resource view over a ResourceDescription (or subset)."""
+
+    def __init__(self, desc: ResourceDescription, node_ids=None,
+                 name: str = "default"):
+        self.desc = desc
+        self.name = name
+        ids = list(node_ids) if node_ids is not None else list(range(desc.nodes))
+        self.nodes = {i: NodeState(i, desc.cores_per_node, desc.gpus_per_node)
+                      for i in ids}
+        self._lock = threading.Lock()
+        self.used_cores = 0
+        self.used_gpus = 0
+
+    # -- capacity ---------------------------------------------------------
+    @property
+    def total_cores(self) -> int:
+        return len(self.nodes) * self.desc.cores_per_node
+
+    @property
+    def total_gpus(self) -> int:
+        return len(self.nodes) * self.desc.gpus_per_node
+
+    def utilization(self) -> dict:
+        return {
+            "cores": self.used_cores / max(1, self.total_cores),
+            "gpus": self.used_gpus / max(1, self.total_gpus),
+        }
+
+    # -- mapping ------------------------------------------------------------
+    def try_map(self, ranks: int, cores_per_rank: int,
+                gpus_per_rank: int) -> Optional[Placement]:
+        """First-fit rank placement; each rank's cores/gpus are node-local."""
+        with self._lock:
+            bound = []
+            touched = []
+            for _ in range(ranks):
+                placed = False
+                for node in self.nodes.values():
+                    if (len(node.free_cores) >= cores_per_rank
+                            and len(node.free_gpus) >= gpus_per_rank):
+                        cores = tuple(node.free_cores[-cores_per_rank:])
+                        del node.free_cores[-cores_per_rank:]
+                        gpus = tuple(node.free_gpus[-gpus_per_rank:]) \
+                            if gpus_per_rank else ()
+                        if gpus_per_rank:
+                            del node.free_gpus[-gpus_per_rank:]
+                        bound.append((node.node_id, cores, gpus))
+                        touched.append(node)
+                        placed = True
+                        break
+                if not placed:
+                    # roll back partial binding
+                    for (nid, cores, gpus) in bound:
+                        n = self.nodes[nid]
+                        n.free_cores.extend(cores)
+                        n.free_gpus.extend(gpus)
+                    return None
+            self.used_cores += ranks * cores_per_rank
+            self.used_gpus += ranks * gpus_per_rank
+            return Placement(bound)
+
+    def release(self, placement: Placement):
+        with self._lock:
+            for (nid, cores, gpus) in placement.ranks:
+                node = self.nodes[nid]
+                node.free_cores.extend(cores)
+                node.free_gpus.extend(gpus)
+                self.used_cores -= len(cores)
+                self.used_gpus -= len(gpus)
+
+    # -- elasticity -----------------------------------------------------------
+    def add_nodes(self, n: int):
+        """Grow the allocation (elastic scale-up)."""
+        start = max(self.nodes) + 1 if self.nodes else 0
+        for i in range(start, start + n):
+            self.nodes[i] = NodeState(i, self.desc.cores_per_node,
+                                      self.desc.gpus_per_node)
+
+    def drain_node(self, node_id: int) -> bool:
+        """Remove a node if idle (elastic scale-down / failure simulation)."""
+        node = self.nodes.get(node_id)
+        if node is None:
+            return False
+        if (len(node.free_cores) < self.desc.cores_per_node
+                or len(node.free_gpus) < self.desc.gpus_per_node):
+            return False
+        del self.nodes[node_id]
+        return True
+
+
+def partition(desc: ResourceDescription, sizes: dict) -> dict:
+    """Split a resource description into named disjoint node partitions.
+
+    sizes: {"mpi": 12, "functions": 4} (node counts; must sum <= desc.nodes).
+    """
+    total = sum(sizes.values())
+    if total > desc.nodes:
+        raise ValueError(f"partitions need {total} nodes > {desc.nodes}")
+    out = {}
+    cursor = 0
+    for name, n in sizes.items():
+        out[name] = Allocation(desc, range(cursor, cursor + n), name=name)
+        cursor += n
+    return out

@@ -1,0 +1,68 @@
+"""Inference request routing across service instances (Exp 4, Fig 5d).
+
+``RandomRouter`` assigns requests uniformly at random; the paper's
+``TokenAwareBalancedRouter`` greedily equalizes BOTH request count and
+estimated input-token volume per instance (longest-processing-time-first
+bin packing), which suppresses stragglers under heterogeneous prompt costs.
+"""
+from __future__ import annotations
+
+import random
+from typing import Any, Callable, Optional, Sequence
+
+
+class Router:
+    def assign(self, requests: Sequence, n_instances: int,
+               cost: Optional[Callable] = None) -> list:
+        """Return per-instance request index lists."""
+        raise NotImplementedError
+
+
+class RandomRouter(Router):
+    def __init__(self, seed: int = 0):
+        self.rng = random.Random(seed)
+
+    def assign(self, requests, n_instances, cost=None):
+        out = [[] for _ in range(n_instances)]
+        for i in range(len(requests)):
+            out[self.rng.randrange(n_instances)].append(i)
+        return out
+
+
+class RoundRobinRouter(Router):
+    def assign(self, requests, n_instances, cost=None):
+        out = [[] for _ in range(n_instances)]
+        for i in range(len(requests)):
+            out[i % n_instances].append(i)
+        return out
+
+
+class TokenAwareBalancedRouter(Router):
+    """Greedy LPT: sort by estimated token cost desc, place each request on
+    the instance with minimum (load, count) so both token volume and request
+    count stay balanced."""
+
+    def assign(self, requests, n_instances, cost=None):
+        cost = cost or (lambda r: len(r) if hasattr(r, "__len__") else 1)
+        order = sorted(range(len(requests)),
+                       key=lambda i: -cost(requests[i]))
+        loads = [0.0] * n_instances
+        counts = [0] * n_instances
+        out = [[] for _ in range(n_instances)]
+        for i in order:
+            j = min(range(n_instances), key=lambda k: (loads[k], counts[k]))
+            out[j].append(i)
+            loads[j] += cost(requests[i])
+            counts[j] += 1
+        return out
+
+
+ROUTERS = {
+    "random": RandomRouter,
+    "round_robin": RoundRobinRouter,
+    "balanced": TokenAwareBalancedRouter,
+}
+
+
+def make_router(kind: str, **kw) -> Router:
+    return ROUTERS[kind](**kw)

@@ -1,0 +1,234 @@
+"""Services as first-class workflow entities (§III-B).
+
+A ``ServiceDescription`` declares a factory for a *servicer* — anything with
+``submit(payload) -> uid`` / ``step() -> [(uid, result)]`` (pumped, e.g. a
+continuous-batching engine) or just ``handle(payload) -> result`` (sync RPC).
+The ``ServiceManager`` owns the lifecycle: launch, readiness, endpoint
+registration/discovery, heartbeat, and restart-on-failure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import queue
+import threading
+import time
+from typing import Any, Callable, Optional
+
+from .task import ResourceRequirements
+
+
+@dataclasses.dataclass
+class ServiceDescription:
+    name: str
+    factory: Callable[[], Any]  # builds the servicer
+    requirements: ResourceRequirements = dataclasses.field(
+        default_factory=ResourceRequirements)
+    ready_timeout: float = 30.0
+    partition: Optional[str] = None
+
+
+class _Future:
+    __slots__ = ("_event", "_result", "_error")
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._result = None
+        self._error = None
+
+    def set_result(self, r):
+        self._result = r
+        self._event.set()
+
+    def set_error(self, e):
+        self._error = e
+        self._event.set()
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError("service request timed out")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+
+class ServiceEndpoint:
+    """Client-visible handle; requests are async futures."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.requests: "queue.Queue" = queue.Queue()
+        self.ready = threading.Event()
+        self.stats = {"requests": 0, "completed": 0, "errors": 0}
+
+    def request(self, payload, **meta) -> _Future:
+        fut = _Future()
+        self.stats["requests"] += 1
+        self.requests.put((payload, meta, fut))
+        return fut
+
+
+class ServiceInstance(threading.Thread):
+    """Drives one servicer: admits endpoint requests, pumps, resolves."""
+
+    def __init__(self, desc: ServiceDescription, endpoint: ServiceEndpoint,
+                 on_exit: Optional[Callable] = None):
+        super().__init__(name=f"service-{desc.name}", daemon=True)
+        self.desc = desc
+        self.endpoint = endpoint
+        self.alive = True
+        self.last_beat = time.perf_counter()
+        self.servicer = None
+        self._pending: dict = {}
+        self._on_exit = on_exit
+        self.error: Optional[BaseException] = None
+
+    def run(self):
+        try:
+            self.servicer = self.desc.factory()
+            if hasattr(self.servicer, "setup"):
+                self.servicer.setup()
+            self.endpoint.ready.set()
+            pumped = hasattr(self.servicer, "step")
+            while self.alive:
+                self.last_beat = time.perf_counter()
+                moved = self._admit()
+                if pumped:
+                    if self._pending:
+                        for uid, result in self.servicer.step() or []:
+                            self._resolve(uid, result)
+                        self._drain_finished()
+                    elif not moved:
+                        time.sleep(1e-4)
+                elif not moved:
+                    time.sleep(1e-4)
+        except BaseException as e:  # noqa: BLE001
+            self.error = e
+            self.endpoint.ready.clear()
+            # preemption-safe: replay in-flight requests on the relaunched
+            # instance (bounded by _replays), else fail their futures
+            for uid, (fut, payload, meta) in self._pending.items():
+                replays = meta.get("_replays", 0)
+                if replays < 2:
+                    meta = dict(meta, _replays=replays + 1)
+                    self.endpoint.requests.put((payload, meta, fut))
+                else:
+                    fut.set_error(e)
+        finally:
+            if hasattr(self.servicer, "teardown") and self.servicer is not None:
+                try:
+                    self.servicer.teardown()
+                except Exception:
+                    pass
+            if self._on_exit:
+                self._on_exit(self)
+
+    # -- internals ----------------------------------------------------------
+    def _admit(self) -> bool:
+        moved = False
+        for _ in range(64):
+            try:
+                payload, meta, fut = self.endpoint.requests.get_nowait()
+            except queue.Empty:
+                break
+            moved = True
+            if hasattr(self.servicer, "submit"):
+                kw = {k: v for k, v in meta.items()
+                      if not k.startswith("_")}
+                try:
+                    uid = self.servicer.submit(payload, **kw)
+                except BaseException as e:  # noqa: BLE001
+                    # crash mid-submit: requeue THIS request for replay on
+                    # the relaunched instance before propagating
+                    replays = meta.get("_replays", 0)
+                    if replays < 2:
+                        self.endpoint.requests.put(
+                            (payload, dict(meta, _replays=replays + 1), fut))
+                    else:
+                        fut.set_error(e)
+                    raise
+                self._pending[uid] = (fut, payload, meta)
+            else:  # sync RPC servicer
+                try:
+                    fut.set_result(self.servicer.handle(payload, **meta))
+                    self.endpoint.stats["completed"] += 1
+                except BaseException as e:  # noqa: BLE001
+                    fut.set_error(e)
+                    self.endpoint.stats["errors"] += 1
+        return moved
+
+    def _resolve(self, uid, result):
+        entry = self._pending.pop(uid, None)
+        if entry is not None:
+            entry[0].set_result(result)
+            self.endpoint.stats["completed"] += 1
+
+    def _drain_finished(self):
+        if hasattr(self.servicer, "drain"):
+            for uid, result in self.servicer.drain() or []:
+                self._resolve(uid, result)
+
+    def stop(self):
+        self.alive = False
+
+
+class ServiceManager:
+    """Launch / discover / monitor / restart services."""
+
+    def __init__(self, policy=None, event_log=None):
+        self.policy = policy
+        self.events = event_log
+        self.instances: dict[str, ServiceInstance] = {}
+        self.endpoints: dict[str, ServiceEndpoint] = {}
+        self._lock = threading.Lock()
+
+    def launch(self, desc: ServiceDescription) -> ServiceEndpoint:
+        with self._lock:
+            ep = self.endpoints.get(desc.name) or ServiceEndpoint(desc.name)
+            self.endpoints[desc.name] = ep
+            inst = ServiceInstance(desc, ep, on_exit=self._handle_exit)
+            self.instances[desc.name] = inst
+            inst.start()
+        if not ep.ready.wait(desc.ready_timeout):
+            raise TimeoutError(f"service {desc.name} not ready")
+        if self.events:
+            self.events.emit(desc.name, "RUNNING", "service", "service_up")
+        return ep
+
+    def get(self, name: str) -> ServiceEndpoint:
+        ep = self.endpoints.get(name)
+        if ep is None:
+            raise KeyError(f"unknown service {name}")
+        return ep
+
+    def list(self):
+        return {n: ("ready" if ep.ready.is_set() else "down")
+                for n, ep in self.endpoints.items()}
+
+    def stop(self, name: str):
+        inst = self.instances.pop(name, None)
+        if inst:
+            inst.stop()
+            inst.join(timeout=2.0)
+        if self.events:
+            self.events.emit(name, "DONE", "service", "service_down")
+
+    def stop_all(self):
+        for name in list(self.instances):
+            self.stop(name)
+
+    def _handle_exit(self, inst: ServiceInstance):
+        if inst.error is None or not inst.alive:
+            return  # clean shutdown
+        if self.events:
+            self.events.emit(inst.desc.name, "FAILED", "service",
+                             "service_crash")
+        if self.policy is not None and getattr(
+                self.policy, "restart_failed_services", False):
+            try:
+                self.launch(inst.desc)
+            except Exception:
+                pass

@@ -1,0 +1,92 @@
+"""Flash-decode — single-token GQA attention over a long KV cache.
+
+Grid ``(B, Hkv, n_k_blocks)``: each program streams one KV block of one kv
+head for one sequence, updating the online-softmax state for that head's
+``G = Hq/Hkv`` query group in VMEM scratch.  KV-length masking handles the
+ragged valid region of the cache; out-of-range blocks are predicated off.
+
+This is the memory-roofline kernel: per block it moves ``2 * bk * D`` cache
+bytes and does ``O(G * bk * D)`` MACs — arithmetic intensity ~G.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                   l_ref, *, block_k: int, n_k_blocks: int, sm_scale: float):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kv_len = len_ref[0]
+    needed = ki * block_k < kv_len
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [G, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # [bk, D]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * sm_scale
+        pos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(pos < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_grouped(q, k_cache, v_cache, kv_length, *,
+                             block_k: int = 256, interpret: bool = False):
+    """q: [B, Hkv, G, D]; caches: [B, S, Hkv, D]; kv_length: [B] int32.
+
+    Returns [B, Hkv, G, D].
+    """
+    B, Hkv, G, D = q.shape
+    S = k_cache.shape[1]
+    block_k = min(block_k, S)
+    if S % block_k:
+        raise ValueError(f"cache len {S} % block_k {block_k} != 0")
+    n_k = S // block_k
+    kernel = functools.partial(_decode_kernel, block_k=block_k,
+                               n_k_blocks=n_k, sm_scale=1.0 / math.sqrt(D))
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, n_k),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ki: (b,)),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, ki: (b, ki, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, ki: (b, ki, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_length, q, k_cache, v_cache)

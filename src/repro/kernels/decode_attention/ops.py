@@ -1,0 +1,22 @@
+"""jit'd wrapper for flash-decode on model-layout tensors."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention_grouped
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, kv_length, *, block_k: int = 256,
+                     interpret: bool = False):
+    """q [B,1,Hq,D]; caches [B,S,Hkv,D]; kv_length [B] -> [B,1,Hq,D]."""
+    B, _, Hq, D = q.shape
+    Hkv = k_cache.shape[2]
+    qg = q[:, 0].reshape(B, Hkv, Hq // Hkv, D)
+    out = decode_attention_grouped(qg, k_cache, v_cache,
+                                   kv_length.astype(jnp.int32),
+                                   block_k=block_k, interpret=interpret)
+    return out.reshape(B, 1, Hq, D)

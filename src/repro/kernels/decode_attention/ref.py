@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for flash-decode."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_ref(q, k_cache, v_cache, kv_length):
+    """q [B,Hkv,G,D]; caches [B,S,Hkv,D]; kv_length [B] -> [B,Hkv,G,D]."""
+    B, Hkv, G, D = q.shape
+    S = k_cache.shape[1]
+    s = jnp.einsum("bhgd,bkhd->bhgk", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / math.sqrt(D)
+    valid = jnp.arange(S)[None, :] < kv_length[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,28 @@
+"""jit'd public wrapper: GQA-aware flash attention on [B,S,H,D] layouts."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: [B,S,Hq,D]; k/v: [B,S,Hkv,D] (Hq % Hkv == 0). Returns [B,S,Hq,D]."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    if Hq != Hkv:
+        rep = Hq // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = jnp.transpose(q, (0, 2, 1, 3)).reshape(B * Hq, S, D)
+    kf = jnp.transpose(k, (0, 2, 1, 3)).reshape(B * Hq, S, D)
+    vf = jnp.transpose(v, (0, 2, 1, 3)).reshape(B * Hq, S, D)
+    of = flash_attention_bhsd(qf, kf, vf, causal=causal, block_q=block_q,
+                              block_k=block_k, interpret=interpret)
+    return jnp.transpose(of.reshape(B, Hq, S, D), (0, 2, 1, 3))

@@ -1,0 +1,13 @@
+"""jit'd wrapper for the SSD kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import ssd_bthp
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, Bm, Cm, *, chunk: int = 64, interpret: bool = False):
+    return ssd_bthp(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)

@@ -1,0 +1,7 @@
+"""Oracle: the recurrent SSD from the model library."""
+from repro.models.mamba2 import ssd_recurrent
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    y, _ = ssd_recurrent(x, dt, A, Bm, Cm)
+    return y

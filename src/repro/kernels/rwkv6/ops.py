@@ -1,0 +1,13 @@
+"""jit'd wrapper for the WKV6 kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import wkv_bhtc
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv(r, k, v, lw, u, *, chunk: int = 32, interpret: bool = False):
+    return wkv_bhtc(r, k, v, lw, u, chunk=chunk, interpret=interpret)

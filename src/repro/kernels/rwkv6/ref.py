@@ -1,0 +1,7 @@
+"""Oracle: the recurrent WKV from the model library."""
+from repro.models.rwkv6 import wkv_recurrent
+
+
+def wkv_ref(r, k, v, lw, u):
+    y, _ = wkv_recurrent(r, k, v, lw, u)
+    return y

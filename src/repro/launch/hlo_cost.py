@@ -1,0 +1,499 @@
+"""Post-fusion HLO cost model with while-loop trip-count multiplication.
+
+XLA-CPU's ``compiled.cost_analysis()`` counts loop bodies ONCE, so any cost
+inside a ``lax.scan`` (layers, microbatches, chunked recurrences) is lost.
+This module re-derives the three roofline quantities directly from
+``compiled.as_text()``:
+
+  * flops            — 2*M*N*K for every ``dot`` (batch dims included),
+                       multiplied through ``while`` trip counts
+                       (``backend_config known_trip_count``).
+  * bytes            — per-op surface traffic (operand + output bytes) of
+                       compute ops on the post-fusion HLO; fusions count
+                       their boundary traffic only (that IS the HBM traffic).
+  * collective bytes — output-shape bytes of all-gather / reduce-scatter /
+                       all-to-all / collective-permute (x1) and all-reduce
+                       (x2, ring), trip-multiplied.
+
+All quantities are per-device (the partitioned SPMD module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+SHAPE_RE = re.compile(
+    r"(f64|f32|bf16|f16|f8e4m3|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|s4|u4|"
+    r"pred|c64|c128)\[([0-9,]*)\]")
+
+OPCODE_RE = re.compile(r" ([a-z][a-z0-9\-]*)\(")
+HEADER_RE = re.compile(r"^(ENTRY )?%?([\w.\-]+) \((.*)\) -> (.+) \{\s*$")
+DEF_RE = re.compile(r"^\s*(?:ROOT )?%([\w.\-]+) = (.+)$")
+TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVE_WEIGHTS = {
+    "all-gather": 1.0, "all-gather-start": 1.0,
+    "all-reduce": 2.0, "all-reduce-start": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0, "collective-permute-start": 1.0,
+}
+
+# ops with no real memory traffic of their own
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "all-gather-done", "all-reduce-done",
+    "collective-permute-done", "partition-id", "replica-id", "domain",
+    "opt-barrier",
+}
+# control ops: traffic accounted inside their called computations
+_CONTROL_OPS = {"while", "fusion", "call", "conditional", "custom-call",
+                "async-start", "async-done"}
+
+
+def _shapes_in(text: str):
+    return [(dt, tuple(int(d) for d in dims.split(",") if d))
+            for dt, dims in SHAPE_RE.findall(text)]
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _shapes_in(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    out_text: str  # output shape text (before opcode)
+    operands: list
+    attrs: str  # everything after operand list
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: dict  # name -> shape text
+    ops: dict  # name -> Op
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_detail: Optional[dict] = None
+
+    def scaled(self, k: float) -> "Cost":
+        det = None
+        if self.collective_detail:
+            det = {op: v * k for op, v in self.collective_detail.items()}
+        return Cost(self.flops * k, self.bytes * k,
+                    self.collective_bytes * k, det)
+
+    def add(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.collective_bytes += other.collective_bytes
+        if other.collective_detail:
+            self.collective_detail = self.collective_detail or {}
+            for op, v in other.collective_detail.items():
+                self.collective_detail[op] = self.collective_detail.get(op, 0.0) + v
+
+
+def _split_top_level(s: str) -> list:
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+def parse_module(hlo: str) -> dict:
+    """Parse an HLO module dump into {computation_name: Computation}."""
+    comps = {}
+    cur = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = HEADER_RE.match(line)
+            if m:
+                params = {}
+                for part in _split_top_level(m.group(3)):
+                    part = part.strip()
+                    if not part or ":" not in part:
+                        continue
+                    pname, ptype = part.split(":", 1)
+                    params[pname.strip().lstrip("%")] = ptype.strip()
+                cur = Computation(m.group(2), params, {})
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        om = OPCODE_RE.search(rhs)
+        if not om:
+            continue
+        opcode = om.group(1)
+        out_text = rhs[:om.start()]
+        # operand list: balanced parens from om.end()-1
+        i = om.end() - 1
+        depth = 0
+        j = i
+        for j in range(i, len(rhs)):
+            if rhs[j] == "(":
+                depth += 1
+            elif rhs[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        operand_text = rhs[i + 1:j]
+        attrs = rhs[j + 1:]
+        operands = OPERAND_RE.findall(operand_text)
+        cur.ops[name] = Op(name, opcode, out_text, operands, attrs)
+    return comps
+
+
+def _operand_shape_text(comp: Computation, name: str) -> str:
+    if name in comp.ops:
+        return comp.ops[name].out_text
+    if name in comp.params:
+        return comp.params[name]
+    return ""
+
+
+def _dot_flops(comp: Computation, op: Op) -> float:
+    out_shapes = _shapes_in(op.out_text)
+    if not out_shapes:
+        return 0.0
+    _, out_dims = out_shapes[0]
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    # contraction size from lhs operand shape + lhs_contracting_dims
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    if not m or not op.operands:
+        return 2.0 * out_elems  # degenerate
+    cdims = [int(x) for x in m.group(1).split(",") if x]
+    lhs_text = _operand_shape_text(comp, op.operands[0])
+    lhs_shapes = _shapes_in(lhs_text)
+    if not lhs_shapes:
+        return 2.0 * out_elems
+    _, lhs_dims = lhs_shapes[0]
+    k = 1
+    for c in cdims:
+        if c < len(lhs_dims):
+            k *= lhs_dims[c]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(comp: Computation, op: Op) -> float:
+    out_shapes = _shapes_in(op.out_text)
+    if not out_shapes or len(op.operands) < 2:
+        return 0.0
+    _, out_dims = out_shapes[0]
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    rhs_shapes = _shapes_in(_operand_shape_text(comp, op.operands[1]))
+    if not rhs_shapes:
+        return 0.0
+    _, ker = rhs_shapes[0]
+    ker_elems = 1
+    for d in ker:
+        ker_elems *= d
+    out_feat = out_dims[-1] if out_dims else 1
+    return 2.0 * out_elems * (ker_elems / max(1, out_feat))
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str, bf16_dims=None):
+        self.comps = parse_module(hlo_text)
+        self._memo: dict[str, Cost] = {}
+        self._consumers = None  # lazy (comp_name, op_name) -> [consumer ops]
+        # TPU-projection hint: activation tensors with these dims are bf16
+        # in the model's compute dtype (XLA-CPU shows them as f32 around
+        # collectives because CPU legalizes bf16 dots via f32 converts)
+        self.bf16_dims = set(bf16_dims or ())
+        entry = [c for c in self.comps if "main" in c]
+        self.entry = entry[0] if entry else next(iter(self.comps))
+
+    def cost(self, comp_name: Optional[str] = None) -> Cost:
+        comp_name = comp_name or self.entry
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps.get(comp_name)
+        total = Cost(collective_detail={})
+        if comp is None:
+            return total
+        self._memo[comp_name] = total  # guards cycles
+        for op in comp.ops.values():
+            total.add(self._op_cost(comp, op))
+        return total
+
+    def _op_cost(self, comp: Computation, op: Op) -> Cost:
+        c = Cost(collective_detail={})
+        oc = op.opcode
+        if oc in COLLECTIVE_WEIGHTS:
+            scale = self._collective_dtype_projection(comp, op)
+            b = _shape_bytes(op.out_text) * COLLECTIVE_WEIGHTS[oc] * scale
+            key = oc.replace("-start", "")
+            c.collective_bytes += b
+            c.collective_detail[key] = c.collective_detail.get(key, 0) + b
+            c.bytes += _shape_bytes(op.out_text) * scale
+            return c
+        if oc == "while":
+            trips = 1
+            m = TRIP_RE.search(op.attrs)
+            if m:
+                trips = int(m.group(1))
+            bm = BODY_RE.search(op.attrs)
+            if bm:
+                c.add(self.cost(bm.group(1)).scaled(trips))
+            cm = COND_RE.search(op.attrs)
+            if cm:
+                c.add(self.cost(cm.group(1)).scaled(trips))
+            return c
+        if oc in ("fusion",):
+            m = CALLS_RE.search(op.attrs)
+            if m:
+                inner = self.cost(m.group(1))
+                c.flops += inner.flops
+                c.collective_bytes += inner.collective_bytes
+                if inner.collective_detail:
+                    for k, v in inner.collective_detail.items():
+                        c.collective_detail[k] = c.collective_detail.get(k, 0) + v
+            # fusion boundary traffic
+            c.bytes += self._surface_bytes(comp, op)
+            return c
+        if oc in ("call", "conditional", "async-start"):
+            for pat in (CALLS_RE, TO_APPLY_RE, BODY_RE):
+                m = pat.search(op.attrs)
+                if m:
+                    c.add(self.cost(m.group(1)))
+            return c
+        if oc == "dot":
+            c.flops += _dot_flops(comp, op)
+            c.bytes += self._surface_bytes(comp, op)
+            return c
+        if oc == "convolution":
+            c.flops += _conv_flops(comp, op)
+            c.bytes += self._surface_bytes(comp, op)
+            return c
+        if oc in _FREE_OPS:
+            return c
+        if oc == "reduce" or oc == "reduce-window":
+            c.bytes += self._surface_bytes(comp, op)
+            return c
+        # generic compute op: surface traffic only
+        c.bytes += self._surface_bytes(comp, op)
+        return c
+
+    def _collective_dtype_projection(self, comp: Computation, op: Op) -> float:
+        """TPU dtype projection for collectives.
+
+        XLA-CPU legalizes bf16 dots by inserting f32 converts and its
+        convert-mover hoists them across collectives, so bf16 model
+        collectives appear as f32 in the CPU-compiled HLO (2x bytes).  A TPU
+        compilation keeps them bf16.  Detect the sandwich — a collective
+        whose operand is a widening convert, or whose result feeds a
+        narrowing convert — and scale to the narrow width.  Genuinely-f32
+        collectives (grad reductions, loss psums) have no adjacent bf16
+        converts and are unaffected.
+        """
+        out_shapes = _shapes_in(op.out_text)
+        if not out_shapes:
+            return 1.0
+        out_dt = out_shapes[0][0]
+        if out_dt != "f32":
+            return 1.0
+        # activation-shaped f32 collectives in a bf16 model: project to bf16
+        if self.bf16_dims and any(
+                d in self.bf16_dims for d in out_shapes[0][1]):
+            return 0.5
+        # operand side: widening convert feeding the collective
+        for o in op.operands:
+            src = comp.ops.get(o)
+            if src is not None and src.opcode == "convert" and src.operands:
+                in_shapes = _shapes_in(
+                    _operand_shape_text(comp, src.operands[0]))
+                if in_shapes and _DTYPE_BYTES[in_shapes[0][0]] < 4:
+                    return _DTYPE_BYTES[in_shapes[0][0]] / 4.0
+        # consumer side: narrowing convert of the collective result
+        if self._consumers is None:
+            self._consumers = {}
+            for cname, cc in self.comps.items():
+                for o2 in cc.ops.values():
+                    for operand in o2.operands:
+                        self._consumers.setdefault((cname, operand),
+                                                   []).append(o2)
+        for cons in self._consumers.get((comp.name, op.name), []):
+            if cons.opcode == "convert":
+                cshapes = _shapes_in(cons.out_text)
+                if cshapes and _DTYPE_BYTES[cshapes[0][0]] < 4:
+                    return _DTYPE_BYTES[cshapes[0][0]] / 4.0
+            # common pattern: fusion that immediately converts to bf16
+            if cons.opcode == "fusion" and "convert" in cons.name:
+                cshapes = _shapes_in(cons.out_text)
+                if cshapes and _DTYPE_BYTES[cshapes[0][0]] < 4 and \
+                        cshapes[0][1] == out_shapes[0][1]:
+                    return _DTYPE_BYTES[cshapes[0][0]] / 4.0
+        return 1.0
+
+    def _bf16_scale(self, text: str) -> float:
+        """bf16 projection for surface traffic (same rationale as the
+        collective projection): XLA-CPU legalizes bf16 dots via f32 converts,
+        materializing f32 copies of large bf16 model tensors (weights, KV
+        cache, activations) that a TPU compilation never creates."""
+        if not self.bf16_dims:
+            return 1.0
+        shapes = _shapes_in(text)
+        scaled = 0.0
+        plain = 0.0
+        for dt, dims in shapes:
+            n = 1
+            for d in dims:
+                n *= d
+            b = n * _DTYPE_BYTES[dt]
+            if (dt == "f32" and n >= (1 << 20)
+                    and any(d in self.bf16_dims for d in dims)):
+                scaled += b * 0.5
+            else:
+                plain += b
+        tot = scaled + plain
+        ref = sum(
+            (1 if not d else 1) for d in ())  # keep simple: ratio below
+        base = _shape_bytes(text)
+        return (tot / base) if base else 1.0
+
+    def _surface_bytes(self, comp: Computation, op: Op) -> float:
+        """TPU-realistic surface traffic for one op.
+
+        Slicing/in-place patterns are counted at slice granularity: XLA-CPU
+        materializes whole-buffer round-trips (e.g. converting an entire
+        remat stack inside a DUS fusion each loop iteration) that a TPU
+        compilation performs in place.
+        """
+        out_b = float(_shape_bytes(op.out_text)) * self._bf16_scale(op.out_text)
+        operand_bytes = [
+            float(_shape_bytes(_operand_shape_text(comp, o)))
+            * self._bf16_scale(_operand_shape_text(comp, o))
+            for o in op.operands
+        ]
+        if op.opcode == "dynamic-update-slice":
+            # in-place: read+write the update slice only
+            upd = operand_bytes[1] if len(operand_bytes) > 1 else out_b
+            return 2.0 * upd
+        if op.opcode in ("dynamic-slice", "gather"):
+            # reads the slice, not the whole operand
+            small = sum(b for b in operand_bytes if b <= out_b)
+            return out_b + small
+        if op.opcode == "scatter":
+            # in-place under buffer donation: traffic = updates r+w (+indices)
+            rest = sum(operand_bytes[1:]) if operand_bytes else 0.0
+            return 2.0 * rest
+        if op.opcode == "fusion":
+            # in-place accumulate pattern: an operand aliasing the output
+            # (same byte count, >1MB) means the big buffer is updated in
+            # place — traffic is the remaining (slice-sized) operands r+w
+            # loop fusions read each operand at most pointwise per output
+            # element; larger operands are sliced inside (remat-stack reads)
+            capped = [min(b, out_b) for b in operand_bytes]
+            # big in-place stack updates (remat-stack DUS): an operand
+            # aliasing a >128MB output is updated in place — only the
+            # slice-sized remainder is real traffic
+            if out_b > (1 << 27):
+                for i, b in enumerate(operand_bytes):
+                    if b == out_b:
+                        rest = sum(capped) - capped[i]
+                        return 2.0 * rest
+            return out_b + sum(capped)
+        return out_b + sum(operand_bytes)
+
+
+def top_bytes(hlo_text: str, n: int = 30):
+    """Debug: top ops by trip-multiplied bytes, using the real traversal."""
+    model = HloCostModel(hlo_text)
+    mult: dict[str, float] = {model.entry: 1.0}
+    order = [model.entry]
+    seen = {model.entry}
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = model.comps.get(cname)
+        if comp is None:
+            continue
+        k = mult[cname]
+        for op in comp.ops.values():
+            if op.opcode not in ("while", "call", "conditional"):
+                continue  # fusion/reduce inner comps: bytes counted at surface
+            trips = 1
+            if op.opcode == "while":
+                m = TRIP_RE.search(op.attrs)
+                trips = int(m.group(1)) if m else 1
+            for pat in (BODY_RE, COND_RE, CALLS_RE, TO_APPLY_RE):
+                m = pat.search(op.attrs)
+                if m:
+                    sub = m.group(1)
+                    mult[sub] = mult.get(sub, 0.0) + k * trips
+                    if sub not in seen:
+                        seen.add(sub)
+                        order.append(sub)
+    rows = []
+    for cname, comp in model.comps.items():
+        k = mult.get(cname, 0.0)
+        if k <= 0:
+            continue
+        for op in comp.ops.values():
+            if op.opcode in _FREE_OPS or op.opcode in (
+                    "while", "call", "conditional"):
+                continue
+            c = model._op_cost(comp, op)
+            # fusions: count only surface here (inner flops not bytes)
+            b = c.bytes * k
+            if b > 0:
+                rows.append((b, k, op.opcode, op.out_text.strip()[:48],
+                             cname[:40], op.name[:30]))
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+def analyze(hlo_text: str, bf16_dims=None) -> dict:
+    model = HloCostModel(hlo_text, bf16_dims=bf16_dims)
+    c = model.cost()
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "collective_bytes": c.collective_bytes,
+        "collective_detail": c.collective_detail or {},
+    }

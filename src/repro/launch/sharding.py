@@ -1,0 +1,123 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Param trees carry logical axis names per dim (see ``repro.models.nn.Px``);
+these rules map them to mesh axes.  ``make_shardings`` produces a
+NamedSharding tree mirroring any axes tree.
+
+Training default: tensor-parallel dims on "model", FSDP on "data" via the
+"embed" dim, batch on ("pod","data").  Serving/decode swaps KV-cache sequence
+onto "model" (kv heads are often < 16, so head-sharding is infeasible — the
+softmax over the sharded KV axis lowers to partial reduce + all-reduce, i.e.
+flash-decode).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# Rules shared by every regime; logical axes not listed are replicated.
+_COMMON = {
+    # tensor-parallel dims
+    "vocab": "model",
+    # input embedding tables: vocab must stay unsharded (token gather);
+    # shard the embed dim over "model" instead
+    "tokens_vocab": None,
+    "embed_g": "model",
+    "mlp": "model",
+    "q_proj": "model",
+    "kv_proj": None,  # kv heads < mesh "model" for GQA archs -> replicate
+    "wkv_proj": "model",
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "experts": "model",
+    "router_experts": None,
+    "expert_in": None,
+    "expert_ff": None,
+    # replicated small dims
+    "head_dim": None,
+    "pos": None,
+    "layers": None,
+    "group": None,
+    "conv_w": None,
+    "ssm_state": None,
+    "lora": None,
+    "mix5": None,
+}
+
+TRAIN_RULES = dict(
+    _COMMON,
+    embed="data",  # FSDP: gather per layer inside the scan (ZeRO-3)
+)
+
+SERVE_RULES = dict(
+    _COMMON,
+    embed=None,  # serving keeps params gathered along data; batch-parallel
+)
+
+
+def resolve_rule(axis_name: Optional[str], rules: dict):
+    if axis_name is None:
+        return None
+    return rules.get(axis_name)
+
+
+def spec_for_axes(axes: tuple, rules: dict, mesh) -> P:
+    names = set(mesh.axis_names)
+    entries = []
+    for a in axes:
+        r = resolve_rule(a, rules)
+        if isinstance(r, tuple):
+            r = tuple(x for x in r if x in names) or None
+        elif r is not None and r not in names:
+            r = None
+        entries.append(r)
+    return P(*entries)
+
+
+def make_specs(axes_tree, rules: dict, mesh):
+    """PartitionSpec tree mirroring an axes tree."""
+    return jax.tree.map(
+        lambda axes: spec_for_axes(axes, rules, mesh),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def make_shardings(axes_tree, rules: dict, mesh):
+    specs = make_specs(axes_tree, rules, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh, extra_dims: int = 1) -> P:
+    """[B, ...] inputs: batch over (pod, data)."""
+    b = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(b if b else None, *([None] * extra_dims))
+
+
+def batch_sharding(mesh, extra_dims: int = 1) -> NamedSharding:
+    return NamedSharding(mesh, batch_spec(mesh, extra_dims))
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state shardings mirror param shardings (moments share param axes;
+# blockwise-quantization scales share all but the last dim's partitioning).
+# ---------------------------------------------------------------------------
+
+
+def opt_axes_like(param_axes_tree, quantized: bool):
+    def mk(axes):
+        if quantized:
+            return {"mq": axes, "ms": axes, "vq": axes, "vs": axes}
+        return {"m": axes, "v": axes}
+
+    moments = jax.tree.map(mk, param_axes_tree,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return {"moments": moments, "step": ()}

@@ -1,0 +1,220 @@
+"""Fine-grained mixture-of-experts FFN (deepseek-moe / moonlight style).
+
+Routing: softmax over all experts -> top-k -> renormalize.  Dispatch is
+capacity-based (dropped-token MoE): tokens are scattered into a per-expert
+``[n_local_experts, capacity, d]`` buffer and the expert FFN runs as one
+batched matmul — MXU-shaped, no ragged ops on the hot path.
+
+Expert parallelism: under tensor parallelism the block input is *replicated*
+over the ``model`` mesh axis, so EP needs **no all_to_all** — each model-axis
+device runs the experts it owns over all locally-visible tokens and a single
+``psum`` over ``model`` combines expert outputs (same collective cost as a
+dense TP MLP).  Implemented with ``jax.shard_map``; gating/aux-loss run
+outside in plain GSPMD.
+
+Shared experts (deepseek: 2) are a dense TP MLP with ``ff = n_shared * d_ff``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import nn
+from .config import ModelConfig
+
+BATCH_AXES = ("pod", "data")
+
+
+def moe_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = cfg.pdtype
+    # expert-internal dims get their own (replicated) logical axes: the
+    # expert dim itself carries the "model" sharding (EP), so d/ff must not
+    # also map to "model"
+    p = {
+        "router": {
+            "w": nn.Px(nn.lecun_init(ks[0], (d, E), jnp.float32, d),
+                       ("embed", "router_experts")),
+        },
+        "up": nn.Px(nn.lecun_init(ks[1], (E, d, ff), dt, d),
+                    ("experts", "expert_in", "expert_ff")),
+        "down": nn.Px(nn.lecun_init(ks[2], (E, ff, d), dt, ff),
+                      ("experts", "expert_ff", "expert_in")),
+    }
+    if cfg.gated_mlp:
+        p["gate"] = nn.Px(nn.lecun_init(ks[3], (E, d, ff), dt, d),
+                          ("experts", "expert_in", "expert_ff"))
+    if cfg.n_shared_experts > 0:
+        p["shared"] = nn.mlp_init(ks[4], d, cfg.n_shared_experts * ff,
+                                  gated=cfg.gated_mlp, dtype=dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+
+
+def route(router_w, x_flat, cfg: ModelConfig):
+    """Returns (weights [T,k], idx [T,k], aux_loss scalar)."""
+    logits = x_flat.astype(jnp.float32) @ router_w.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # [T, E]
+    top_p, top_i = jax.lax.top_k(probs, cfg.top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    # load-balancing aux (Switch-style): E * sum_e f_e * p_e
+    E = cfg.n_experts
+    T = x_flat.shape[0]
+    f = jnp.zeros((E,), jnp.float32).at[top_i.reshape(-1)].add(1.0)
+    f = f / (T * cfg.top_k)
+    pbar = probs.mean(axis=0)
+    aux = E * jnp.sum(f * pbar)
+    return top_p, top_i, aux
+
+
+def _capacity(T: int, cfg: ModelConfig, decode: bool) -> int:
+    cf = max(cfg.decode_capacity_factor, cfg.capacity_factor) if decode \
+        else cfg.capacity_factor
+    c = math.ceil(T * cfg.top_k / cfg.n_experts * cf)
+    return max(1, c)
+
+
+# ---------------------------------------------------------------------------
+# Expert compute over a local expert range
+# ---------------------------------------------------------------------------
+
+
+def _expert_compute(x_flat, top_w, top_i, up, gate, down, *, expert_offset,
+                    n_local: int, capacity: int, cfg: ModelConfig):
+    """Dropped-token expert FFN over experts [offset, offset+n_local).
+
+    x_flat [T,d]; top_w/top_i [T,k]; up/gate [El,d,ff], down [El,ff,d].
+    Returns y_flat [T,d] (only local experts' contributions).
+    """
+    T, d = x_flat.shape
+    k = top_i.shape[1]
+    E = cfg.n_experts
+    C = capacity
+    cd = cfg.cdtype
+
+    flat_e = top_i.reshape(-1)  # [T*k] global expert ids
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    flat_w = top_w.reshape(-1)
+
+    # rank of each assignment within its (global) expert group
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    rank_sorted = jnp.arange(T * k) - starts[sorted_e]
+    rank = jnp.zeros((T * k,), jnp.int32).at[order].set(
+        rank_sorted.astype(jnp.int32))
+
+    local_e = flat_e - expert_offset
+    is_local = (local_e >= 0) & (local_e < n_local)
+    keep = is_local & (rank < C)
+    dest = jnp.where(keep, local_e * C + rank, n_local * C)  # drop row at end
+
+    buf = jnp.zeros((n_local * C + 1, d), cd)
+    buf = buf.at[dest].set(x_flat.astype(cd)[flat_t])
+    h_in = buf[: n_local * C].reshape(n_local, C, d)
+
+    up_h = jnp.einsum("ecd,edf->ecf", h_in, up.astype(cd))
+    if gate is not None:
+        act = nn.ACTIVATIONS[cfg.activation]
+        h = act(jnp.einsum("ecd,edf->ecf", h_in, gate.astype(cd))) * up_h
+    else:
+        h = nn.ACTIVATIONS[cfg.activation](up_h)
+    out = jnp.einsum("ecf,efd->ecd", h, down.astype(cd))  # [El,C,d]
+    out = out.reshape(n_local * C, d)
+    out = jnp.concatenate([out, jnp.zeros((1, d), cd)], axis=0)
+
+    contrib = out[dest] * flat_w.astype(cd)[:, None] * keep.astype(cd)[:, None]
+    y = jnp.zeros((T, d), cd).at[flat_t].add(contrib)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Public apply
+# ---------------------------------------------------------------------------
+
+
+def moe_apply(p, x, cfg: ModelConfig, *, mesh=None, decode: bool = False):
+    """x [B,S,d] -> (y [B,S,d], aux scalar)."""
+    B, S, d = x.shape
+    T = B * S
+    x_flat = x.reshape(T, d)
+    top_w, top_i, aux = route(p["router"]["w"], x_flat, cfg)
+    C = _capacity(T, cfg, decode)
+    gate = p.get("gate")
+
+    use_ep = (
+        mesh is not None
+        and "model" in mesh.axis_names
+        and cfg.moe_impl in ("auto", "ep")
+        and cfg.n_experts % mesh.shape["model"] == 0
+    )
+    if use_ep:
+        n_model = mesh.shape["model"]
+        n_local = cfg.n_experts // n_model
+        batch_axes = tuple(a for a in BATCH_AXES if a in mesh.axis_names)
+
+        def local_fn(xf, tw, ti, up, gt, dn):
+            j = jax.lax.axis_index("model")
+            c_loc = _capacity(xf.shape[0], cfg, decode)
+            y = _expert_compute(xf, tw, ti, up,
+                                gt if gate is not None else None, dn,
+                                expert_offset=j * n_local, n_local=n_local,
+                                capacity=c_loc, cfg=cfg)
+            return jax.lax.psum(y, "model")
+
+        tok = P(batch_axes if batch_axes else None, None)
+        espec = P("model", None, None)
+        gate_arg = gate if gate is not None else p["up"]  # placeholder, unused
+        y_flat = jax.shard_map(
+            local_fn, mesh=mesh,
+            in_specs=(tok, tok, tok, espec, espec, espec),
+            out_specs=tok,
+        )(x_flat, top_w, top_i, p["up"], gate_arg, p["down"])
+    else:
+        # local capacity should reflect the *local* token count
+        y_flat = _expert_compute(x_flat, top_w, top_i, p["up"], gate,
+                                 p["down"], expert_offset=0,
+                                 n_local=cfg.n_experts, capacity=C, cfg=cfg)
+
+    y = y_flat.reshape(B, S, d)
+    if "shared" in p:
+        y = y + nn.mlp_apply(p["shared"], x, activation=cfg.activation,
+                             compute_dtype=cfg.cdtype)
+    return y.astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# Dropless reference (tests only; loops over experts)
+# ---------------------------------------------------------------------------
+
+
+def moe_reference(p, x, cfg: ModelConfig):
+    B, S, d = x.shape
+    x_flat = x.reshape(-1, d)
+    top_w, top_i, aux = route(p["router"]["w"], x_flat, cfg)
+    act = nn.ACTIVATIONS[cfg.activation]
+    y = jnp.zeros_like(x_flat, jnp.float32)
+    for e in range(cfg.n_experts):
+        w_e = jnp.where(top_i == e, top_w, 0.0).sum(-1)  # [T]
+        up = x_flat @ p["up"][e]
+        if "gate" in p:
+            h = act(x_flat @ p["gate"][e]) * up
+        else:
+            h = act(up)
+        out = h @ p["down"][e]
+        y = y + out.astype(jnp.float32) * w_e[:, None]
+    y = y.reshape(B, S, d)
+    if "shared" in p:
+        y = y + nn.mlp_apply(p["shared"], x, activation=cfg.activation)
+    return y.astype(x.dtype), aux

@@ -1,0 +1,396 @@
+"""Functional neural-net layer library with logical-axis param metadata.
+
+Params are plain pytrees (nested dicts of jnp arrays).  During init each leaf
+is a :class:`Px` wrapper carrying the *logical axis names* of every dimension;
+``split(tree)`` separates the value tree (fed to ``apply`` functions) from the
+axes tree (mapped to a ``PartitionSpec`` tree by ``repro.launch.sharding``).
+
+All layers are pure functions: ``<layer>_init(key, ...) -> Px tree`` and
+``<layer>_apply(params, x, ...) -> y``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Annotated params
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Px:
+    """A param leaf annotated with logical axis names (one per dim)."""
+
+    value: jnp.ndarray
+    axes: tuple
+
+    def __post_init__(self):
+        if len(self.axes) != self.value.ndim:
+            raise ValueError(
+                f"axes {self.axes} rank != value rank {self.value.shape}"
+            )
+
+
+def _is_px(x: Any) -> bool:
+    return isinstance(x, Px)
+
+
+def split(tree):
+    """Split a Px tree into (values, axes) trees with identical structure."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=_is_px)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=_is_px)
+    return values, axes
+
+
+def stack_layers(trees):
+    """Stack a list of Px trees along a new leading 'layers' axis."""
+
+    def _stack(*leaves):
+        vals = jnp.stack([l.value for l in leaves])
+        return Px(vals, ("layers",) + leaves[0].axes)
+
+    return jax.tree.map(_stack, *trees, is_leaf=_is_px)
+
+
+def constrain(x, mesh, spec):
+    """with_sharding_constraint helper (no-op when mesh is None).
+
+    Activation shardings are constrained explicitly at layer boundaries: pure
+    GSPMD propagation may otherwise resolve the FSDP-weight(data) vs
+    batch(data) einsum conflict by UNsharding the batch — replicating
+    full-batch activations on every device.
+    """
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding
+
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_pspec(mesh, batch_size: int, extra_dims: int = 2):
+    """P(batch_axes, None, ...) if the batch divides the DP size, else P()."""
+    from jax.sharding import PartitionSpec as P
+
+    if mesh is None:
+        return P()
+    bt = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not bt:
+        return P(*([None] * (1 + extra_dims)))
+    import math
+
+    dp = math.prod(mesh.shape[a] for a in bt)
+    lead = bt if batch_size % dp == 0 else None
+    return P(lead, *([None] * extra_dims))
+
+
+def param_count(values_tree) -> int:
+    return int(
+        sum(np.prod(v.shape) for v in jax.tree.leaves(values_tree))
+    )
+
+
+def param_bytes(values_tree) -> int:
+    return int(
+        sum(np.prod(v.shape) * v.dtype.itemsize for v in jax.tree.leaves(values_tree))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def normal_init(key, shape, dtype, stddev):
+    return (jax.random.normal(key, shape) * stddev).astype(dtype)
+
+
+def lecun_init(key, shape, dtype, fan_in):
+    return normal_init(key, shape, dtype, 1.0 / math.sqrt(max(1, fan_in)))
+
+
+# ---------------------------------------------------------------------------
+# Core layers
+# ---------------------------------------------------------------------------
+
+
+def linear_init(key, d_in, d_out, *, axes, dtype=jnp.float32, bias=False,
+                bias_axis=None, stddev=None):
+    """Dense projection ``[d_in] -> [d_out]`` with logical axes for sharding."""
+    w = Px(
+        lecun_init(key, (d_in, d_out), dtype, d_in)
+        if stddev is None
+        else normal_init(key, (d_in, d_out), dtype, stddev),
+        axes,
+    )
+    p = {"w": w}
+    if bias:
+        p["b"] = Px(jnp.zeros((d_out,), dtype), (bias_axis if bias_axis is not None else axes[-1],))
+    return p
+
+
+def linear_apply(p, x, compute_dtype=None):
+    w = p["w"]
+    if compute_dtype is not None:
+        w = w.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    y = x @ w
+    if "b" in p:
+        b = p["b"].astype(y.dtype)
+        y = y + b
+    return y
+
+
+def linear_apply_tp(p, x, mode: str, mesh, compute_dtype, *,
+                    fsdp: bool = False, seq_shard: bool = False):
+    """Explicit Megatron-style tensor-parallel linear via shard_map.
+
+    GSPMD propagation places the TP partial-sum all-reduce on the f32 side of
+    the convert that feeds the next norm (2x collective bytes) — this makes
+    the collective explicit and bf16 in BOTH directions:
+
+      * mode="column": w [d_in, out(model)]; x replicated over model ->
+        y sharded on out.  Backward dx = psum(dy @ w^T) in compute dtype.
+      * mode="row":    w [in(model), d_out]; x sharded on in ->
+        y = psum(x @ w) in compute dtype.
+
+    ``fsdp=True`` adds an explicit all-gather of the weight over "data"
+    (ZeRO-3 gather, also in compute dtype).  Falls back to the plain matmul
+    when the mesh/divisibility prerequisites don't hold.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    w = p["w"]
+    if (mesh is None or "model" not in mesh.axis_names):
+        return linear_apply(p, x, compute_dtype)
+    msize = mesh.shape["model"]
+    dsize = mesh.shape.get("data", 1) if fsdp else 1
+    d_in, d_out = w.shape
+    if mode == "column":
+        if d_out % msize or (fsdp and d_in % dsize):
+            return linear_apply(p, x, compute_dtype)
+    else:
+        if d_in % msize or (fsdp and d_out % dsize):
+            return linear_apply(p, x, compute_dtype)
+    cd = compute_dtype or x.dtype
+    x = x.astype(cd)
+    w = w.astype(cd)
+    bias = p.get("b")
+    bspec = batch_pspec(mesh, x.shape[0], extra_dims=x.ndim - 2)
+    fs = "data" if fsdp else None
+
+    if mode == "column":
+        w_spec = P(fs, "model")
+        in_specs = [P(*bspec, None), w_spec]
+        out_spec = P(*bspec, "model")
+
+        def local(xl, wl, *b):
+            if fsdp:
+                # barrier pins the gather to the bf16 value: XLA-CPU upcasts
+                # bf16 dots to f32 and would otherwise hoist the convert
+                # before the gather, doubling the measured collective bytes
+                wl = jax.lax.optimization_barrier(
+                    jax.lax.all_gather(wl, "data", axis=0, tiled=True))
+            y = xl @ wl
+            if b:
+                y = y + b[0]
+            return y
+
+        args = [x, w]
+        if bias is not None:
+            in_specs.append(P("model"))
+            args.append(bias.astype(cd))
+    else:  # row
+        w_spec = P("model", fs)
+        in_specs = [P(*bspec, "model"), w_spec]
+        # Megatron-SP: reduce-scatter the output over the sequence dim
+        # (half the bytes of an all-reduce; the residual stays seq-sharded)
+        use_sp = seq_shard and x.ndim == 3 and x.shape[1] % msize == 0
+        out_spec = (P(bspec[0], "model", None) if use_sp
+                    else P(*bspec, None))
+
+        def local(xl, wl, *b):
+            if fsdp:
+                wl = jax.lax.optimization_barrier(
+                    jax.lax.all_gather(wl, "data", axis=1, tiled=True))
+            y = jax.lax.optimization_barrier((xl @ wl).astype(cd))
+            if use_sp:
+                y = jax.lax.psum_scatter(y, "model", scatter_dimension=1,
+                                         tiled=True)
+            else:
+                y = jax.lax.psum(y, "model")
+            if b:
+                y = y + b[0]
+            return y
+
+        args = [x, w]
+        if bias is not None:
+            in_specs.append(P(None))
+            args.append(bias.astype(cd))
+
+    return jax.shard_map(local, mesh=mesh, in_specs=tuple(in_specs),
+                         out_specs=out_spec)(*args)
+
+
+def rmsnorm_init(d, *, axis="embed", dtype=jnp.float32):
+    return {"scale": Px(jnp.ones((d,), dtype), (axis,))}
+
+
+def rmsnorm_apply(p, x, eps=1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d, *, axis="embed", dtype=jnp.float32):
+    return {
+        "scale": Px(jnp.ones((d,), dtype), (axis,)),
+        "bias": Px(jnp.zeros((d,), dtype), (axis,)),
+    }
+
+
+def layernorm_apply(p, x, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def embedding_init(key, vocab, d, *, dtype=jnp.float32):
+    # Input tables use their own logical axes: the token gather must run over
+    # an UNsharded vocab dim (a gather over a sharded dim forces SPMD full
+    # rematerialization), so the table is sharded on the embed dim instead.
+    return {
+        "table": Px(normal_init(key, (vocab, d), dtype, 1.0),
+                    ("tokens_vocab", "embed_g"))
+    }
+
+
+def embedding_apply(p, ids, compute_dtype=None, mesh=None):
+    t = p["table"]
+    if compute_dtype is not None:
+        t = t.astype(compute_dtype)
+    if mesh is not None and "model" in mesh.axis_names:
+        # Token lookup via shard_map over the model axis: each shard takes
+        # from its [vocab, embed/model] slice locally.  This sidesteps XLA
+        # SPMD's gather partitioning entirely (which either fully
+        # rematerializes the table or miscompiles under constraints).
+        from jax.sharding import PartitionSpec as P
+
+        tok_spec = batch_pspec(mesh, ids.shape[0], extra_dims=ids.ndim - 1)
+        out_spec = P(*tok_spec, "model")
+
+        def local(tt, ii):
+            return jnp.take(tt, ii, axis=0)
+
+        return jax.shard_map(local, mesh=mesh,
+                             in_specs=(P(None, "model"), tok_spec),
+                             out_specs=out_spec)(t, ids)
+    return jnp.take(t, ids, axis=0)
+
+
+def embedding_attend(p, x):
+    """Tied readout: logits = x @ table.T (fp32 accumulation)."""
+    t = p["table"].astype(jnp.float32)
+    return x.astype(jnp.float32) @ t.T
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def squared_relu(x):
+    r = jax.nn.relu(x)
+    return r * r
+
+
+ACTIVATIONS: dict[str, Callable] = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "relu2": squared_relu,
+}
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated / non-gated)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model, d_ff, *, gated=True, dtype=jnp.float32,
+             in_axis="embed", ff_axis="mlp"):
+    ks = jax.random.split(key, 3)
+    p = {
+        "up": linear_init(ks[0], d_model, d_ff, axes=(in_axis, ff_axis), dtype=dtype),
+        "down": linear_init(ks[1], d_ff, d_model, axes=(ff_axis, in_axis), dtype=dtype),
+    }
+    if gated:
+        p["gate"] = linear_init(ks[2], d_model, d_ff, axes=(in_axis, ff_axis), dtype=dtype)
+    return p
+
+
+def mlp_apply(p, x, *, activation="silu", compute_dtype=None, mesh=None,
+              explicit_tp=False, fsdp=False, seq_shard=False):
+    act = ACTIVATIONS[activation]
+    tp = explicit_tp and mesh is not None and "model" in getattr(
+        mesh, "axis_names", ())
+    if tp:
+        up = linear_apply_tp(p["up"], x, "column", mesh, compute_dtype,
+                             fsdp=fsdp)
+        if "gate" in p:
+            gate = linear_apply_tp(p["gate"], x, "column", mesh,
+                                   compute_dtype, fsdp=fsdp)
+            h = act(gate) * up
+        else:
+            h = act(up)
+        return linear_apply_tp(p["down"], h, "row", mesh, compute_dtype,
+                               fsdp=fsdp, seq_shard=seq_shard)
+    up = linear_apply(p["up"], x, compute_dtype)
+    if "gate" in p:
+        gate = linear_apply(p["gate"], x, compute_dtype)
+        h = act(gate) * up
+    else:
+        h = act(up)
+    return linear_apply(p["down"], h, compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta=1e4):
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # [d/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, d/2]
+    cos = jnp.cos(angles)[..., :, None, :]  # [..., S, 1, d/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos: int, d: int) -> jnp.ndarray:
+    pos = np.arange(n_pos)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * dim / d)
+    out = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(out, dtype=jnp.float32)

@@ -1,0 +1,339 @@
+"""RWKV6 ("Finch") — attention-free LM with data-dependent decay.
+
+Time-mix: token-shift with LoRA-dynamic mixing coefficients, per-channel
+data-dependent decay ``w_t = exp(-exp(logit))``, bonus ``u``, and the WKV
+linear-attention state ``S in [B,H,hd_k,hd_v]``.
+
+Training uses a chunked-parallel WKV: chunks of ``rwkv_chunk`` tokens; the
+intra-chunk part is computed pairwise in a ``lax.scan`` step (all decay
+exponents are differences of a decreasing cumulative log-decay, so every
+``exp`` argument is <= 0 — numerically safe without clamping); the cross-chunk
+part is the S recurrence carried by the same scan.  Decode is the O(1)
+recurrence, which is what makes ``long_500k`` runnable for this arch.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def _heads(cfg: ModelConfig):
+    hd = cfg.rwkv_head_dim
+    H = cfg.d_model // hd
+    return H, hd
+
+
+def rwkv_block_init(key, cfg: ModelConfig):
+    d, ff = cfg.d_model, cfg.d_ff
+    H, hd = _heads(cfg)
+    Lm, Ld = cfg.rwkv_lora_mix, cfg.rwkv_lora_decay
+    dt = cfg.pdtype
+    ks = jax.random.split(key, 12)
+    att = {
+        "ln": nn.layernorm_init(d, dtype=dt),
+        "maa_x": nn.Px(jnp.zeros((d,), dt), ("embed",)),
+        "maa": nn.Px(jnp.zeros((5, d), dt), ("mix5", "embed")),
+        "tm_A": nn.Px(nn.lecun_init(ks[0], (d, 5 * Lm), dt, d), ("embed", "lora")),
+        "tm_B": nn.Px(nn.normal_init(ks[1], (5, Lm, d), dt, 0.01),
+                      ("mix5", "lora", "embed")),
+        "r": nn.linear_init(ks[2], d, d, axes=("embed", "wkv_proj"), dtype=dt),
+        "k": nn.linear_init(ks[3], d, d, axes=("embed", "wkv_proj"), dtype=dt),
+        "v": nn.linear_init(ks[4], d, d, axes=("embed", "wkv_proj"), dtype=dt),
+        "g": nn.linear_init(ks[5], d, d, axes=("embed", "wkv_proj"), dtype=dt),
+        "decay_base": nn.Px(jnp.full((d,), -1.0, jnp.float32), ("wkv_proj",)),
+        "dec_A": nn.Px(nn.lecun_init(ks[6], (d, Ld), dt, d), ("embed", "lora")),
+        "dec_B": nn.Px(nn.normal_init(ks[7], (Ld, d), dt, 0.01), ("lora", "wkv_proj")),
+        "u": nn.Px(jnp.zeros((d,), jnp.float32), ("wkv_proj",)),
+        "ln_x": nn.layernorm_init(d, axis="wkv_proj", dtype=dt),
+        "o": nn.linear_init(ks[8], d, d, axes=("wkv_proj", "embed"), dtype=dt),
+    }
+    ffn = {
+        "ln": nn.layernorm_init(d, dtype=dt),
+        "maa_k": nn.Px(jnp.zeros((d,), dt), ("embed",)),
+        "maa_r": nn.Px(jnp.zeros((d,), dt), ("embed",)),
+        "k": nn.linear_init(ks[9], d, ff, axes=("embed", "mlp"), dtype=dt),
+        "v": nn.linear_init(ks[10], ff, d, axes=("mlp", "embed"), dtype=dt),
+        "r": nn.linear_init(ks[11], d, d, axes=("embed", "wkv_proj"), dtype=dt),
+    }
+    return {"att": att, "ffn": ffn}
+
+
+# ---------------------------------------------------------------------------
+# WKV core
+# ---------------------------------------------------------------------------
+
+
+def wkv_chunked(r, k, v, lw, u, chunk: int, s0=None):
+    """Chunked WKV6.
+
+    r,k,v [B,T,H,hd]; lw = log-decay [B,T,H,hd] (<= 0); u [H,hd].
+    Returns (y [B,T,H,hd], s_final [B,H,hd,hd]).
+    """
+    B, T, H, hd = r.shape
+    L = min(chunk, T)
+    T0 = T
+    if T % L:  # pad with k=v=r=0, lw=0 (decay 1): exact, state-preserving
+        pad = L - T % L
+        z = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = (jnp.pad(a, z) for a in (r, k, v))
+        lw = jnp.pad(lw, z)
+        T = T + pad
+    nc = T // L
+    f32 = jnp.float32
+
+    def cshape(x):
+        return jnp.moveaxis(x.reshape(B, nc, L, H, hd), 1, 0)  # [nc,B,L,H,hd]
+
+    rc, kc, vc = cshape(r.astype(f32)), cshape(k.astype(f32)), cshape(v.astype(f32))
+    lwc = cshape(lw.astype(f32))
+    s_init = jnp.zeros((B, H, hd, hd), f32) if s0 is None else s0.astype(f32)
+    tri_lower = jnp.tril(jnp.ones((L, L), bool), k=-1)  # strictly lower (j<t)
+
+    def step(S, inp):
+        rb, kb, vb, lwb = inp  # [B,L,H,hd]
+        cum = jnp.cumsum(lwb, axis=1)  # inclusive, decreasing
+        cum_prev = cum - lwb  # cumulative through t-1 (exclusive)
+        # intra-chunk pairwise: A[t,j] = sum_a r_t[a] k_j[a] exp(cum_prev_t[a]-cum_j[a])  (j<t)
+        diff = cum_prev[:, :, None] - cum[:, None, :]  # [B,t,j,H,hd]
+        dec = jnp.exp(jnp.where(tri_lower[None, :, :, None, None], diff, 0.0))
+        dec = dec * tri_lower[None, :, :, None, None]
+        A = jnp.einsum("btha,btjha,bjha->bthj",
+                       rb, dec.astype(f32), kb)
+        # diagonal (bonus) term: j == t with u
+        diag = jnp.einsum("btha,ha,btha->bth", rb, u.astype(f32), kb)
+        y = jnp.einsum("bthj,bjhv->bthv", A, vb)
+        y = y + diag[..., None] * vb
+        # inter-chunk: y += (r_t . exp(cum_prev_t)) @ S
+        r_in = rb * jnp.exp(cum_prev)
+        y = y + jnp.einsum("btha,bhav->bthv", r_in, S)
+        # state update: S' = diag(exp(cum_L)) S + sum_j (k_j exp(cum_L - cum_j)) (x) v_j
+        end = cum[:, -1:, :]  # [B,1,H,hd]
+        k_out = kb * jnp.exp(end - cum)
+        S_new = jnp.exp(end[:, 0])[:, :, :, None] * S + jnp.einsum(
+            "bjha,bjhv->bhav", k_out, vb)
+        return S_new, y
+
+    s_final, ys = jax.lax.scan(step, s_init, (rc, kc, vc, lwc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, H, hd)[:, :T0]
+    return y.astype(r.dtype), s_final
+
+
+def wkv_recurrent(r, k, v, lw, u, s0=None):
+    """Step-by-step oracle. Same returns as wkv_chunked."""
+    B, T, H, hd = r.shape
+    f32 = jnp.float32
+    S = jnp.zeros((B, H, hd, hd), f32) if s0 is None else s0.astype(f32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, lw_t = (x.astype(f32) for x in inp)  # [B,H,hd]
+        S_new, y = wkv_step(S, r_t, k_t, v_t, lw_t, u)
+        return S_new, y
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (r, k, v, lw))
+    S, ys = jax.lax.scan(step, S, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), S
+
+
+def wkv_step(S, r_t, k_t, v_t, lw_t, u):
+    """One WKV step. S [B,H,hd,hd]; r/k/v/lw [B,H,hd]; u [H,hd]."""
+    f32 = jnp.float32
+    r_t, k_t, v_t, lw_t = (x.astype(f32) for x in (r_t, k_t, v_t, lw_t))
+    kv = jnp.einsum("bha,bhv->bhav", k_t, v_t)
+    y = jnp.einsum("bha,bhav->bhv", r_t, S + u.astype(f32)[None, :, :, None] * kv)
+    S_new = jnp.exp(lw_t)[..., None] * S + kv
+    return S_new, y
+
+
+# ---------------------------------------------------------------------------
+# Block apply
+# ---------------------------------------------------------------------------
+
+
+def _token_shift(x, shift_state=None):
+    """Previous token (zeros at position 0 or shift_state). x [B,T,d]."""
+    if shift_state is None:
+        prev = jnp.pad(x[:, :-1], ((0, 0), (1, 0), (0, 0)))
+    else:
+        prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1]], axis=1)
+    return prev
+
+
+def _dynamic_mix(p, x, xx):
+    """RWKV6 LoRA token-shift mixing -> 5 mixed streams (w,k,v,r,g)."""
+    dx = xx - x
+    xxx = x + dx * p["maa_x"].astype(x.dtype)[None, None, :]
+    B, T, d = x.shape
+    lora = jnp.tanh(xxx @ p["tm_A"].astype(x.dtype))  # [B,T,5*Lm]
+    lora = lora.reshape(B, T, 5, -1)
+    dyn = jnp.einsum("btml,mld->mbtd", lora, p["tm_B"].astype(x.dtype))
+    maa = p["maa"].astype(x.dtype)  # [5,d]
+    mixed = x[None] + dx[None] * (maa[:, None, None, :] + dyn)
+    return mixed  # [5,B,T,d] order: w,k,v,r,g
+
+
+def time_mix_apply(p, x, cfg: ModelConfig, *, state=None, chunked=True):
+    """Time-mix sub-block. state: {"shift": [B,d], "wkv": [B,H,hd,hd]}."""
+    H, hd = _heads(cfg)
+    B, T, d = x.shape
+    shift = state["shift"] if state is not None else None
+    xx = _token_shift(x, shift)
+    xw, xk, xv, xr, xg = _dynamic_mix(p, x, xx)
+    cd = cfg.cdtype
+    r = nn.linear_apply(p["r"], xr, cd).reshape(B, T, H, hd)
+    k = nn.linear_apply(p["k"], xk, cd).reshape(B, T, H, hd)
+    v = nn.linear_apply(p["v"], xv, cd).reshape(B, T, H, hd)
+    g = jax.nn.silu(nn.linear_apply(p["g"], xg, cd))
+    # data-dependent decay (per channel)
+    dec = p["decay_base"].astype(jnp.float32) + (
+        jnp.tanh(xw.astype(jnp.float32) @ p["dec_A"].astype(jnp.float32))
+        @ p["dec_B"].astype(jnp.float32))
+    lw = -jnp.exp(dec).reshape(B, T, H, hd)  # log w <= 0... (w = exp(-exp(dec)))
+    u = p["u"].astype(jnp.float32).reshape(H, hd)
+    s0 = state["wkv"] if state is not None else None
+    if chunked:
+        y, s_final = wkv_chunked(r, k, v, lw, u, cfg.rwkv_chunk, s0=s0)
+    else:
+        y, s_final = wkv_recurrent(r, k, v, lw, u, s0=s0)
+    y = y.reshape(B, T, d)
+    # per-head group norm
+    yh = y.reshape(B, T, H, hd)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = yh.reshape(B, T, d) * p["ln_x"]["scale"].astype(y.dtype) + \
+        p["ln_x"]["bias"].astype(y.dtype)
+    y = nn.linear_apply(p["o"], y * g, cd)
+    new_state = {"shift": x[:, -1, :], "wkv": s_final}
+    return y, new_state
+
+
+def channel_mix_apply(p, x, cfg: ModelConfig, *, state=None):
+    """Channel-mix (squared-relu FFN with receptance gate)."""
+    shift = state["shift"] if state is not None else None
+    xx = _token_shift(x, shift)
+    dx = xx - x
+    xk = x + dx * p["maa_k"].astype(x.dtype)[None, None, :]
+    xr = x + dx * p["maa_r"].astype(x.dtype)[None, None, :]
+    cd = cfg.cdtype
+    k = nn.linear_apply(p["k"], xk, cd)
+    k = nn.squared_relu(k)
+    kv = nn.linear_apply(p["v"], k, cd)
+    out = jax.nn.sigmoid(nn.linear_apply(p["r"], xr, cd)) * kv
+    return out, {"shift": x[:, -1, :]}
+
+
+def rwkv_block_apply(p, x, cfg: ModelConfig, *, state=None, chunked=True):
+    att_state = state["att"] if state is not None else None
+    ffn_state = state["ffn"] if state is not None else None
+    h = nn.layernorm_apply(p["att"]["ln"], x, cfg.norm_eps)
+    dy, new_att = time_mix_apply(p["att"], h, cfg, state=att_state,
+                                 chunked=chunked)
+    x = x + dy
+    h = nn.layernorm_apply(p["ffn"]["ln"], x, cfg.norm_eps)
+    dy, new_ffn = channel_mix_apply(p["ffn"], h, cfg, state=ffn_state)
+    x = x + dy
+    return x, {"att": new_att, "ffn": new_ffn}
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def rwkv_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    dt = cfg.pdtype
+    layer_keys = jax.random.split(ks[1], cfg.n_layers)
+    blocks = [rwkv_block_init(layer_keys[i], cfg) for i in range(cfg.n_layers)]
+    return {
+        "embed": nn.embedding_init(ks[0], cfg.vocab, cfg.d_model, dtype=dt),
+        "ln_in": nn.layernorm_init(cfg.d_model, dtype=dt),
+        "blocks": nn.stack_layers(blocks),
+        "ln_f": nn.layernorm_init(cfg.d_model, dtype=dt),
+        "unembed": nn.linear_init(ks[2], cfg.d_model, cfg.vocab,
+                                  axes=("embed", "vocab"), dtype=dt),
+    }
+
+
+def _empty_state(cfg: ModelConfig, batch: int):
+    H, hd = _heads(cfg)
+    d = cfg.d_model
+    return {
+        "att": {"shift": jnp.zeros((batch, d), cfg.cdtype),
+                "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32)},
+        "ffn": {"shift": jnp.zeros((batch, d), cfg.cdtype)},
+    }
+
+
+def rwkv_forward(p, batch, cfg: ModelConfig, *, mesh=None):
+    from . import transformer as tfm
+
+    x = nn.embedding_apply(p["embed"], batch["tokens"], cfg.cdtype, mesh=mesh)
+    x = nn.layernorm_apply(p["ln_in"], x, cfg.norm_eps)
+    aspec = nn.batch_pspec(mesh, x.shape[0])
+    x = nn.constrain(x, mesh, aspec)
+
+    def body(x, bp):
+        x = nn.constrain(x, mesh, aspec)
+        y, _ = rwkv_block_apply(bp, x, cfg)
+        return nn.constrain(y, mesh, aspec), None
+
+    x, _ = jax.lax.scan(tfm.remat_wrap(body, cfg), x, p["blocks"])
+    x = nn.layernorm_apply(p["ln_f"], x, cfg.norm_eps)
+    logits = nn.linear_apply(p["unembed"], x, jnp.float32)
+    if mesh is not None:
+        from jax.sharding import PartitionSpec as P
+
+        logits = nn.constrain(
+            logits, mesh,
+            P(aspec[0], None, "model" if "model" in mesh.axis_names else None))
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def rwkv_loss(p, batch, cfg: ModelConfig, *, mesh=None):
+    from . import transformer as tfm
+
+    logits, aux = rwkv_forward(p, batch, cfg, mesh=mesh)
+    return tfm._ce_from_logits(logits, batch, aux, cfg, mesh=mesh)
+
+
+def rwkv_prefill(p, batch, cfg: ModelConfig, *, max_len: int = 0, mesh=None):
+    """Prefill = full forward collecting per-layer states (no KV cache)."""
+    x = nn.embedding_apply(p["embed"], batch["tokens"], cfg.cdtype, mesh=mesh)
+    x = nn.layernorm_apply(p["ln_in"], x, cfg.norm_eps)
+    B = x.shape[0]
+    init = _empty_state(cfg, B)
+
+    def body(x, bp):
+        y, st = rwkv_block_apply(bp, x, cfg, state=init)
+        return y, st
+
+    x, states = jax.lax.scan(body, x, p["blocks"])
+    x = nn.layernorm_apply(p["ln_f"], x, cfg.norm_eps)
+    logits = nn.linear_apply(p["unembed"], x[:, -1:, :], jnp.float32)[:, 0]
+    return states, logits
+
+
+def rwkv_decode_step(p, cache, tokens, cfg: ModelConfig, *, mesh=None):
+    x = nn.embedding_apply(p["embed"], tokens[:, None], cfg.cdtype, mesh=mesh)
+    x = nn.layernorm_apply(p["ln_in"], x, cfg.norm_eps)
+
+    def body(x, inp):
+        bp, st = inp
+        y, st2 = rwkv_block_apply(bp, x, cfg, state=st, chunked=False)
+        return y, st2
+
+    x, new_states = jax.lax.scan(body, x, (p["blocks"], cache))
+    x = nn.layernorm_apply(p["ln_f"], x, cfg.norm_eps)
+    logits = nn.linear_apply(p["unembed"], x, jnp.float32)[:, 0]
+    return new_states, logits

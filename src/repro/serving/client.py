@@ -1,0 +1,63 @@
+"""LLM servicer + client helpers: the glue between the middleware service
+abstraction and the continuous-batching engine (Figs. 1-2: AI workers)."""
+from __future__ import annotations
+
+import time
+from typing import Any, Optional
+
+from repro.models.config import ModelConfig
+from .engine import InferenceEngine, make_engine_from_scratch
+
+
+class LLMServicer:
+    """Servicer protocol (submit/step) around an InferenceEngine.
+
+    Request payload: {"prompt": [ids...], "max_new_tokens": int,
+                      "temperature": float}.
+    Result: {"tokens": [...], "n_prompt": int, "ttft_s": float,
+             "latency_s": float}.
+    """
+
+    def __init__(self, cfg: ModelConfig, params=None, *, seed: int = 0,
+                 **engine_kw):
+        if params is None:
+            self.engine = make_engine_from_scratch(cfg, seed=seed, **engine_kw)
+        else:
+            self.engine = InferenceEngine(cfg, params, **engine_kw)
+
+    def submit(self, payload, **meta) -> int:
+        return self.engine.submit(
+            payload["prompt"],
+            max_new_tokens=payload.get("max_new_tokens", 16),
+            temperature=payload.get("temperature", 0.0),
+            eos_id=payload.get("eos_id"),
+        )
+
+    def step(self):
+        if not self.engine.has_work():
+            time.sleep(1e-4)
+            return []
+        self.engine.step()
+        out = []
+        for req in self.engine.collect_finished():
+            out.append((req.uid, {
+                "tokens": req.output,
+                "n_prompt": req.n_prompt,
+                "ttft_s": (req.first_token_at - req.submitted_at
+                           if req.first_token_at else None),
+                "latency_s": req.finished_at - req.submitted_at,
+            }))
+        return out
+
+    @property
+    def stats(self):
+        return self.engine.stats
+
+
+def llm_service_factory(cfg: ModelConfig, params=None, **engine_kw):
+    """Factory suitable for ServiceDescription(factory=...)."""
+
+    def make():
+        return LLMServicer(cfg, params, **engine_kw)
+
+    return make

@@ -1,0 +1,253 @@
+"""Continuous-batching inference engine (the vLLM building block).
+
+The engine owns model params + a slot cache pool and exposes the two knobs
+the paper sweeps (Fig. 5c): ``max_num_seqs`` (decode slot count) and
+``max_num_batched_tokens`` (prefill admission budget per step).  Each
+``step()``:
+
+  1. admits queued requests while slots + prefill-token budget allow
+     (prompt lengths are bucketed to bound recompilation),
+  2. runs one batched decode over all slots,
+  3. emits new tokens, retiring finished requests and freeing slots.
+
+Telemetry (per-step active slots, tokens, queue depth) feeds the paper's
+utilization/throughput experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ModelApi, get_model
+from repro.models.config import ModelConfig
+from .kvcache import CachePool
+from .sampling import sample
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    # filled by the engine
+    output: list = dataclasses.field(default_factory=list)
+    submitted_at: float = 0.0
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    slot: Optional[int] = None
+
+    @property
+    def done(self) -> bool:
+        return self.finished_at is not None
+
+    @property
+    def n_prompt(self) -> int:
+        return len(self.prompt)
+
+
+def _bucket(n: int, buckets) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    decode_tokens: int = 0
+    prefill_tokens: int = 0
+    active_slot_steps: int = 0
+    slot_steps: int = 0
+    started: float = dataclasses.field(default_factory=time.perf_counter)
+
+    @property
+    def utilization(self) -> float:
+        return self.active_slot_steps / max(1, self.slot_steps)
+
+    @property
+    def tokens_per_s(self) -> float:
+        dt = time.perf_counter() - self.started
+        return (self.decode_tokens + self.prefill_tokens) / max(1e-9, dt)
+
+
+class InferenceEngine:
+    """Single-model continuous-batching engine."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_num_seqs: int = 8,
+                 max_num_batched_tokens: int = 2048, max_len: int = 512,
+                 prefill_buckets=(32, 64, 128, 256, 512), seed: int = 0,
+                 mesh=None):
+        self.cfg = cfg
+        self.api: ModelApi = get_model(cfg)
+        self.params = params
+        self.max_num_seqs = max_num_seqs
+        self.max_num_batched_tokens = max_num_batched_tokens
+        self.max_len = max_len
+        self.buckets = tuple(b for b in prefill_buckets if b <= max_len) or (max_len,)
+        self.mesh = mesh
+        self.pool = CachePool(cfg, max_num_seqs, max_len)
+        self.queue: list[Request] = []
+        self.running: dict[int, Request] = {}  # slot -> request
+        self.stats = EngineStats()
+        self._uid = itertools.count()
+        self._key = jax.random.PRNGKey(seed)
+        self._last_tokens = jnp.zeros((max_num_seqs,), jnp.int32)
+
+        api = self.api
+
+        def decode_fn(params, cache, tokens):
+            return api.decode(params, cache, tokens, cfg, mesh=mesh)
+
+        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+
+        # KV-cache families: right-pad prompts into buckets, fix cache "len"
+        # afterwards, read logits at the true last position.  State-carrying
+        # families (ssm/hybrid) need exact-length prefill (order-dependent
+        # state), which recompiles per distinct prompt length.
+        self._exact_prefill = cfg.family in ("ssm", "hybrid")
+
+        def prefill_fn(params, batch):
+            kw = {"max_len": max_len}
+            if not self._exact_prefill:
+                kw["last_only"] = False
+            return api.prefill(params, batch, cfg, mesh=mesh, **kw)
+
+        self._prefill = jax.jit(prefill_fn)
+
+    # ------------------------------------------------------------------
+    # Public API
+    # ------------------------------------------------------------------
+    def submit(self, prompt, *, max_new_tokens=16, temperature=0.0,
+               eos_id=None) -> int:
+        req = Request(uid=next(self._uid), prompt=list(prompt),
+                      max_new_tokens=max_new_tokens, temperature=temperature,
+                      eos_id=eos_id, submitted_at=time.perf_counter())
+        self.queue.append(req)
+        return req.uid
+
+    def has_work(self) -> bool:
+        return bool(self.queue or self.running)
+
+    def step(self) -> list:
+        """One engine iteration. Returns [(uid, token), ...] emitted."""
+        self._admit()
+        events = []
+        if self.running:
+            events = self._decode_step()
+        self.stats.steps += 1
+        self.stats.active_slot_steps += len(self.running)
+        self.stats.slot_steps += self.max_num_seqs
+        return events
+
+    def collect_finished(self) -> list:
+        """Retire finished requests, freeing their slots."""
+        done = []
+        for slot, req in list(self.running.items()):
+            if req.done:
+                del self.running[slot]
+                self.pool.free(slot)
+                done.append(req)
+        return done
+
+    def run(self, *, max_steps: int = 100000) -> dict:
+        """Drain the queue; returns completed requests keyed by uid."""
+        done: dict[int, Request] = {}
+        for _ in range(max_steps):
+            if not self.has_work():
+                break
+            self.step()
+            for req in self.collect_finished():
+                done[req.uid] = req
+        return done
+
+    # ------------------------------------------------------------------
+    # Internals
+    # ------------------------------------------------------------------
+    def _admit(self):
+        budget = self.max_num_batched_tokens
+        while self.queue and self.pool.n_free > 0:
+            req = self.queue[0]
+            n = min(req.n_prompt, self.max_len - 1)
+            bucket = n if self._exact_prefill else _bucket(n, self.buckets)
+            n = min(n, bucket)  # over-long prompts keep their last n tokens
+            if bucket > budget:
+                break
+            self.queue.pop(0)
+            slot = self.pool.allocate()
+            budget -= bucket
+            tokens = np.zeros((1, bucket), np.int32)
+            tokens[0, :n] = req.prompt[-n:]  # right-pad into the bucket
+            batch = {"tokens": jnp.asarray(tokens)}
+            if self.cfg.family == "encdec":
+                batch["frame_embeds"] = jnp.zeros(
+                    (1, 64, self.cfg.d_model), jnp.float32)
+            if self.cfg.family == "vlm":
+                batch["patch_embeds"] = jnp.zeros(
+                    (1, self.cfg.vision_tokens or 16, self.cfg.d_model),
+                    jnp.float32)
+            cache, logits = self._prefill(self.params, batch)
+            self.pool.insert(slot, cache)
+            if not self._exact_prefill:
+                self.pool.set_len(slot, n)
+                logits_last = logits[0, n - 1]
+            else:
+                logits_last = logits[0]
+            self.stats.prefill_tokens += bucket
+            tok = int(jnp.argmax(logits_last))
+            req.slot = slot
+            req.output.append(tok)
+            req.first_token_at = time.perf_counter()
+            self._last_tokens = self._last_tokens.at[slot].set(tok)
+            self.running[slot] = req
+            self._check_done(req)
+
+    def _decode_step(self):
+        self._key, sub = jax.random.split(self._key)
+        self.pool.cache, logits = self._decode(
+            self.params, self.pool.cache, self._last_tokens)
+        temps = np.zeros((self.max_num_seqs,), np.float32)
+        for slot, req in self.running.items():
+            temps[slot] = req.temperature
+        # greedy for temp==0 slots, sampled otherwise
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        sampled = sample(logits, sub, temperature=1.0)
+        t = jnp.asarray(temps)
+        tokens = jnp.where(t > 0, sampled, greedy)
+        self._last_tokens = tokens
+        tokens_np = np.asarray(tokens)
+        events = []
+        for slot, req in list(self.running.items()):
+            if req.done:
+                continue
+            tok = int(tokens_np[slot])
+            req.output.append(tok)
+            events.append((req.uid, tok))
+            self.stats.decode_tokens += 1
+            self._check_done(req)
+        return events
+
+    def _check_done(self, req: Request):
+        if req.done:
+            return
+        hit_eos = req.eos_id is not None and req.output and \
+            req.output[-1] == req.eos_id
+        if len(req.output) >= req.max_new_tokens or hit_eos:
+            req.finished_at = time.perf_counter()
+
+
+def make_engine_from_scratch(cfg: ModelConfig, *, seed=0, **kw):
+    """Init params and build an engine (used by services/examples)."""
+    from repro.models import nn
+
+    api = get_model(cfg)
+    params, _ = nn.split(api.init(jax.random.PRNGKey(seed), cfg))
+    return InferenceEngine(cfg, params, **kw)

@@ -1,0 +1,107 @@
+"""Slot-based cache pool — the TPU adaptation of PagedAttention.
+
+vLLM's block tables fight GPU memory fragmentation with dynamic paging; XLA
+wants ahead-of-time allocation, so the same insight (decouple request
+lifetime from cache storage; admit/evict at slot granularity) becomes a fixed
+``[max_seqs, max_len]`` pool with slot allocation + continuous batching
+(JetStream-style).  Works for every model family: leaf batch dims are located
+by the same path rules the dry-run uses for cache shardings.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import specs as sp
+from repro.models.config import ModelConfig
+
+
+def _path_keys(path):
+    return [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+
+
+def batch_dim_for(keys, rank: int) -> int:
+    name = keys[-1]
+    if name in ("k", "v", "cross_k", "cross_v"):
+        return rank - 4
+    if name == "len":
+        return rank - 1
+    if name == "wkv":
+        return rank - 4
+    if name == "shift":
+        return rank - 2
+    if name == "ssm":
+        return rank - 4
+    if len(keys) >= 2 and keys[-2] == "conv":
+        return rank - 3
+    raise ValueError(f"unknown cache leaf {keys}")
+
+
+class CachePool:
+    """Zero-initialized cache for ``max_seqs`` slots + slot allocator."""
+
+    def __init__(self, cfg: ModelConfig, max_seqs: int, max_len: int):
+        self.cfg = cfg
+        self.max_seqs = max_seqs
+        self.max_len = max_len
+        tmpl = sp.cache_template(cfg, max_seqs, max_len)
+        self.cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), tmpl)
+        self._free = list(range(max_seqs))
+
+    # -- slot allocation ------------------------------------------------
+    def allocate(self) -> Optional[int]:
+        return self._free.pop(0) if self._free else None
+
+    def free(self, slot: int):
+        self._free.append(slot)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    # -- data movement ----------------------------------------------------
+    def insert(self, slot: int, prefill_cache):
+        """Write a single-request prefill cache (batch=1) into ``slot``."""
+
+        def upd(path, pool_leaf, new_leaf):
+            keys = _path_keys(path)
+            bdim = batch_dim_for(keys, pool_leaf.ndim)
+            # move batch to front, set, move back
+            pool_t = jnp.moveaxis(pool_leaf, bdim, 0)
+            src = jnp.moveaxis(new_leaf, batch_dim_for(keys, new_leaf.ndim), 0)
+            src0 = src[0]
+            # prefill cache may cover fewer positions than the pool
+            if src0.shape != pool_t.shape[1:]:
+                pad = [(0, p - s) for p, s in zip(pool_t.shape[1:], src0.shape)]
+                src0 = jnp.pad(src0, pad)
+            pool_t = pool_t.at[slot].set(src0.astype(pool_t.dtype))
+            return jnp.moveaxis(pool_t, 0, bdim)
+
+        self.cache = jax.tree_util.tree_map_with_path(
+            upd, self.cache, prefill_cache)
+
+    def set_len(self, slot: int, n: int):
+        """Fix the true sequence length of a right-padded bucketed prefill."""
+
+        def upd(path, leaf):
+            keys = _path_keys(path)
+            if keys[-1] != "len":
+                return leaf
+            bdim = batch_dim_for(keys, leaf.ndim)
+            t = jnp.moveaxis(leaf, bdim, 0)
+            t = t.at[slot].set(jnp.full_like(t[slot], n))
+            return jnp.moveaxis(t, 0, bdim)
+
+        self.cache = jax.tree_util.tree_map_with_path(upd, self.cache)
+
+    def reset_slot(self, slot: int):
+        def zero(path, pool_leaf):
+            keys = _path_keys(path)
+            bdim = batch_dim_for(keys, pool_leaf.ndim)
+            pool_t = jnp.moveaxis(pool_leaf, bdim, 0)
+            pool_t = pool_t.at[slot].set(jnp.zeros_like(pool_t[slot]))
+            return jnp.moveaxis(pool_t, 0, bdim)
+
+        self.cache = jax.tree_util.tree_map_with_path(zero, self.cache)

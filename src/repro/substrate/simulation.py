@@ -1,0 +1,104 @@
+"""Simulation "executables": jitted JAX numerical kernels.
+
+These stand in for the paper's MPI simulation codes (GROMACS-class payloads)
+so middleware benchmarks move real compute + real arrays, not sleeps:
+
+  * ``heat_stencil``  — 2-D five-point heat equation steps,
+  * ``lj_step``       — Lennard-Jones particle forces + Euler integration,
+  * ``surrogate_eval``— small MLP surrogate inference (AI-in-HPC analogue).
+
+Each accepts ``_ranks``/``_placement`` kwargs (injected by the EXECUTABLE
+path of the pool backend) and splits its domain across "ranks".
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def _heat_steps(grid, steps: int):
+    def one(g, _):
+        interior = 0.25 * (g[:-2, 1:-1] + g[2:, 1:-1]
+                           + g[1:-1, :-2] + g[1:-1, 2:])
+        g = g.at[1:-1, 1:-1].set(interior)
+        return g, None
+
+    grid, _ = jax.lax.scan(one, grid, None, length=steps)
+    return grid
+
+
+def heat_stencil(n: int = 64, steps: int = 10, seed: int = 0,
+                 _ranks: int = 1, _placement=None) -> np.ndarray:
+    """Run a 2-D heat stencil; domain rows split across ranks."""
+    key = jax.random.PRNGKey(seed)
+    grid = jax.random.uniform(key, (n, n))
+    per = max(1, n // max(1, _ranks))
+    outs = []
+    for r in range(max(1, _ranks)):  # rank loop (domain decomposition)
+        block = grid[r * per:(r + 1) * per + 2]
+        if block.shape[0] < 3:
+            continue
+        outs.append(_heat_steps(block, steps))
+    result = jnp.concatenate(outs, axis=0) if outs else grid
+    return np.asarray(result)
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def _lj_steps(pos, vel, steps: int, dt: float = 1e-3):
+    def forces(p):
+        diff = p[:, None, :] - p[None, :, :]
+        r2 = jnp.sum(diff * diff, axis=-1) + jnp.eye(p.shape[0])
+        inv6 = 1.0 / (r2 ** 3)
+        mag = 24 * (2 * inv6 * inv6 - inv6) / r2
+        mag = mag * (1 - jnp.eye(p.shape[0]))
+        return jnp.sum(mag[:, :, None] * diff, axis=1)
+
+    def one(state, _):
+        p, v = state
+        v = v + dt * forces(p)
+        p = p + dt * v
+        return (p, v), None
+
+    (pos, vel), _ = jax.lax.scan(one, (pos, vel), None, length=steps)
+    return pos, vel
+
+
+def lj_step(n_particles: int = 64, steps: int = 5, seed: int = 0,
+            _ranks: int = 1, _placement=None) -> np.ndarray:
+    key = jax.random.PRNGKey(seed)
+    pos = jax.random.uniform(key, (n_particles, 3)) * 4.0
+    vel = jnp.zeros_like(pos)
+    pos, vel = _lj_steps(pos, vel, steps)
+    return np.asarray(pos)
+
+
+@functools.partial(jax.jit, static_argnames=("hidden",))
+def _mlp_forward(x, w1, w2, hidden: int):
+    return jax.nn.relu(x @ w1) @ w2
+
+
+def surrogate_eval(x: Optional[np.ndarray] = None, dim: int = 64,
+                   hidden: int = 128, seed: int = 0,
+                   _ranks: int = 1, _placement=None) -> np.ndarray:
+    """Tiny MLP surrogate scoring a batch (docking-surrogate analogue)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if x is None:
+        x = jax.random.normal(k1, (32, dim))
+    else:
+        x = jnp.asarray(x, jnp.float32)
+        if x.ndim == 1:
+            x = x[None, :]
+    w1 = jax.random.normal(k2, (x.shape[-1], hidden)) * 0.1
+    w2 = jax.random.normal(k3, (hidden, 1)) * 0.1
+    return np.asarray(_mlp_forward(x, w1, w2, hidden))
+
+
+def noop(*args, **kwargs):
+    """The Exp-1 null payload."""
+    return None

@@ -1,0 +1,166 @@
+"""Optimizers: AdamW with optional 8-bit blockwise-quantized moments.
+
+The quantized variant is the distributed-optimization trick that lets
+nemotron-4-340b's optimizer state fit the production mesh: ``m`` is stored as
+int8 and ``v`` as uint8, both with per-block (last-dim blocks of
+``QBLOCK``) fp32 scales — bitsandbytes-style, adapted to a shape-preserving
+layout so optimizer-state shardings mirror param shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+QBLOCK = 128
+
+
+@dataclasses.dataclass
+class OptimizerConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    quantize_states: bool = False  # 8-bit m/v (blockwise)
+
+
+# ---------------------------------------------------------------------------
+# Schedule
+# ---------------------------------------------------------------------------
+
+
+def lr_at(step, cfg: OptimizerConfig):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.decay_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * frac
+
+
+# ---------------------------------------------------------------------------
+# Blockwise 8-bit quantization (shape-preserving layout)
+# ---------------------------------------------------------------------------
+
+
+def _blocked_shape(shape):
+    last = shape[-1] if shape else 1
+    if last % QBLOCK == 0:
+        return shape[:-1] + (last // QBLOCK,), QBLOCK
+    return shape[:-1] + (1,), last  # one scale per row
+
+
+def quantize_signed(x):
+    """fp32 -> (int8 codes, fp32 blockwise scales)."""
+    shape = x.shape if x.ndim else (1,)
+    x2 = x.reshape(shape)
+    sshape, bs = _blocked_shape(shape)
+    xb = x2.reshape(sshape + (bs,))
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+    safe = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / safe[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(shape), scale
+
+
+def dequantize_signed(q, scale):
+    shape = q.shape
+    sshape, bs = _blocked_shape(shape)
+    qb = q.reshape(sshape + (bs,)).astype(jnp.float32)
+    return (qb * scale[..., None]).reshape(shape)
+
+
+def quantize_unsigned(x):
+    """Non-negative fp32 -> (uint8 codes, fp32 blockwise scales)."""
+    shape = x.shape if x.ndim else (1,)
+    sshape, bs = _blocked_shape(shape)
+    xb = x.reshape(sshape + (bs,))
+    scale = jnp.max(xb, axis=-1) / 255.0
+    safe = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(xb / safe[..., None]), 0, 255).astype(jnp.uint8)
+    return q.reshape(shape), scale
+
+
+def dequantize_unsigned(q, scale):
+    shape = q.shape
+    sshape, bs = _blocked_shape(shape)
+    qb = q.reshape(sshape + (bs,)).astype(jnp.float32)
+    return (qb * scale[..., None]).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params, cfg: OptimizerConfig):
+    if cfg.quantize_states:
+        def mk(p):
+            mq, ms = quantize_signed(jnp.zeros(p.shape, jnp.float32))
+            vq, vs = quantize_unsigned(jnp.zeros(p.shape, jnp.float32))
+            return {"mq": mq, "ms": ms, "vq": vq, "vs": vs}
+    else:
+        def mk(p):
+            return {"m": jnp.zeros(p.shape, jnp.float32),
+                    "v": jnp.zeros(p.shape, jnp.float32)}
+    return {
+        "moments": jax.tree.map(mk, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads, opt_state, params, cfg: OptimizerConfig):
+    """Returns (new_params, new_opt_state, stats)."""
+    step = opt_state["step"]
+    lr = lr_at(step, cfg)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+
+    def upd(g, mom, p):
+        g = g.astype(jnp.float32) * clip
+        if cfg.quantize_states:
+            m = dequantize_signed(mom["mq"], mom["ms"])
+            v = dequantize_unsigned(mom["vq"], mom["vs"])
+        else:
+            m, v = mom["m"], mom["v"]
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay > 0 and p.ndim >= 2:  # decay matrices only
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        if cfg.quantize_states:
+            mq, ms = quantize_signed(m)
+            vq, vs = quantize_unsigned(v)
+            return new_p, {"mq": mq, "ms": ms, "vq": vq, "vs": vs}
+        return new_p, {"m": m, "v": v}
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["moments"])
+    out = [upd(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_moments = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_state = {"moments": new_moments, "step": step + 1}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests and benches must see the single real device (the dry-run sets
+# its own 512-device flag as the very first import in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,51 @@
+"""Data pipeline: determinism, sharding, checkpoint-resume."""
+import numpy as np
+
+from repro.substrate.data import DataConfig, DataPipeline, SyntheticCorpus
+
+
+def test_deterministic():
+    a = DataPipeline(DataConfig(seed=7))
+    b = DataPipeline(DataConfig(seed=7))
+    for _ in range(3):
+        ba, bb = a.next_batch(), b.next_batch()
+        np.testing.assert_array_equal(np.asarray(ba["tokens"]),
+                                      np.asarray(bb["tokens"]))
+
+
+def test_targets_are_shifted_tokens():
+    p = DataPipeline(DataConfig())
+    b = p.next_batch()
+    np.testing.assert_array_equal(np.asarray(b["tokens"])[:, 1:],
+                                  np.asarray(b["targets"])[:, :-1])
+
+
+def test_dp_sharding_disjoint_and_complete():
+    cfg = DataConfig(global_batch=8, dp_size=4)
+    full = DataPipeline(DataConfig(global_batch=8))
+    shards = [DataPipeline(DataConfig(global_batch=8, dp_size=4, dp_rank=r))
+              for r in range(4)]
+    fb = np.asarray(full.next_batch()["tokens"])
+    got = np.concatenate([np.asarray(s.next_batch()["tokens"])
+                          for s in shards])
+    np.testing.assert_array_equal(fb, got)
+
+
+def test_checkpoint_resume_cursor():
+    a = DataPipeline(DataConfig(seed=3))
+    for _ in range(5):
+        a.next_batch()
+    saved = a.state()
+    want = np.asarray(a.next_batch()["tokens"])
+    b = DataPipeline(DataConfig(seed=3))
+    b.restore(saved)
+    got = np.asarray(b.next_batch()["tokens"])
+    np.testing.assert_array_equal(want, got)
+
+
+def test_corpus_has_learnable_structure():
+    c = SyntheticCorpus(DataConfig(seed=0))
+    # motifs repeat within documents -> corpus is compressible
+    toks = c.tokens[: 384 * 4]
+    _, counts = np.unique(toks, return_counts=True)
+    assert counts.max() >= 8  # repeated motifs present

@@ -1,0 +1,264 @@
+"""Middleware behaviour: dependencies, resources, retries, services,
+stragglers, elasticity, failure recovery."""
+import threading
+import time
+
+import pytest
+
+from repro.backends.local import PoolBackend
+from repro.core import (ExecutionPolicy, ResourceDescription,
+                        ResourceRequirements, Rhapsody, ServiceDescription,
+                        TaskDescription, TaskKind, TaskState)
+from repro.core.resources import Allocation, partition
+from repro.substrate.simulation import noop
+
+
+@pytest.fixture
+def rh():
+    r = Rhapsody(ResourceDescription(nodes=2, cores_per_node=8), n_workers=2)
+    yield r
+    r.close()
+
+
+def test_submit_and_wait(rh):
+    uids = rh.submit([TaskDescription(fn=lambda: 7) for _ in range(20)])
+    assert rh.wait(uids, timeout=10)
+    assert all(rh.result(u) == 7 for u in uids)
+
+
+def test_dependency_ordering(rh):
+    order = []
+    lock = threading.Lock()
+
+    def record(x):
+        with lock:
+            order.append(x)
+        return x
+
+    a = TaskDescription(fn=record, args=("a",))
+    b = TaskDescription(fn=record, args=("b",), dependencies=[a.uid])
+    c = TaskDescription(fn=record, args=("c",), dependencies=[b.uid])
+    rh.submit([a, b, c])
+    rh.wait([c.uid], timeout=10)
+    assert order == ["a", "b", "c"]
+
+
+def test_diamond_dependencies(rh):
+    a = TaskDescription(fn=lambda: 1)
+    b = TaskDescription(fn=lambda: 2, dependencies=[a.uid])
+    c = TaskDescription(fn=lambda: 3, dependencies=[a.uid])
+    d = TaskDescription(fn=lambda: 4, dependencies=[b.uid, c.uid])
+    rh.submit([a, b, c, d])
+    assert rh.wait([d.uid], timeout=10)
+    assert rh.state(d.uid) == TaskState.DONE
+
+
+def test_failure_and_retry(rh):
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("boom")
+        return "ok"
+
+    t = TaskDescription(fn=flaky, max_retries=5)
+    rh.submit(t)
+    rh.wait([t.uid], timeout=10)
+    assert rh.result(t.uid) == "ok"
+    assert calls["n"] == 3
+
+
+def test_failure_exhausts_retries(rh):
+    t = TaskDescription(fn=lambda: 1 / 0, max_retries=1)
+    rh.submit(t)
+    rh.wait([t.uid], timeout=10)
+    assert rh.state(t.uid) == TaskState.FAILED
+    with pytest.raises(ZeroDivisionError):
+        rh.result(t.uid)
+
+
+def test_resource_mapping_respects_capacity():
+    alloc = Allocation(ResourceDescription(nodes=2, cores_per_node=4))
+    p1 = alloc.try_map(ranks=2, cores_per_rank=2, gpus_per_rank=0)
+    assert p1 is not None
+    p2 = alloc.try_map(ranks=1, cores_per_rank=4, gpus_per_rank=0)
+    assert p2 is not None
+    assert alloc.try_map(ranks=1, cores_per_rank=2, gpus_per_rank=0) is None
+    alloc.release(p1)
+    assert alloc.try_map(ranks=1, cores_per_rank=2, gpus_per_rank=0)
+
+
+def test_partitioning():
+    parts = partition(ResourceDescription(nodes=8, cores_per_node=4),
+                      {"mpi": 6, "fn": 2})
+    assert len(parts["mpi"].nodes) == 6
+    assert len(parts["fn"].nodes) == 2
+    assert set(parts["mpi"].nodes).isdisjoint(parts["fn"].nodes)
+
+
+def test_elastic_add_and_drain():
+    alloc = Allocation(ResourceDescription(nodes=1, cores_per_node=2))
+    p = alloc.try_map(2, 1, 0)
+    assert alloc.try_map(1, 1, 0) is None
+    alloc.add_nodes(1)
+    assert alloc.try_map(1, 1, 0) is not None
+    assert not alloc.drain_node(0)  # busy
+    alloc.release(p)
+    assert alloc.drain_node(0)
+
+
+def test_worker_failure_recovery():
+    rh = Rhapsody(ResourceDescription(nodes=1, cores_per_node=8), n_workers=3)
+    try:
+        backend = rh.backends["pool"]
+        gate = threading.Event()
+
+        def slowish():
+            gate.wait(2.0)
+            return "done"
+
+        uids = rh.submit([TaskDescription(fn=slowish, max_retries=2)
+                          for _ in range(6)])
+        stranded = backend.kill_worker(0)
+        for t in stranded:  # middleware re-queues stranded work
+            backend.submit(t)
+        gate.set()
+        assert rh.wait(uids, timeout=15)
+        assert all(rh.result(u) == "done" for u in uids)
+    finally:
+        rh.close()
+
+
+def test_straggler_duplication():
+    policy = ExecutionPolicy(straggler_factor=3.0, straggler_min_samples=5)
+    rh = Rhapsody(ResourceDescription(nodes=1, cores_per_node=8),
+                  policy=policy, n_workers=4)
+    try:
+        fast = [TaskDescription(fn=lambda: time.sleep(0.01),
+                                task_type="work") for _ in range(10)]
+        rh.submit(fast)
+        rh.wait([d.uid for d in fast], timeout=10)
+        hang = threading.Event()
+
+        def straggler():
+            if not hang.is_set():
+                hang.set()
+                time.sleep(1.0)  # 100x median
+            return "s"
+
+        s = TaskDescription(fn=straggler, task_type="work")
+        rh.submit(s)
+        rh.wait([s.uid], timeout=10)
+        dup_events = [e for e in rh.events.events if e[2] == "DUPLICATED"]
+        assert dup_events, "straggler should have been duplicated"
+        assert rh.result(s.uid) == "s"
+    finally:
+        rh.close()
+
+
+def test_service_lifecycle_and_restart():
+    class Crashy:
+        crashes = {"n": 0}
+
+        def handle(self, payload):
+            if payload == "crash" and Crashy.crashes["n"] == 0:
+                Crashy.crashes["n"] += 1
+                raise SystemError("service died")
+            return ("ok", payload)
+
+    rh = Rhapsody(ResourceDescription(nodes=1, cores_per_node=4), n_workers=1)
+    try:
+        ep = rh.add_service(ServiceDescription(name="svc", factory=Crashy))
+        assert ep.request("hello").result(5.0) == ("ok", "hello")
+        # sync-servicer errors surface per-request without killing the service
+        with pytest.raises(SystemError):
+            ep.request("crash").result(5.0)
+        assert ep.request("again").result(5.0) == ("ok", "again")
+        assert rh.services.list()["svc"] == "ready"
+    finally:
+        rh.close()
+
+
+def test_heterogeneity_width_metric(rh):
+    evs = rh.events
+    evs.clear()
+    evs.emit("t1", "RUNNING", "typeA")
+    evs.emit("t2", "RUNNING", "typeB")
+    evs.emit("t1", "DONE", "typeA")
+    evs.emit("t3", "RUNNING", "typeB")
+    evs.emit("t2", "DONE", "typeB")
+    evs.emit("t3", "DONE", "typeB")
+    assert evs.peak_hw() == 2  # typeA+typeB overlapped; B alone later
+
+
+def test_preemption_safe_service_replay():
+    """A crashing pumped service replays in-flight requests after restart."""
+    class CrashyEngine:
+        crashed = {"n": 0}
+
+        def __init__(self):
+            self.jobs = {}
+            self.uid = 0
+
+        def submit(self, payload):
+            if payload == "boom" and CrashyEngine.crashed["n"] == 0:
+                CrashyEngine.crashed["n"] += 1
+                raise SystemError("preempted")
+            self.uid += 1
+            self.jobs[self.uid] = payload
+            return self.uid
+
+        def step(self):
+            out = [(u, ("done", p)) for u, p in self.jobs.items()]
+            self.jobs.clear()
+            return out
+
+    from repro.core.policy import ExecutionPolicy
+
+    rh = Rhapsody(ResourceDescription(nodes=1, cores_per_node=4),
+                  policy=ExecutionPolicy(restart_failed_services=True),
+                  n_workers=1)
+    try:
+        ep = rh.add_service(ServiceDescription(name="eng",
+                                               factory=CrashyEngine))
+        ok = ep.request("fine")
+        assert ok.result(10.0) == ("done", "fine")
+        crash = ep.request("boom")  # kills instance; replayed after restart
+        assert crash.result(15.0) == ("done", "boom")
+        assert CrashyEngine.crashed["n"] == 1
+    finally:
+        rh.close()
+
+
+def test_multi_backend_composition():
+    """Paper's central claim: heterogeneous backends coexist in one
+    allocation, each serving its partition."""
+    import jax.numpy as jnp
+
+    from repro.backends.jaxrt import JaxBackend
+    from repro.backends.local import PoolBackend
+
+    backends = {"pool": PoolBackend(n_workers=2), "jax": JaxBackend()}
+    rh = Rhapsody(ResourceDescription(nodes=4, cores_per_node=8),
+                  backends=backends,
+                  partitions={"pool": 2, "jax": 2})
+    try:
+        def compute(x):
+            return (x * x + 1.0).sum()
+
+        jax_tasks = [TaskDescription(fn=compute,
+                                     args=(jnp.arange(16.0) + i,),
+                                     partition="jax", task_type="jax_compute")
+                     for i in range(4)]
+        py_tasks = [TaskDescription(fn=lambda i=i: i * 2, partition="pool",
+                                    task_type="py_fn") for i in range(4)]
+        uids = rh.submit(jax_tasks + py_tasks)
+        assert rh.wait(uids, timeout=30)
+        assert float(rh.result(jax_tasks[0].uid)) == float(
+            ((jnp.arange(16.0)) ** 2 + 1.0).sum())
+        assert rh.result(py_tasks[3].uid) == 6
+        assert backends["jax"].stats()["executed"] == 4
+        assert backends["pool"].stats()["executed"] == 4
+    finally:
+        rh.close()

@@ -1,0 +1,72 @@
+"""Hillclimb optimizations preserve exactness (§Perf changes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import get_model, make_batch, nn
+
+
+def test_padded_heads_exact():
+    """GQA head padding (zero o-rows, per-kv-group layout) is a no-op."""
+    cfg = get_smoke_config("llama3.2-3b")  # 6 heads, kv=2
+    cfgp = cfg.scaled(pad_heads_to=8)
+    api = get_model(cfg)
+    params, _ = nn.split(api.init(jax.random.PRNGKey(0), cfg))
+    paramsp, _ = nn.split(api.init(jax.random.PRNGKey(1), cfgp))
+    nkv, hd, d = cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    g_real, g_pad = cfg.n_heads // nkv, cfgp.padded_heads // nkv
+    L = params["blocks"]["attn"]["q"]["w"].shape[0]
+
+    qs = np.asarray(params["blocks"]["attn"]["q"]["w"])
+    qd = np.array(paramsp["blocks"]["attn"]["q"]["w"])
+    qd4 = qd.reshape(L, d, nkv, g_pad, hd)
+    qd4[:, :, :, :g_real] = qs.reshape(L, d, nkv, g_real, hd)
+    paramsp["blocks"]["attn"]["q"]["w"] = jnp.asarray(qd4.reshape(L, d, -1))
+    osrc = np.asarray(params["blocks"]["attn"]["o"]["w"]).reshape(
+        L, nkv, g_real, hd, d)
+    odst = np.zeros((L, nkv, g_pad, hd, d), np.float32)
+    odst[:, :, :g_real] = osrc
+    paramsp["blocks"]["attn"]["o"]["w"] = jnp.asarray(odst.reshape(L, -1, d))
+    paramsp["blocks"]["attn"]["k"] = params["blocks"]["attn"]["k"]
+    paramsp["blocks"]["attn"]["v"] = params["blocks"]["attn"]["v"]
+    for k in ("ln_attn", "ln_mlp", "mlp"):
+        paramsp["blocks"][k] = params["blocks"][k]
+    for k in ("embed", "ln_f", "unembed"):
+        paramsp[k] = params[k]
+    batch = make_batch(cfg, 2, 16)
+    l0, _ = api.forward(params, batch, cfg)
+    l1, _ = api.forward(paramsp, batch, cfgp)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_explicit_tp_flags_are_noop_without_mesh():
+    """explicit_tp / SP flags fall back exactly on a single device."""
+    cfg = get_smoke_config("qwen3-8b")
+    cfg2 = cfg.scaled(explicit_tp=True, fsdp_params=True,
+                      seq_shard_activations=True)
+    api = get_model(cfg)
+    params, _ = nn.split(api.init(jax.random.PRNGKey(0), cfg))
+    batch = make_batch(cfg, 2, 16)
+    l0, _ = api.forward(params, batch, cfg)
+    l1, _ = api.forward(params, batch, cfg2)
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+
+
+def test_decode_bf16_cache_matches_f32():
+    """bf16-storage decode attention matches f32 math within bf16 tolerance."""
+    from repro.models.attention import decode_attention
+
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    B, S, Hq, Hkv, D = 2, 64, 4, 2, 16
+    q = jax.random.normal(ks[0], (B, 1, Hq, D), jnp.bfloat16)
+    kc = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.bfloat16)
+    vc = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.bfloat16)
+    lens = jnp.asarray([40, 64], jnp.int32)
+    out = decode_attention(q, kc, vc, lens)
+    ref = decode_attention(q.astype(jnp.float32), kc.astype(jnp.float32),
+                           vc.astype(jnp.float32), lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=3e-2, atol=3e-2)

@@ -1,0 +1,172 @@
+"""Hypothesis property tests on system invariants."""
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coupling import InMemoryStore
+from repro.core.resources import Allocation, ResourceDescription
+from repro.core.router import make_router
+from repro.training.optim import (dequantize_signed, dequantize_unsigned,
+                                  quantize_signed, quantize_unsigned)
+
+
+# ---------------------------------------------------------------------------
+# Resource mapper: never oversubscribes; release restores capacity
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    nodes=st.integers(1, 6),
+    cores=st.integers(1, 16),
+    reqs=st.lists(st.tuples(st.integers(1, 4), st.integers(1, 8)),
+                  min_size=1, max_size=30),
+)
+def test_mapper_never_oversubscribes(nodes, cores, reqs):
+    desc = ResourceDescription(nodes=nodes, cores_per_node=cores)
+    alloc = Allocation(desc)
+    placements = []
+    for ranks, cpr in reqs:
+        p = alloc.try_map(ranks, cpr, 0)
+        if p is not None:
+            placements.append(p)
+            # every rank's cores are node-local and within range
+            for nid, cs, gs in p.ranks:
+                assert len(cs) == cpr
+                assert all(0 <= c < cores for c in cs)
+        assert alloc.used_cores <= alloc.total_cores
+    # no core is double-booked
+    booked = {}
+    for p in placements:
+        for nid, cs, _ in p.ranks:
+            for c in cs:
+                key = (nid, c)
+                assert key not in booked, "core double-booked"
+                booked[key] = True
+    for p in placements:
+        alloc.release(p)
+    assert alloc.used_cores == 0
+
+
+# ---------------------------------------------------------------------------
+# Routers: cover every request exactly once; balanced beats random on spread
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    lens=st.lists(st.integers(1, 500), min_size=1, max_size=60),
+    n=st.integers(1, 8),
+)
+def test_router_partition_property(lens, n):
+    reqs = [[0] * L for L in lens]
+    for kind in ("random", "round_robin", "balanced"):
+        assign = make_router(kind).assign(reqs, n, cost=len)
+        flat = sorted(i for a in assign for i in a)
+        assert flat == list(range(len(reqs)))  # exact cover
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    lens=st.lists(st.integers(1, 1000), min_size=8, max_size=60),
+)
+def test_balanced_router_no_worse_than_random(lens):
+    reqs = [[0] * L for L in lens]
+    n = 4
+
+    def imbalance(assign):
+        loads = [sum(lens[i] for i in a) for a in assign]
+        return max(loads) - min(loads)
+
+    bal = imbalance(make_router("balanced").assign(reqs, n, cost=len))
+    rnd = imbalance(make_router("random", seed=1).assign(reqs, n, cost=len))
+    assert bal <= rnd + max(lens)  # LPT bound: within one max item
+
+
+# ---------------------------------------------------------------------------
+# Coupling store: put/get roundtrip, concurrent readers
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.lists(st.floats(-1e6, 1e6, allow_nan=False), min_size=1,
+                     max_size=100))
+def test_store_roundtrip(data):
+    store = InMemoryStore()
+    arr = np.asarray(data, np.float32)
+    store.put("k", arr)
+    out = store.get("k")
+    np.testing.assert_array_equal(arr, out)
+
+
+def test_store_blocking_get():
+    store = InMemoryStore()
+    result = {}
+
+    def reader():
+        result["v"] = store.get("late", timeout=5.0)
+
+    t = threading.Thread(target=reader)
+    t.start()
+    store.put("late", np.arange(4))
+    t.join(timeout=5)
+    np.testing.assert_array_equal(result["v"], np.arange(4))
+
+
+# ---------------------------------------------------------------------------
+# 8-bit optimizer-state quantization: bounded relative error, shape-preserving
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    shape=st.sampled_from([(7,), (4, 128), (3, 5, 256), (2, 130)]),
+    scale=st.floats(1e-6, 1e3),
+)
+def test_quantization_error_bound(shape, scale):
+    rng = np.random.RandomState(0)
+    x = (rng.randn(*shape) * scale).astype(np.float32)
+    q, s = quantize_signed(x)
+    assert q.shape == x.shape
+    back = np.asarray(dequantize_signed(q, s))
+    # blockwise absmax quantization: error <= blockmax/254 per element
+    err = np.abs(back - x)
+    assert err.max() <= np.abs(x).max() / 254 + 1e-6
+
+    xp = np.abs(x)
+    q2, s2 = quantize_unsigned(xp)
+    back2 = np.asarray(dequantize_unsigned(q2, s2))
+    assert np.abs(back2 - xp).max() <= xp.max() / 510 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Event-log invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.booleans()),
+                min_size=1, max_size=40))
+def test_hw_bounded_by_distinct_types(transitions):
+    from repro.core.events import EventLog
+
+    log = EventLog()
+    open_tasks = {}
+    uid = 0
+    types = set()
+    for ttype_i, close in transitions:
+        tt = f"type{ttype_i}"
+        types.add(tt)
+        if close and open_tasks:
+            k, v = open_tasks.popitem()
+            log.emit(k, "DONE", v)
+        else:
+            name = f"t{uid}"
+            uid += 1
+            log.emit(name, "RUNNING", tt)
+            open_tasks[name] = tt
+    for k, v in open_tasks.items():
+        log.emit(k, "DONE", v)
+    assert log.peak_hw() <= len(types)
