@@ -1,9 +1,10 @@
 """Experiment 3 (Fig. 5a,b): inference-at-scale baseline scalability.
 
-Proportionally grows nodes / service instances / clients (paper: 1/1/10 ->
-8/8/80; here scaled to the host) with homogeneous prompts, measuring
-aggregate token throughput and engine utilization (the GPU-utilization
-analogue: fraction of decode-slot-steps occupied).
+Proportionally grows replicas / clients (paper: 1/1/10 -> 8/8/80; here
+scaled to the host) with homogeneous prompts, measuring aggregate token
+throughput and engine utilization (the GPU-utilization analogue: fraction
+of decode-slot-steps occupied).  One service name, N replicas: clients all
+hit the same replica set and the shared router spreads them.
 """
 from __future__ import annotations
 
@@ -11,8 +12,8 @@ import threading
 import time
 
 from repro.configs import get_config
-from repro.core import (ResourceDescription, Rhapsody, ServiceDescription,
-                        TaskDescription, TaskKind)
+from repro.core import (ExecutionPolicy, ResourceDescription, Rhapsody,
+                        ServiceDescription)
 from repro.serving.client import llm_service_factory
 
 from .common import Reporter
@@ -24,54 +25,51 @@ def engine_cfg():
         d_ff=128, vocab=512)
 
 
-def run_config(n_services: int, clients_per_service: int,
+def run_config(n_replicas: int, clients_per_replica: int,
                reqs_per_client: int = 8, prompt_len: int = 12,
                new_tokens: int = 8) -> dict:
     cfg = engine_cfg()
-    rh = Rhapsody(ResourceDescription(nodes=n_services, cores_per_node=16),
+    rh = Rhapsody(ResourceDescription(nodes=n_replicas, cores_per_node=16),
+                  policy=ExecutionPolicy(routing="least_loaded"),
                   n_workers=2)
     try:
-        eps = []
-        for i in range(n_services):
-            eps.append(rh.add_service(ServiceDescription(
-                name=f"llm{i}",
-                factory=llm_service_factory(
-                    cfg, max_num_seqs=4, max_len=64,
-                    prefill_buckets=(16,), seed=i),
-            )))
+        replica_set = rh.add_service(ServiceDescription(
+            name="llm", replicas=n_replicas,
+            factory=llm_service_factory(
+                cfg, max_num_seqs=4, max_len=64, prefill_buckets=(16,))))
         results = []
         lock = threading.Lock()
 
-        def client(cid: int):
-            ep = eps[cid % n_services]
-            futs = [ep.request({"prompt": [7] * prompt_len,
-                                "max_new_tokens": new_tokens})
+        def client():
+            futs = [replica_set.request({"prompt": [7] * prompt_len,
+                                         "max_new_tokens": new_tokens})
                     for _ in range(reqs_per_client)]
             out = [f.result(timeout=600) for f in futs]
             with lock:
                 results.extend(out)
 
-        n_clients = n_services * clients_per_service
+        n_clients = n_replicas * clients_per_replica
         t0 = time.perf_counter()
-        threads = [threading.Thread(target=client, args=(c,))
-                   for c in range(n_clients)]
+        threads = [threading.Thread(target=client)
+                   for _ in range(n_clients)]
         for t in threads:
             t.start()
         for t in threads:
             t.join()
         dt = time.perf_counter() - t0
         total_tokens = sum(len(r["tokens"]) + r["n_prompt"] for r in results)
-        utils = []
-        for i in range(n_services):
-            inst = rh.services.instances[f"llm{i}"]
-            utils.append(inst.servicer.stats.utilization)
+        utils = [inst.servicer.stats.utilization
+                 for inst in replica_set.instances]
+        stats = replica_set.stats()
         return {
-            "services": n_services,
+            "replicas": n_replicas,
             "clients": n_clients,
             "requests": len(results),
             "seconds": dt,
             "tokens_per_s": total_tokens / dt,
             "utilization": sum(utils) / len(utils),
+            "per_replica_requests": [p["requests"]
+                                     for p in stats["per_replica"]],
         }
     finally:
         rh.close()
@@ -79,10 +77,10 @@ def run_config(n_services: int, clients_per_service: int,
 
 def main(rep: Reporter, *, configs=((1, 2), (2, 2), (4, 2))) -> dict:
     out = []
-    for n_services, cpc in configs:
-        r = run_config(n_services, cpc)
+    for n_replicas, cpc in configs:
+        r = run_config(n_replicas, cpc)
         out.append(r)
-        rep.add(f"exp3_infer_s{n_services}",
+        rep.add(f"exp3_infer_s{n_replicas}",
                 1e6 * r["seconds"] / max(1, r["requests"]),
                 f"{r['tokens_per_s']:.0f} tok/s util={r['utilization']:.2f} "
                 f"clients={r['clients']}")

@@ -3,19 +3,29 @@
 (c) throughput vs ``max_num_seqs`` x ``max_num_batched_tokens`` on a fixed
 prompt subset — the paper finds max_num_seqs dominates.
 (d) strong scaling of a fixed heterogeneous prompt set (lognormal lengths,
-the 4k-50k-token LUCID analogue scaled down) across 1-4 service instances
-under randomized vs token-aware balanced routing.
+the 4k-50k-token LUCID analogue scaled down) across 1-4 replicas of ONE
+service under randomized vs token-aware balanced routing, all dispatched
+through the middleware router (INFERENCE tasks, not pinned endpoints).
+
+CLI replica sweep (synthetic servicer, isolates routing + replication from
+model compute)::
+
+    PYTHONPATH=src python -m benchmarks.bench_routing --replicas 1 2 4
+
+reports aggregate and per-replica throughput plus p50/p95/p99 latency per
+replica count — the Fig 5d shape: near-linear aggregate scaling.
 """
 from __future__ import annotations
 
-import threading
+import argparse
 import time
 
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import ResourceDescription, Rhapsody, ServiceDescription
-from repro.core.router import make_router
+from repro.core import (ExecutionPolicy, ResourceDescription, Rhapsody,
+                        ServiceDescription, TaskDescription, TaskKind)
+from repro.core.router import ROUTERS
 from repro.serving.client import llm_service_factory
 
 from .common import Reporter
@@ -71,46 +81,43 @@ def sweep_batching(rep: Reporter, *, n_prompts: int = 24) -> list:
 
 
 # ---------------------------------------------------------------------------
-# (d) routing policy strong scaling
+# (d) routing policy strong scaling — one replicated service, middleware
+#     router on the dispatch path
 # ---------------------------------------------------------------------------
 
 
-def routed_run(n_services: int, policy: str, prompts) -> dict:
+def routed_run(n_replicas: int, policy: str, prompts) -> dict:
     cfg = engine_cfg()
-    rh = Rhapsody(ResourceDescription(nodes=n_services, cores_per_node=8),
+    rh = Rhapsody(ResourceDescription(nodes=1,
+                                      cores_per_node=max(8, len(prompts))),
+                  policy=ExecutionPolicy(routing=policy),
                   n_workers=1)
     try:
-        eps = [rh.add_service(ServiceDescription(
-            name=f"llm{i}", factory=llm_service_factory(
+        replica_set = rh.add_service(ServiceDescription(
+            name="llm", replicas=n_replicas,
+            factory=llm_service_factory(
                 cfg, max_num_seqs=4, max_len=128,
-                prefill_buckets=(32, 64, 128), seed=i)))
-            for i in range(n_services)]
-        router = make_router(policy)
-        assign = router.assign(prompts, n_services, cost=len)
-        results = []
-        lock = threading.Lock()
-
-        def feed(si: int):
-            futs = [eps[si].request({"prompt": prompts[i],
-                                     "max_new_tokens": 8})
-                    for i in assign[si]]
-            out = [f.result(timeout=600) for f in futs]
-            with lock:
-                results.extend(out)
-
+                prefill_buckets=(32, 64, 128))))
+        descs = [TaskDescription(kind=TaskKind.INFERENCE, service="llm",
+                                 payload={"prompt": p, "max_new_tokens": 8},
+                                 task_type="inference")
+                 for p in prompts]
         t0 = time.perf_counter()
-        th = [threading.Thread(target=feed, args=(s,))
-              for s in range(n_services)]
-        for t in th:
-            t.start()
-        for t in th:
-            t.join()
+        uids = rh.submit(descs)
+        if not rh.wait(uids, timeout=600):
+            raise TimeoutError("inference stream timed out")
         dt = time.perf_counter() - t0
+        results = [rh.result(u) for u in uids]
         tokens = sum(len(r["tokens"]) + r["n_prompt"] for r in results)
-        loads = [sum(len(prompts[i]) for i in a) for a in assign]
-        return {"services": n_services, "policy": policy, "seconds": dt,
+        stats = replica_set.stats()
+        per = [p["requests"] for p in stats["per_replica"]]
+        # Fig 5d compares TOKEN-load spread (balanced routing equalizes
+        # cost, not request count — one huge prompt offsets many small)
+        loads = [p["cost"] for p in stats["per_replica"]]
+        return {"replicas": n_replicas, "policy": policy, "seconds": dt,
                 "tokens_per_s": tokens / dt,
-                "load_imbalance": max(loads) / max(1, min(loads))}
+                "per_replica_requests": per,
+                "load_imbalance": max(loads) / max(1.0, min(loads))}
     finally:
         rh.close()
 
@@ -131,5 +138,90 @@ def main(rep: Reporter, *, n_prompts: int = 24,
     return {"sensitivity": sens, "scaling": scaling}
 
 
+# ---------------------------------------------------------------------------
+# Replica scaling sweep with a synthetic servicer (Fig 5d shape without
+# model compute): aggregate + per-replica throughput, tail latency
+# ---------------------------------------------------------------------------
+
+
+class SyntheticServicer:
+    """Sync servicer that burns wall time proportional to prompt tokens —
+    each replica is one serial worker, so N replicas ≈ N-way parallelism."""
+
+    def __init__(self, base_ms: float = 2.0, us_per_token: float = 30.0):
+        self.base_ms = base_ms
+        self.us_per_token = us_per_token
+
+    def handle(self, payload):
+        n = len(payload.get("prompt", ()))
+        time.sleep(self.base_ms * 1e-3 + n * self.us_per_token * 1e-6)
+        return {"n_prompt": n}
+
+
+def replica_sweep(replica_counts, *, n_requests: int = 64,
+                  routing: str = "balanced", seed: int = 3) -> list:
+    prompts = hetero_prompts(n_requests, seed=seed)
+    rows = []
+    for n in replica_counts:
+        n = max(1, n)  # a service always runs at least one replica
+        rh = Rhapsody(
+            ResourceDescription(nodes=1,
+                                cores_per_node=max(8, n_requests)),
+            policy=ExecutionPolicy(routing=routing), n_workers=1)
+        try:
+            replica_set = rh.add_service(ServiceDescription(
+                name="synth", replicas=n, factory=SyntheticServicer))
+            descs = [TaskDescription(
+                kind=TaskKind.INFERENCE, service="synth",
+                payload={"prompt": p}, task_type="synthetic_inference")
+                for p in prompts]
+            t0 = time.perf_counter()
+            uids = rh.submit(descs)
+            if not rh.wait(uids, timeout=600):
+                raise TimeoutError("synthetic stream timed out")
+            dt = time.perf_counter() - t0
+            lats = sorted(rh.tasks[u].duration for u in uids)
+            per = [p["requests"]
+                   for p in replica_set.stats()["per_replica"]]
+            rows.append({
+                "replicas": n, "routing": routing,
+                "requests": n_requests, "seconds": dt,
+                "req_per_s": n_requests / dt,
+                "req_per_s_per_replica": n_requests / dt / n,
+                "p50_ms": lats[len(lats) // 2] * 1e3,
+                "p95_ms": lats[int(len(lats) * 0.95)] * 1e3,
+                "p99_ms": lats[min(len(lats) - 1,
+                                   int(len(lats) * 0.99))] * 1e3,
+                "per_replica_requests": per,
+            })
+        finally:
+            rh.close()
+    return rows
+
+
+def _print_sweep(rows):
+    base = rows[0]["req_per_s"]
+    print("replicas,req_per_s,per_replica_req_per_s,speedup,"
+          "p50_ms,p95_ms,p99_ms,per_replica_requests")
+    for r in rows:
+        print(f"{r['replicas']},{r['req_per_s']:.0f},"
+              f"{r['req_per_s_per_replica']:.0f},"
+              f"{r['req_per_s'] / base:.2f}x,"
+              f"{r['p50_ms']:.1f},{r['p95_ms']:.1f},{r['p99_ms']:.1f},"
+              f"\"{r['per_replica_requests']}\"")
+
+
 if __name__ == "__main__":
-    main(Reporter())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--replicas", type=int, nargs="+", default=None,
+                    help="replica counts for the synthetic scaling sweep, "
+                         "e.g. --replicas 1 2 4")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--routing", default="balanced", choices=tuple(ROUTERS))
+    args = ap.parse_args()
+    if args.replicas:
+        _print_sweep(replica_sweep(args.replicas,
+                                   n_requests=args.requests,
+                                   routing=args.routing))
+    else:
+        main(Reporter())

@@ -1,7 +1,26 @@
 """End-to-end driver: serve a small LM with batched requests (the paper's
-workload kind) — persistent inference services + token-aware routing.
+workload kind) — one replicated inference service + router-driven dispatch.
 
-Run: PYTHONPATH=src python examples/serve_llm.py [--requests 24] [--services 2]
+The service is a single name backed by ``--replicas`` engine replicas; each
+request is submitted as an INFERENCE task and the middleware routes it to a
+replica via ``ExecutionPolicy.routing``:
+
+  * ``random``       — uniform random spread,
+  * ``round_robin``  — cycle through replicas,
+  * ``balanced``     — token-aware: equalize cumulative prompt-token load
+                       AND request count per replica (paper, Fig 5d),
+  * ``least_loaded`` — additionally reads live per-replica queue depth, so
+                       a backed-up replica sheds load.
+
+Replication knobs (see ``repro.core.policy.ExecutionPolicy``):
+``replicas`` sets the default replica count for services that leave
+``ServiceDescription.replicas`` unset; ``autoscale=True`` with
+``autoscale_{min,max}_replicas`` / ``autoscale_{high,low}_depth`` grows and
+shrinks replica sets from sustained per-replica queue depth.  Each replica
+restarts independently on crash; in-flight requests replay on the restarted
+replica.
+
+Run: PYTHONPATH=src python examples/serve_llm.py [--requests 24] [--replicas 2]
 """
 import argparse
 import time
@@ -9,54 +28,58 @@ import time
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import ResourceDescription, Rhapsody, ServiceDescription
-from repro.core.router import make_router
+from repro.core import (ExecutionPolicy, ResourceDescription, Rhapsody,
+                        ServiceDescription, TaskDescription, TaskKind)
+from repro.core.router import ROUTERS
 from repro.serving.client import llm_service_factory
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=24)
-    ap.add_argument("--services", type=int, default=2)
-    ap.add_argument("--routing", default="balanced",
-                    choices=("random", "round_robin", "balanced"))
+    ap.add_argument("--replicas", "--services", dest="replicas", type=int,
+                    default=2)
+    ap.add_argument("--routing", default="balanced", choices=tuple(ROUTERS))
     args = ap.parse_args()
 
     cfg = get_config("rhapsody-demo")
-    rh = Rhapsody(ResourceDescription(nodes=args.services, cores_per_node=8),
+    rh = Rhapsody(ResourceDescription(nodes=args.replicas,
+                                      cores_per_node=16),
+                  policy=ExecutionPolicy(routing=args.routing),
                   n_workers=2)
     try:
-        eps = [rh.add_service(ServiceDescription(
-            name=f"llm{i}", factory=llm_service_factory(
+        replica_set = rh.add_service(ServiceDescription(
+            name="llm", replicas=args.replicas,
+            factory=llm_service_factory(
                 cfg, max_num_seqs=4, max_len=256,
-                prefill_buckets=(32, 64, 128), seed=i)))
-            for i in range(args.services)]
-        print(f"launched {args.services} model services:",
+                prefill_buckets=(32, 64, 128))))
+        print(f"launched llm service x{args.replicas} replicas:",
               rh.services.list())
 
-        # heterogeneous prompt lengths -> token-aware balanced routing
+        # heterogeneous prompt lengths -> token-aware routing matters
         rng = np.random.RandomState(0)
         lens = np.clip(np.exp(rng.normal(3.2, 0.7, args.requests)), 8,
                        120).astype(int)
         prompts = [list(rng.randint(0, cfg.vocab, size=int(L)))
                    for L in lens]
-        router = make_router(args.routing)
-        assign = router.assign(prompts, args.services, cost=len)
-
+        descs = [TaskDescription(kind=TaskKind.INFERENCE, service="llm",
+                                 payload={"prompt": p, "max_new_tokens": 16},
+                                 task_type="inference")
+                 for p in prompts]
         t0 = time.perf_counter()
-        futs = []
-        for si, idxs in enumerate(assign):
-            for i in idxs:
-                futs.append(eps[si].request(
-                    {"prompt": prompts[i], "max_new_tokens": 16}))
-        results = [f.result(timeout=600) for f in futs]
+        uids = rh.submit(descs)
+        if not rh.wait(uids, timeout=600):
+            raise TimeoutError("inference stream timed out")
+        results = [rh.result(u) for u in uids]
         dt = time.perf_counter() - t0
         tokens = sum(len(r["tokens"]) + r["n_prompt"] for r in results)
         ttfts = [r["ttft_s"] for r in results if r["ttft_s"]]
+        per = [p["requests"] for p in replica_set.stats()["per_replica"]]
         print(f"served {len(results)} requests in {dt:.2f}s "
               f"({tokens / dt:.0f} tok/s, routing={args.routing})")
         print(f"mean TTFT {np.mean(ttfts) * 1e3:.0f} ms; "
-              f"p95 latency {np.percentile([r['latency_s'] for r in results], 95):.2f}s")
+              f"p95 latency {np.percentile([r['latency_s'] for r in results], 95):.2f}s; "
+              f"per-replica requests {per}")
     finally:
         rh.close()
 

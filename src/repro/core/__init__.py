@@ -2,13 +2,14 @@
 from .middleware import Rhapsody
 from .policy import ExecutionPolicy
 from .resources import Allocation, Placement, ResourceDescription, partition
-from .service import ServiceDescription, ServiceEndpoint
+from .service import ReplicaSet, ServiceDescription, ServiceEndpoint
 from .task import (ResourceRequirements, Task, TaskDescription, TaskKind,
                    TaskState)
 
 __all__ = [
     "Rhapsody", "ExecutionPolicy", "ResourceDescription", "Allocation",
-    "Placement", "partition", "ServiceDescription", "ServiceEndpoint",
+    "Placement", "partition", "ReplicaSet", "ServiceDescription",
+    "ServiceEndpoint",
     "TaskDescription", "TaskKind", "TaskState", "Task",
     "ResourceRequirements",
 ]

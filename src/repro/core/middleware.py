@@ -20,7 +20,7 @@ from typing import Any, Iterable, Optional, Sequence, Union
 from .events import EventLog
 from .policy import ExecutionPolicy
 from .resources import Allocation, ResourceDescription, partition
-from .router import make_router
+from .router import default_cost, make_router
 from .service import ServiceDescription, ServiceManager
 from .task import Task, TaskDescription, TaskKind, TaskState
 
@@ -50,8 +50,9 @@ class Rhapsody:
             b.start(self._backend_complete)
             if hasattr(b, "on_start"):
                 b.on_start = self._backend_start
-        self.services = ServiceManager(self.policy, self.events)
         self.router = make_router(self.policy.routing)
+        self.services = ServiceManager(self.policy, self.events,
+                                       router=self.router)
 
         self.tasks: dict[str, Task] = {}
         self.ready: deque[Task] = deque()
@@ -126,6 +127,10 @@ class Rhapsody:
         task = self.tasks[uid]
         if task.state == TaskState.FAILED:
             raise task.error
+        if not task.state.terminal:
+            raise TimeoutError(
+                f"task {uid} not finished (state={task.state.value}); "
+                f"wait() for it before reading its result")
         return task.result
 
     def state(self, uid: str) -> TaskState:
@@ -226,18 +231,25 @@ class Rhapsody:
     def _dispatch_inference(self, task: Task):
         desc = task.desc
         try:
-            ep = self.services.get(desc.service)
+            replica_set = self.services.get(desc.service)
+            # the load-balancing spine: every INFERENCE task picks its
+            # replica through the policy router (token-cost + queue-depth
+            # aware), not a fixed endpoint
+            endpoint = replica_set.route(default_cost(desc.payload),
+                                         self.router)
         except KeyError as e:
             self._complete(task, None, e)
             return
         task.state = TaskState.RUNNING
         task.started_at = time.perf_counter()
-        self.events.emit(task.uid, "RUNNING", desc.task_type)
-        fut = ep.request(desc.payload, **desc.metadata)
+        self.events.emit(task.uid, "RUNNING", desc.task_type,
+                         f"replica={endpoint.replica_idx}")
+        fut = endpoint.request(desc.payload, **desc.metadata)
+        timeout = self.policy.inference_timeout_s
 
         def waiter():
             try:
-                self._complete(task, fut.result(timeout=300.0), None)
+                self._complete(task, fut.result(timeout=timeout), None)
             except BaseException as e:  # noqa: BLE001
                 self._complete(task, None, e)
 
@@ -307,7 +319,8 @@ class Rhapsody:
     def _check_stragglers(self):
         now = time.perf_counter()
         with self._lock:
-            for task in self.tasks.values():
+            # snapshot: issuing a twin inserts into self.tasks mid-scan
+            for task in list(self.tasks.values()):
                 if task.state != TaskState.RUNNING:
                     continue
                 if task.desc.metadata.get("_straggler_twin"):
@@ -321,12 +334,21 @@ class Rhapsody:
                 if task.desc.metadata.get("_dup_issued"):
                     continue
                 task.desc.metadata["_dup_issued"] = True
+                # full copy of the description (minus dependencies, which
+                # the running original already resolved): dropping fields
+                # like partition/service/payload would let a twin run on
+                # the wrong partition or lose its inference target
                 clone = TaskDescription(
                     kind=task.desc.kind, fn=task.desc.fn,
                     args=task.desc.args, kwargs=task.desc.kwargs,
                     requirements=task.desc.requirements,
                     task_type=task.desc.task_type,
-                    metadata={"_straggler_twin": True,
+                    service=task.desc.service,
+                    payload=task.desc.payload,
+                    partition=task.desc.partition,
+                    max_retries=task.desc.max_retries,
+                    metadata={**task.desc.metadata,
+                              "_straggler_twin": True,
                               "_original": task.uid},
                 )
                 clone.metadata["_resolve"] = task.uid

@@ -15,13 +15,24 @@ class ExecutionPolicy:
     default_partition: Optional[str] = None
     colocate_coupled: bool = True  # coupled pairs pinned to the same node
     # routing (inference)
-    routing: str = "balanced"  # random | round_robin | balanced
+    routing: str = "balanced"  # random | round_robin | balanced | least_loaded
+    # services: replication + autoscaling
+    replicas: int = 1  # default replica count when a ServiceDescription
+    #                    leaves ``replicas`` unset
+    autoscale: bool = False  # grow/shrink replica sets from queue depth
+    autoscale_min_replicas: int = 1
+    autoscale_max_replicas: int = 4
+    autoscale_high_depth: float = 4.0  # mean outstanding reqs/replica to grow
+    autoscale_low_depth: float = 0.5  # ... below which we shrink
+    autoscale_interval_s: float = 0.05  # sampling period
+    autoscale_sustain: int = 3  # consecutive hot/cold samples before acting
     # fault tolerance
     max_retries: int = 1
     straggler_factor: float = 0.0  # >0: duplicate tasks slower than
     #                                factor x median runtime (first wins)
     straggler_min_samples: int = 10
     # services
+    inference_timeout_s: float = 1200.0  # per-INFERENCE-task result wait
     service_ready_timeout: float = 30.0
     service_heartbeat: float = 5.0
     restart_failed_services: bool = True

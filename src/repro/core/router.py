@@ -1,66 +1,196 @@
-"""Inference request routing across service instances (Exp 4, Fig 5d).
+"""Inference request routing across service replicas (Exp 4, Fig 5d).
 
-``RandomRouter`` assigns requests uniformly at random; the paper's
-``TokenAwareBalancedRouter`` greedily equalizes BOTH request count and
-estimated input-token volume per instance (longest-processing-time-first
-bin packing), which suppresses stragglers under heterogeneous prompt costs.
+Two APIs on every router:
+
+  * ``assign(requests, n_instances, cost)`` — batch: split a known request
+    set into per-instance index lists (offline benchmarks, launchers).
+  * ``pick(cost, n_instances=..., group=...)`` — incremental: route ONE
+    request as it arrives; this is what the middleware dispatch path uses.
+    State is kept per ``group`` (one group per replicated service) so a
+    single shared router instance balances each replica set independently.
+
+``RandomRouter`` assigns uniformly at random; ``RoundRobinRouter`` cycles;
+the paper's ``TokenAwareBalancedRouter`` greedily equalizes BOTH request
+count and estimated input-token volume per instance (longest-processing-
+time-first bin packing in batch mode), which suppresses stragglers under
+heterogeneous prompt costs; ``LeastLoadedRouter`` additionally reads live
+per-replica queue depths so slow or backed-up replicas shed load.
 """
 from __future__ import annotations
 
 import random
+import threading
 from typing import Any, Callable, Optional, Sequence
 
 
+def default_cost(request) -> float:
+    """Estimated cost of one request: its token count when discernible.
+    Dict payloads are costed by their prompt alone — a dict's key count
+    says nothing about the work it requests."""
+    if isinstance(request, dict):
+        prompt = request.get("prompt")
+        if prompt is not None and hasattr(prompt, "__len__"):
+            return float(len(prompt))
+        return 1.0
+    if hasattr(request, "__len__"):
+        return float(len(request))
+    return 1.0
+
+
 class Router:
+    """Base router: per-group incremental state + a generic batch assign.
+
+    Subclasses implement ``_new_state(n)`` and ``_pick(state, cost,
+    queue_depths)``; ``pick`` handles locking, group bookkeeping, and
+    resizing state when a replica set grows or shrinks (autoscaling).
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._groups: dict[str, Any] = {}
+
+    # -- incremental API ----------------------------------------------------
+    def pick(self, cost: float = 1.0, *, n_instances: int,
+             group: str = "default",
+             queue_depths: Optional[Sequence[float]] = None) -> int:
+        """Route one request of estimated ``cost``; returns a replica index."""
+        if n_instances <= 0:
+            raise ValueError("n_instances must be >= 1")
+        if n_instances == 1:
+            return 0
+        with self._lock:
+            state = self._groups.pop(group, None)
+            if state is None or state["n"] != n_instances:
+                state = self._resize(state, n_instances)
+                if len(self._groups) >= 512:  # LRU-evict a group:
+                    # membership-keyed groups (see ReplicaSet.route) churn
+                    # under autoscaling and would otherwise grow unbounded
+                    self._groups.pop(next(iter(self._groups)))
+            # pop + reinsert keeps insertion order = recency order, so
+            # the eviction above drops the least-recently-USED group
+            self._groups[group] = state
+            idx = self._pick(state, cost, queue_depths)
+        return idx
+
+    def reset(self, group: str = "default"):
+        with self._lock:
+            self._groups.pop(group, None)
+
+    # -- batch API ----------------------------------------------------------
+    def _batch_order(self, requests: Sequence, cost: Callable):
+        """Iteration order for batch assign; subclasses may reorder."""
+        return range(len(requests))
+
     def assign(self, requests: Sequence, n_instances: int,
                cost: Optional[Callable] = None) -> list:
         """Return per-instance request index lists."""
+        cost = cost or default_cost
+        out: list = [[] for _ in range(n_instances)]
+        group = object()  # private throwaway group for this batch
+        for i in self._batch_order(requests, cost):
+            out[self.pick(cost(requests[i]), n_instances=n_instances,
+                          group=group)].append(i)
+        self.reset(group)
+        return out
+
+    # -- subclass hooks -----------------------------------------------------
+    def _new_state(self, n: int) -> dict:
+        return {"n": n}
+
+    def _resize(self, state: Optional[dict], n: int) -> dict:
+        """Default: start fresh when the replica count changes."""
+        return self._new_state(n)
+
+    def _pick(self, state: dict, cost: float,
+              queue_depths: Optional[Sequence[float]]) -> int:
         raise NotImplementedError
 
 
 class RandomRouter(Router):
     def __init__(self, seed: int = 0):
+        super().__init__()
         self.rng = random.Random(seed)
 
-    def assign(self, requests, n_instances, cost=None):
-        out = [[] for _ in range(n_instances)]
-        for i in range(len(requests)):
-            out[self.rng.randrange(n_instances)].append(i)
-        return out
+    def _pick(self, state, cost, queue_depths):
+        return self.rng.randrange(state["n"])
 
 
 class RoundRobinRouter(Router):
-    def assign(self, requests, n_instances, cost=None):
-        out = [[] for _ in range(n_instances)]
-        for i in range(len(requests)):
-            out[i % n_instances].append(i)
-        return out
+    def _new_state(self, n):
+        return {"n": n, "i": 0}
+
+    def _resize(self, state, n):
+        fresh = self._new_state(n)
+        if state is not None:  # keep cycling through the new size
+            fresh["i"] = state["i"] % n
+        return fresh
+
+    def _pick(self, state, cost, queue_depths):
+        idx = state["i"] % state["n"]
+        state["i"] = idx + 1
+        return idx
 
 
 class TokenAwareBalancedRouter(Router):
-    """Greedy LPT: sort by estimated token cost desc, place each request on
-    the instance with minimum (load, count) so both token volume and request
-    count stay balanced."""
+    """Greedy balance of BOTH cumulative token load and request count: each
+    request goes to the instance with minimum (load, count).  Batch mode is
+    LPT: sort by estimated token cost descending first."""
 
-    def assign(self, requests, n_instances, cost=None):
-        cost = cost or (lambda r: len(r) if hasattr(r, "__len__") else 1)
-        order = sorted(range(len(requests)),
-                       key=lambda i: -cost(requests[i]))
-        loads = [0.0] * n_instances
-        counts = [0] * n_instances
-        out = [[] for _ in range(n_instances)]
-        for i in order:
-            j = min(range(n_instances), key=lambda k: (loads[k], counts[k]))
-            out[j].append(i)
-            loads[j] += cost(requests[i])
+    def _new_state(self, n):
+        return {"n": n, "loads": [0.0] * n, "counts": [0] * n}
+
+    def _resize(self, state, n):
+        fresh = self._new_state(n)
+        if state is not None:
+            # carry balance history when a FIXED group changes size (the
+            # incremental pick() API contract; the middleware path keys
+            # groups by replica membership, so it starts fresh instead):
+            # new replicas start at the current minimum so they pick up
+            # work immediately without a thundering herd
+            old_n = state["n"]
+            base_l = min(state["loads"]) if old_n else 0.0
+            base_c = min(state["counts"]) if old_n else 0
+            for k in range(n):
+                fresh["loads"][k] = state["loads"][k] if k < old_n else base_l
+                fresh["counts"][k] = (state["counts"][k] if k < old_n
+                                      else base_c)
+        return fresh
+
+    def _pick(self, state, cost, queue_depths):
+        loads, counts = state["loads"], state["counts"]
+        j = min(range(state["n"]), key=lambda k: (loads[k], counts[k]))
+        loads[j] += cost
+        counts[j] += 1
+        return j
+
+    def _batch_order(self, requests, cost):
+        # LPT: place the most expensive requests first
+        return sorted(range(len(requests)), key=lambda i: -cost(requests[i]))
+
+
+class LeastLoadedRouter(TokenAwareBalancedRouter):
+    """Queue-depth-aware: prefer the replica with the shallowest live queue
+    (outstanding requests), breaking ties by cumulative token load.  Falls
+    back to token-aware balancing when no depths are observable (batch
+    mode, or endpoints without stats)."""
+
+    def _pick(self, state, cost, queue_depths):
+        n = state["n"]
+        if queue_depths is not None and len(queue_depths) == n:
+            loads, counts = state["loads"], state["counts"]
+            j = min(range(n),
+                    key=lambda k: (queue_depths[k], loads[k], counts[k]))
+            loads[j] += cost
             counts[j] += 1
-        return out
+            return j
+        return super()._pick(state, cost, queue_depths)
 
 
 ROUTERS = {
     "random": RandomRouter,
     "round_robin": RoundRobinRouter,
     "balanced": TokenAwareBalancedRouter,
+    "least_loaded": LeastLoadedRouter,
 }
 
 

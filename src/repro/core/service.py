@@ -1,10 +1,13 @@
-"""Services as first-class workflow entities (§III-B).
+"""Services as first-class, replicated workflow entities (§III-B, Fig 5d).
 
 A ``ServiceDescription`` declares a factory for a *servicer* — anything with
 ``submit(payload) -> uid`` / ``step() -> [(uid, result)]`` (pumped, e.g. a
-continuous-batching engine) or just ``handle(payload) -> result`` (sync RPC).
-The ``ServiceManager`` owns the lifecycle: launch, readiness, endpoint
-registration/discovery, heartbeat, and restart-on-failure.
+continuous-batching engine) or just ``handle(payload) -> result`` (sync RPC)
+— plus how many replicas to run.  The ``ServiceManager`` owns a *replica
+set* per service name: per-replica ``ServiceInstance`` + ``ServiceEndpoint``,
+aggregated stats, per-replica restart-on-crash, and (optionally) queue-depth
+driven autoscaling within policy bounds.  Requests fan out across replicas
+through the shared router (see ``repro.core.router``).
 """
 from __future__ import annotations
 
@@ -15,17 +18,19 @@ import threading
 import time
 from typing import Any, Callable, Optional
 
+from .router import Router, default_cost, make_router
 from .task import ResourceRequirements
 
 
 @dataclasses.dataclass
 class ServiceDescription:
     name: str
-    factory: Callable[[], Any]  # builds the servicer
+    factory: Callable[[], Any]  # builds one servicer (called per replica)
     requirements: ResourceRequirements = dataclasses.field(
         default_factory=ResourceRequirements)
     ready_timeout: float = 30.0
     partition: Optional[str] = None
+    replicas: Optional[int] = None  # None -> ExecutionPolicy.replicas
 
 
 class _Future:
@@ -56,27 +61,51 @@ class _Future:
 
 
 class ServiceEndpoint:
-    """Client-visible handle; requests are async futures."""
+    """Client-visible handle for ONE replica; requests are async futures."""
 
-    def __init__(self, name: str):
+    def __init__(self, name: str, replica_idx: int = 0):
         self.name = name
+        self.replica_idx = replica_idx
         self.requests: "queue.Queue" = queue.Queue()
         self.ready = threading.Event()
-        self.stats = {"requests": 0, "completed": 0, "errors": 0}
+        self.stats = {"requests": 0, "completed": 0, "errors": 0,
+                      "cost": 0.0}  # routed token-cost (load imbalance)
+        self._stats_lock = threading.Lock()
+        self.retired = False  # set when scaled away / replaced
+        self.on_retired: Optional[Callable] = None  # drains my queue
+
+    def bump(self, key: str, by: int = 1):
+        # stats feed depth(), which drives routing and autoscaling — a
+        # lost += under concurrent clients would skew a control signal
+        with self._stats_lock:
+            self.stats[key] += by
 
     def request(self, payload, **meta) -> _Future:
         fut = _Future()
-        self.stats["requests"] += 1
+        self.bump("requests")
         self.requests.put((payload, meta, fut))
+        # closes the route()/retire race: if this endpoint was retired
+        # between the route decision and the put, hand the queue (which
+        # now holds this request) to the replica set for rerouting
+        if self.retired and self.on_retired is not None:
+            self.on_retired(self)
         return fut
+
+    def depth(self) -> int:
+        """Outstanding requests (queued + in service) — the live load signal
+        the least-loaded router and the autoscaler consume."""
+        s = self.stats
+        return max(0, s["requests"] - s["completed"] - s["errors"])
 
 
 class ServiceInstance(threading.Thread):
-    """Drives one servicer: admits endpoint requests, pumps, resolves."""
+    """Drives one servicer replica: admits endpoint requests, pumps,
+    resolves."""
 
     def __init__(self, desc: ServiceDescription, endpoint: ServiceEndpoint,
                  on_exit: Optional[Callable] = None):
-        super().__init__(name=f"service-{desc.name}", daemon=True)
+        super().__init__(
+            name=f"service-{desc.name}[{endpoint.replica_idx}]", daemon=True)
         self.desc = desc
         self.endpoint = endpoint
         self.alive = True
@@ -84,6 +113,7 @@ class ServiceInstance(threading.Thread):
         self.servicer = None
         self._pending: dict = {}
         self._on_exit = on_exit
+        self._drain = False
         self.error: Optional[BaseException] = None
 
     def run(self):
@@ -93,9 +123,9 @@ class ServiceInstance(threading.Thread):
                 self.servicer.setup()
             self.endpoint.ready.set()
             pumped = hasattr(self.servicer, "step")
-            while self.alive:
+            while self.alive or (self._drain and self._pending):
                 self.last_beat = time.perf_counter()
-                moved = self._admit()
+                moved = self._admit() if self.alive else False
                 if pumped:
                     if self._pending:
                         for uid, result in self.servicer.step() or []:
@@ -117,7 +147,22 @@ class ServiceInstance(threading.Thread):
                     self.endpoint.requests.put((payload, meta, fut))
                 else:
                     fut.set_error(e)
+                    self.endpoint.bump("errors")
+            # same post-put re-check as request(): if this endpoint was
+            # retired while we crashed, hand the replays to the reroute
+            if self.endpoint.retired and self.endpoint.on_retired:
+                self.endpoint.on_retired(self.endpoint)
         finally:
+            if self.error is None:
+                # non-drain stop with work still in flight: fail those
+                # futures now instead of letting clients hit their own
+                # (much longer) timeouts
+                for uid, (fut, payload, meta) in self._pending.items():
+                    if not fut.done():
+                        fut.set_error(RuntimeError(
+                            f"service {self.desc.name} stopped"))
+                        self.endpoint.bump("errors")
+                self._pending.clear()
             if hasattr(self.servicer, "teardown") and self.servicer is not None:
                 try:
                     self.servicer.teardown()
@@ -149,86 +194,565 @@ class ServiceInstance(threading.Thread):
                             (payload, dict(meta, _replays=replays + 1), fut))
                     else:
                         fut.set_error(e)
+                        self.endpoint.bump("errors")
                     raise
                 self._pending[uid] = (fut, payload, meta)
-            else:  # sync RPC servicer
+            else:  # sync RPC servicer (same private-key filter as submit)
+                kw = {k: v for k, v in meta.items()
+                      if not k.startswith("_")}
                 try:
-                    fut.set_result(self.servicer.handle(payload, **meta))
-                    self.endpoint.stats["completed"] += 1
+                    fut.set_result(self.servicer.handle(payload, **kw))
+                    self.endpoint.bump("completed")
                 except BaseException as e:  # noqa: BLE001
                     fut.set_error(e)
-                    self.endpoint.stats["errors"] += 1
+                    self.endpoint.bump("errors")
         return moved
 
     def _resolve(self, uid, result):
         entry = self._pending.pop(uid, None)
         if entry is not None:
             entry[0].set_result(result)
-            self.endpoint.stats["completed"] += 1
+            self.endpoint.bump("completed")
 
     def _drain_finished(self):
         if hasattr(self.servicer, "drain"):
             for uid, result in self.servicer.drain() or []:
                 self._resolve(uid, result)
 
-    def stop(self):
+    def stop(self, drain: bool = False):
+        self._drain = drain
         self.alive = False
 
 
-class ServiceManager:
-    """Launch / discover / monitor / restart services."""
+def _await_ready(inst: ServiceInstance, timeout: float) -> bool:
+    """Wait for a replica to come ready, bailing out as soon as its
+    factory crashes instead of burning the whole timeout."""
+    deadline = time.perf_counter() + timeout
+    while time.perf_counter() < deadline:
+        if inst.endpoint.ready.wait(0.05):
+            return True
+        if inst.error is not None and not inst.is_alive():
+            return False
+    return inst.endpoint.ready.is_set()
 
-    def __init__(self, policy=None, event_log=None):
+
+_replica_set_seq = itertools.count()  # unique per-set id for router group
+#                                       keys (id(self) could be reused by
+#                                       the allocator after a stop/relaunch)
+
+
+class ReplicaSet:
+    """All replicas behind one service name — the unit of scaling.
+
+    Exposes the same ``request()`` surface a single endpoint used to, but
+    routes each request to a replica through the manager's shared router,
+    so existing callers transparently load-balance.
+    """
+
+    def __init__(self, desc: ServiceDescription, manager: "ServiceManager"):
+        self.desc = desc
+        self.manager = manager
+        self.endpoints: list[ServiceEndpoint] = []
+        self.instances: list[ServiceInstance] = []
+        # endpoints retired by scale-down, kept live for stats() so
+        # aggregates survive shrinks (and late drains still count);
+        # bounded: older ones are folded into _retired_agg once their
+        # drains have long finished (autoscale oscillation must not leak)
+        self._retired: list[ServiceEndpoint] = []
+        self._retired_agg = {"requests": 0, "completed": 0, "errors": 0,
+                             "cost": 0.0}
+        self._scaling = False  # an async autoscale grow/shrink in flight
+        self._scale_lock = threading.Lock()  # serializes scale_to callers
+        self._gen = 0  # bumped on every membership change so recurring
+        #                memberships never resume stale router history
+        self._next_idx = 0  # monotonic replica_idx allocator
+        self._uid = next(_replica_set_seq)
+        self._closed = False
+        self._successor: Optional["ReplicaSet"] = None  # set on re-launch
+        self._lock = threading.RLock()
+
+    # -- client surface -----------------------------------------------------
+    @property
+    def name(self) -> str:
+        return self.desc.name
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.endpoints)
+
+    def request(self, payload, **meta) -> _Future:
+        ep = self.route(default_cost(payload), self.manager.router)
+        return ep.request(payload, **meta)
+
+    def route(self, cost: float, router: Router) -> ServiceEndpoint:
+        """Pick the replica endpoint for one request of estimated cost.
+
+        Only READY replicas are candidates: a freshly spawned replica is
+        in ``endpoints`` before its factory finishes, and routing to it
+        would queue work nothing admits yet."""
+        with self._lock:
+            pairs = list(zip(self.endpoints, self.instances))
+            eps = [ep for ep, _ in pairs
+                   if ep.ready.is_set() and not ep.retired]
+            if not eps:
+                # none ready yet (launch/relaunch window): queue on a
+                # replica that is still coming up. A crashed replica
+                # counts only when restarts are enabled (its endpoint
+                # survives the relaunch and the queue is served then);
+                # otherwise the request would sit on a dead queue forever
+                restart = getattr(self.manager.policy,
+                                  "restart_failed_services", False)
+                eps = [ep for ep, inst in pairs
+                       if not ep.retired and (inst.error is None or restart)]
+            successor = self._successor
+        if not eps:
+            if successor is not None:  # name was re-launched; follow it
+                return successor.route(cost, router)
+            raise KeyError(f"service {self.name} has no live replicas")
+        # key router state by generation + candidate MEMBERSHIP, not just
+        # the name: positions in eps shift as replicas crash/recover, and
+        # reusing positional load history across different subsets (or a
+        # recurring subset from before a membership change) would charge
+        # one replica's history to another
+        group = (self.name, self._uid, self._gen) + tuple(
+            ep.replica_idx for ep in eps)
+        idx = router.pick(cost, n_instances=len(eps), group=group,
+                          queue_depths=[ep.depth() for ep in eps])
+        eps[idx].bump("cost", cost)
+        return eps[idx]
+
+    def ready(self) -> bool:
+        with self._lock:
+            eps = list(self.endpoints)
+        return bool(eps) and all(ep.ready.is_set() for ep in eps)
+
+    def stats(self) -> dict:
+        """Aggregate request stats plus the per-replica breakdown."""
+        with self._lock:
+            per = [dict(ep.stats) for ep in self.endpoints]
+            retired = [dict(ep.stats) for ep in self._retired]
+            folded = dict(self._retired_agg)
+        agg = {k: folded[k] + sum(p[k] for p in per)
+               + sum(p[k] for p in retired)
+               for k in ("requests", "completed", "errors", "cost")}
+        agg["replicas"] = len(per)
+        agg["per_replica"] = per
+        return agg
+
+    def mean_depth(self) -> float:
+        with self._lock:
+            eps = list(self.endpoints)
+        if not eps:
+            return 0.0
+        return sum(ep.depth() for ep in eps) / len(eps)
+
+    # -- lifecycle (driven by the manager) ----------------------------------
+    def _spawn(self) -> Optional[ServiceInstance]:
+        """Create + start one replica; caller waits for readiness.
+        Returns None if the set was closed (shutdown raced a grow).
+        Replica indices are monotonic so identities stay unambiguous
+        even after a middle replica is shrunk away."""
+        with self._lock:
+            if self._closed:
+                return None
+            ep = ServiceEndpoint(self.desc.name, self._next_idx)
+            self._next_idx += 1
+            inst = ServiceInstance(self.desc, ep,
+                                   on_exit=self.manager._handle_exit)
+            self.endpoints.append(ep)
+            self.instances.append(inst)
+            self._gen += 1
+        inst.start()
+        return inst
+
+    def _relaunch(self, dead: ServiceInstance):
+        """Restart ONE crashed replica on its existing endpoint (whose queue
+        holds the replayed in-flight requests) without disturbing siblings."""
+        with self._lock:
+            try:
+                idx = self.instances.index(dead)
+            except ValueError:  # already replaced or scaled away
+                return
+            inst = ServiceInstance(self.desc, dead.endpoint,
+                                   on_exit=self.manager._handle_exit)
+            self.instances[idx] = inst
+            self._gen += 1  # recovered replica starts with fresh history
+        inst.start()
+        _await_ready(inst, self.desc.ready_timeout)
+
+    def scale_to(self, n: int, ready_timeout: Optional[float] = None):
+        """Grow or shrink to ``n`` replicas; shrink re-routes queued work."""
+        with self._scale_lock:  # concurrent callers (user + autoscaler)
+            self._scale_to_locked(n, ready_timeout)
+
+    def _scale_to_locked(self, n: int, ready_timeout: Optional[float]):
+        n = max(1, n)
+        timeout = (self.desc.ready_timeout if ready_timeout is None
+                   else ready_timeout)
+        if self.n_replicas < n and not self._closed:
+            # spawn all missing replicas first so factories initialize in
+            # parallel (same pattern as launch()), then await readiness
+            # against a shared deadline
+            spawned = [self._spawn() for _ in range(n - self.n_replicas)]
+            deadline = time.perf_counter() + timeout
+            for inst in spawned:
+                if inst is None:  # set closed while growing
+                    continue
+                remaining = max(0.0, deadline - time.perf_counter())
+                if _await_ready(inst, remaining):
+                    continue
+                # unready replica must not stay in the routing set — yank
+                # it back out and reroute anything that slipped onto its
+                # queue (an autoscale grow degrades to fewer replicas
+                # instead of failing)
+                with self._lock:
+                    popped = inst in self.instances
+                    if popped:
+                        idx = self.instances.index(inst)
+                        self.instances.pop(idx)
+                        self.endpoints.pop(idx)
+                if popped:
+                    inst.endpoint.on_retired = self._reroute
+                    inst.endpoint.retired = True
+                    inst.stop()
+                    self._reroute(inst.endpoint)
+                # not popped: the replica crashed and _relaunch already
+                # replaced it on the same endpoint — leave that recovery
+                # alone (do NOT retire the endpoint out from under it)
+        removed: list[tuple[ServiceInstance, ServiceEndpoint]] = []
+        with self._lock:
+            while len(self.endpoints) > n:
+                # retire the least healthy replica first (crashed, then
+                # unready, then highest index) — shrinking must never take
+                # a healthy replica while leaving a dead one behind
+                idx = min(range(len(self.instances)),
+                          key=lambda i: (self.instances[i].error is None,
+                                         self.endpoints[i].ready.is_set(),
+                                         -i))
+                removed.append((self.instances.pop(idx),
+                                self.endpoints.pop(idx)))
+            if removed:
+                self._gen += 1
+        for inst, ep in removed:
+            # retire BEFORE stopping: a racing route()->request() that
+            # already chose this endpoint will see the flag after its put
+            # and trigger the reroute itself
+            ep.on_retired = self._reroute
+            ep.retired = True
+            inst.stop(drain=True)  # finish in-flight work, admit no more
+        for inst, ep in removed:
+            try:
+                inst.join(timeout=timeout)
+            except RuntimeError:
+                pass  # registered by _relaunch but not yet started
+            self._reroute(ep)
+            # keep the retired endpoint for stats(): a drain that outlives
+            # the join timeout still lands its completions somewhere visible
+            self._fold_retired([ep])
+
+    def _reroute(self, ep: ServiceEndpoint):
+        """Move requests still queued on a retired endpoint to live ones."""
+        while True:
+            try:
+                payload, meta, fut = ep.requests.get_nowait()
+            except queue.Empty:
+                return
+            # the request is leaving this endpoint: un-count it so the
+            # retired replica's folded stats don't double-count it with
+            # the target's own increment (route() re-adds cost there)
+            ep.bump("requests", -1)
+            ep.bump("cost", -default_cost(payload))
+            try:
+                target = self.route(default_cost(payload),
+                                    self.manager.router)
+            except KeyError:
+                # keep the request accounted where it died so stats()
+                # still balances (requests = completed + errors + depth)
+                ep.bump("requests", 1)
+                ep.bump("cost", default_cost(payload))
+                ep.bump("errors")
+                fut.set_error(RuntimeError(
+                    f"service {self.name} scaled to zero"))
+                continue
+            target.bump("requests")
+            target.requests.put((payload, meta, fut))
+            # same post-put re-check as request(): the target may have
+            # been retired between route() and the put
+            if target.retired and target.on_retired is not None:
+                target.on_retired(target)
+
+    def _retire_all(self, drain: bool, sink: Callable, join_timeout: float):
+        """Shared teardown: close the set, retire every endpoint (so a
+        racing post-put re-check routes to ``sink``), stop + join the
+        instances, then drain each queue into ``sink``."""
+        with self._lock:
+            self._closed = True  # a racing scale_to grow must not respawn
+            instances = list(self.instances)
+            endpoints = list(self.endpoints)
+            self.instances.clear()
+            self.endpoints.clear()
+        for ep in endpoints:
+            ep.on_retired = sink
+            ep.retired = True
+        for inst in instances:
+            inst.stop(drain=drain)
+        for inst in instances:
+            try:
+                inst.join(timeout=join_timeout)
+            except RuntimeError:
+                pass  # registered by _relaunch but not yet started
+        for ep in endpoints:
+            sink(ep)
+        # preserve served-request history on the old handle, same as the
+        # scale-down path does
+        self._fold_retired(endpoints)
+
+    def _fold_retired(self, endpoints):
+        """Track retired endpoints for stats(), folding the oldest (whose
+        drains have long finished) into a flat aggregate so churn stays
+        bounded."""
+        with self._lock:
+            self._retired.extend(endpoints)
+            while len(self._retired) > 8:
+                if self._retired[0].depth() > 0:
+                    break  # drain still landing completions; keep it live
+                old = self._retired.pop(0)
+                for k in self._retired_agg:
+                    self._retired_agg[k] += old.stats[k]
+
+    def _stop_all(self, join_timeout: float = 2.0):
+        # queued futures fail fast instead of hanging to client timeouts
+        self._retire_all(False, self._fail_queue, join_timeout)
+
+    def _fail_queue(self, ep: ServiceEndpoint):
+        err = RuntimeError(f"service {self.name} stopped")
+        while True:
+            try:
+                _, _, fut = ep.requests.get_nowait()
+            except queue.Empty:
+                return
+            fut.set_error(err)
+            ep.bump("errors")
+
+    def _drain_into(self, other: "ReplicaSet", join_timeout: float = 5.0):
+        """Retire this whole set, moving queued work to ``other`` — used
+        when a service name is re-launched so outstanding futures are
+        served by the new replicas instead of hanging."""
+        with self._lock:
+            self._successor = other  # stale handles keep routing
+        self._retire_all(True, other._reroute, join_timeout)
+
+
+class ServiceManager:
+    """Launch / discover / monitor / restart / scale replicated services."""
+
+    def __init__(self, policy=None, event_log=None,
+                 router: Optional[Router] = None):
         self.policy = policy
         self.events = event_log
-        self.instances: dict[str, ServiceInstance] = {}
-        self.endpoints: dict[str, ServiceEndpoint] = {}
+        self.replica_sets: dict[str, ReplicaSet] = {}
+        self.router = router or make_router(
+            getattr(policy, "routing", None) or "round_robin")
         self._lock = threading.Lock()
+        self._autoscaler: Optional[threading.Thread] = None
+        self._autoscale_stop = threading.Event()
 
-    def launch(self, desc: ServiceDescription) -> ServiceEndpoint:
+    # -- back-compat views --------------------------------------------------
+    @property
+    def instances(self) -> dict:
+        """name -> primary (replica 0) instance, as before replication."""
+        out = {}
+        for name, rs in list(self.replica_sets.items()):  # snapshot vs
+            insts = list(rs.instances)  # concurrent launch/stop
+            if insts:
+                out[name] = insts[0]
+        return out
+
+    @property
+    def endpoints(self) -> dict:
+        """name -> replica set (request()-compatible with the old endpoint)."""
+        return dict(self.replica_sets)
+
+    # -- lifecycle ----------------------------------------------------------
+    def launch(self, desc: ServiceDescription) -> ReplicaSet:
+        n = max(1, desc.replicas or getattr(self.policy, "replicas", 1)
+                or 1)  # same clamp as scale_to: a set always has >=1
+        rs = ReplicaSet(desc, self)
+        deadline = time.perf_counter() + desc.ready_timeout
+        try:
+            # spawn all replicas first so factories initialize in parallel
+            # (each is its own thread); THEN wait — the shared deadline is
+            # per set, not per serially-started replica
+            insts = [rs._spawn() for _ in range(n)]
+            for i, inst in enumerate(insts):
+                remaining = deadline - time.perf_counter()
+                if inst is None or not _await_ready(inst,
+                                                    max(0.0, remaining)):
+                    err = inst.error if inst is not None else None
+                    raise TimeoutError(
+                        f"service {desc.name} replica {i} not ready"
+                        + (f" (factory failed: {err!r})" if err else ""))
+        except BaseException:
+            # the set was never registered, so nothing could have routed
+            # to it — tear it down; a live old set keeps serving untouched
+            rs._stop_all()
+            raise
+        # register only once fully ready: during the spawn window the old
+        # set (if any) keeps serving, and dispatch never sees a set whose
+        # endpoints nothing admits yet
         with self._lock:
-            ep = self.endpoints.get(desc.name) or ServiceEndpoint(desc.name)
-            self.endpoints[desc.name] = ep
-            inst = ServiceInstance(desc, ep, on_exit=self._handle_exit)
-            self.instances[desc.name] = inst
-            inst.start()
-        if not ep.ready.wait(desc.ready_timeout):
-            raise TimeoutError(f"service {desc.name} not ready")
+            old = self.replica_sets.get(desc.name)
+            self.replica_sets[desc.name] = rs
+        if old is not None:
+            # re-launch of a live name: finish the old set's in-flight
+            # work and hand its queued requests to the new replicas
+            old._drain_into(rs)
         if self.events:
             self.events.emit(desc.name, "RUNNING", "service", "service_up")
-        return ep
+        self._maybe_start_autoscaler()
+        return rs
 
-    def get(self, name: str) -> ServiceEndpoint:
-        ep = self.endpoints.get(name)
-        if ep is None:
+    def get(self, name: str) -> ReplicaSet:
+        rs = self.replica_sets.get(name)
+        if rs is None:
             raise KeyError(f"unknown service {name}")
-        return ep
+        return rs
 
     def list(self):
-        return {n: ("ready" if ep.ready.is_set() else "down")
-                for n, ep in self.endpoints.items()}
+        """name -> 'ready' (all replicas up) | 'degraded' (some up, e.g.
+        mid scale-up warm-up or crash-restart) | 'down' (none serving)."""
+        out = {}
+        for n, rs in list(self.replica_sets.items()):  # snapshot: launch()
+            # on another thread may insert while we iterate
+            if rs.ready():
+                out[n] = "ready"
+            elif any(ep.ready.is_set() for ep in list(rs.endpoints)):
+                out[n] = "degraded"
+            else:
+                out[n] = "down"
+        return out
+
+    def stats(self, name: str) -> dict:
+        return self.get(name).stats()
 
     def stop(self, name: str):
-        inst = self.instances.pop(name, None)
-        if inst:
-            inst.stop()
-            inst.join(timeout=2.0)
+        with self._lock:
+            rs = self.replica_sets.pop(name, None)
+        if rs is not None:
+            rs._stop_all()
         if self.events:
             self.events.emit(name, "DONE", "service", "service_down")
 
     def stop_all(self):
-        for name in list(self.instances):
+        self._autoscale_stop.set()
+        with self._lock:
+            scaler = self._autoscaler
+            self._autoscaler = None  # a later launch() may start a new one
+        if scaler is not None:
+            scaler.join(timeout=2.0)
+        for name in list(self.replica_sets):
             self.stop(name)
 
     def _handle_exit(self, inst: ServiceInstance):
         if inst.error is None or not inst.alive:
-            return  # clean shutdown
+            return  # clean shutdown (stop/scale-down)
         if self.events:
             self.events.emit(inst.desc.name, "FAILED", "service",
                              "service_crash")
+        rs = self.replica_sets.get(inst.desc.name)
+        if rs is None:
+            return
         if self.policy is not None and getattr(
                 self.policy, "restart_failed_services", False):
             try:
-                self.launch(inst.desc)
+                rs._relaunch(inst)
             except Exception:
                 pass
+        else:
+            # no restart is coming: nothing will ever drain this dead
+            # replica's queue (including crash-replayed in-flight
+            # requests), so fail those futures now instead of letting
+            # clients hang to their own timeouts
+            inst.endpoint.on_retired = rs._fail_queue
+            inst.endpoint.retired = True
+            rs._fail_queue(inst.endpoint)
+
+    # -- autoscaling --------------------------------------------------------
+    def _maybe_start_autoscaler(self):
+        pol = self.policy
+        if pol is None or not getattr(pol, "autoscale", False):
+            return
+        with self._lock:
+            if self._autoscaler is not None:
+                return
+            self._autoscale_stop.clear()
+            self._autoscaler = threading.Thread(
+                target=self._autoscale_loop, name="service-autoscaler",
+                daemon=True)
+            self._autoscaler.start()
+
+    def _autoscale_loop(self):
+        """Grow a replica set whose per-replica queue depth stays above the
+        high-water mark for ``autoscale_sustain`` consecutive intervals;
+        shrink when it stays below the low-water mark.  Bounded by
+        [autoscale_min_replicas, autoscale_max_replicas]."""
+        pol = self.policy
+        hot: dict[str, int] = {}
+        cold: dict[str, int] = {}
+        while not self._autoscale_stop.wait(pol.autoscale_interval_s):
+            try:
+                self._autoscale_tick(pol, hot, cold)
+            except Exception as e:
+                # one bad tick (e.g. a scale racing shutdown) must not
+                # kill autoscaling for the rest of the process — but a
+                # persistently failing tick must be visible to operators
+                if self.events:
+                    self.events.emit("autoscaler", "FAILED", "service",
+                                     f"tick_error={e!r}")
+
+    def _autoscale_tick(self, pol, hot, cold):
+        for d in (hot, cold):  # drop counters for stopped service names
+            for k in list(d):
+                if k not in self.replica_sets:
+                    del d[k]
+        for name, rs in list(self.replica_sets.items()):
+            if rs._scaling:  # previous grow/shrink still in flight
+                continue
+            n = rs.n_replicas
+            depth = rs.mean_depth()
+            if depth > pol.autoscale_high_depth and \
+                    n < pol.autoscale_max_replicas:
+                hot[name] = hot.get(name, 0) + 1
+                cold[name] = 0
+                if hot[name] >= pol.autoscale_sustain:
+                    hot[name] = 0
+                    self._scale_async(name, rs, n, n + 1, "SCALE_UP")
+            elif depth < pol.autoscale_low_depth and \
+                    n > pol.autoscale_min_replicas:
+                cold[name] = cold.get(name, 0) + 1
+                hot[name] = 0
+                if cold[name] >= pol.autoscale_sustain:
+                    cold[name] = 0
+                    self._scale_async(name, rs, n, n - 1, "SCALE_DOWN")
+            else:
+                hot[name] = 0
+                cold[name] = 0
+
+    def _scale_async(self, name, rs, n_before, n_target, tag):
+        """Run one scaling action off the control loop: a slow replica
+        factory must not stall sampling for every other service."""
+        rs._scaling = True
+
+        def work():
+            try:
+                rs.scale_to(n_target)
+                # emit what actually happened: a grow can degrade if the
+                # new replica misses its ready timeout
+                if self.events and rs.n_replicas != n_before:
+                    self.events.emit(name, tag, "service",
+                                     f"replicas={rs.n_replicas}")
+            finally:
+                rs._scaling = False
+
+        threading.Thread(target=work, name=f"scale-{name}",
+                         daemon=True).start()

@@ -1,9 +1,11 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Brings up N inference services through the RHAPSODY middleware, routes a
-synthetic request stream (token-aware balanced routing by default), and
-reports throughput/latency/utilization — the runnable end of the
-inference-at-scale path the dry-run lowers at production shapes.
+Brings up ONE replicated inference service (``--replicas N``) through the
+RHAPSODY middleware and drives a synthetic request stream as INFERENCE
+tasks, so every request is routed to a replica by the policy router
+(``--routing``: random | round_robin | balanced | least_loaded).  Reports
+aggregate + per-replica throughput, latency, and utilization — the runnable
+end of the inference-at-scale path the dry-run lowers at production shapes.
 """
 from __future__ import annotations
 
@@ -13,8 +15,9 @@ import time
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config, list_archs
-from repro.core import ResourceDescription, Rhapsody, ServiceDescription
-from repro.core.router import make_router
+from repro.core import (ExecutionPolicy, ResourceDescription, Rhapsody,
+                        ServiceDescription, TaskDescription, TaskKind)
+from repro.core.router import ROUTERS
 from repro.serving.client import llm_service_factory
 
 
@@ -23,31 +26,33 @@ def main():
     ap.add_argument("--arch", default="rhapsody-demo",
                     choices=list_archs() + ["rhapsody-demo"])
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--services", type=int, default=2)
+    ap.add_argument("--replicas", "--services", dest="replicas", type=int,
+                    default=2, help="service replica count (scaling unit)")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--max-num-seqs", type=int, default=4)
     ap.add_argument("--max-num-batched-tokens", type=int, default=512)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--routing", default="balanced",
-                    choices=("random", "round_robin", "balanced"))
+                    choices=tuple(ROUTERS))
     args = ap.parse_args()
 
     cfg = (get_smoke_config(args.arch)
            if args.smoke or args.arch != "rhapsody-demo"
            else get_config(args.arch))
-    rh = Rhapsody(ResourceDescription(nodes=args.services, cores_per_node=8),
+    rh = Rhapsody(ResourceDescription(nodes=args.replicas,
+                                      cores_per_node=16),
+                  policy=ExecutionPolicy(routing=args.routing),
                   n_workers=2)
     try:
-        eps = [rh.add_service(ServiceDescription(
-            name=f"llm{i}",
+        replica_set = rh.add_service(ServiceDescription(
+            name="llm", replicas=args.replicas,
             factory=llm_service_factory(
                 cfg, max_num_seqs=args.max_num_seqs,
                 max_num_batched_tokens=args.max_num_batched_tokens,
                 max_len=args.max_len,
-                prefill_buckets=(16, 32, 64), seed=i)))
-            for i in range(args.services)]
-        print(f"[serve] {args.services} x {cfg.name} services ready:",
+                prefill_buckets=(16, 32, 64))))
+        print(f"[serve] {cfg.name} x {args.replicas} replicas ready:",
               rh.services.list())
 
         rng = np.random.RandomState(0)
@@ -55,23 +60,30 @@ def main():
                        args.max_len - args.max_new_tokens - 1).astype(int)
         prompts = [list(rng.randint(0, cfg.vocab, size=int(L)))
                    for L in lens]
-        assign = make_router(args.routing).assign(prompts, args.services,
-                                                  cost=len)
+        descs = [TaskDescription(kind=TaskKind.INFERENCE, service="llm",
+                                 payload={"prompt": p,
+                                          "max_new_tokens":
+                                              args.max_new_tokens},
+                                 task_type="inference")
+                 for p in prompts]
         t0 = time.perf_counter()
-        futs = [(eps[si].request({"prompt": prompts[i],
-                                  "max_new_tokens": args.max_new_tokens}))
-                for si, idxs in enumerate(assign) for i in idxs]
-        results = [f.result(timeout=1200) for f in futs]
+        uids = rh.submit(descs)
+        if not rh.wait(uids, timeout=1200):
+            raise TimeoutError("inference stream timed out")
+        results = [rh.result(u) for u in uids]
         dt = time.perf_counter() - t0
         tokens = sum(len(r["tokens"]) + r["n_prompt"] for r in results)
         lat = sorted(r["latency_s"] for r in results)
-        utils = [rh.services.instances[f"llm{i}"].servicer.stats.utilization
-                 for i in range(args.services)]
+        stats = replica_set.stats()
+        utils = [inst.servicer.stats.utilization
+                 for inst in replica_set.instances]
         print(f"[serve] {len(results)} requests, {dt:.2f}s, "
               f"{tokens / dt:.0f} tok/s, routing={args.routing}")
         print(f"[serve] latency p50 {lat[len(lat) // 2]:.2f}s "
               f"p95 {lat[int(len(lat) * 0.95)]:.2f}s; "
               f"mean slot-utilization {np.mean(utils):.2f}")
+        print("[serve] per-replica requests:",
+              [p["requests"] for p in stats["per_replica"]])
     finally:
         rh.close()
 

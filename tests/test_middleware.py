@@ -157,6 +157,46 @@ def test_straggler_duplication():
         rh.close()
 
 
+def test_straggler_twin_preserves_full_description():
+    """Regression: the straggler twin used to drop partition/service/
+    payload/max_retries, so a twin could run on the wrong partition or
+    lose its inference target."""
+    policy = ExecutionPolicy(straggler_factor=3.0, straggler_min_samples=5)
+    rh = Rhapsody(ResourceDescription(nodes=2, cores_per_node=8),
+                  policy=policy, partitions={"p0": 1, "p1": 1}, n_workers=4)
+    try:
+        fast = [TaskDescription(fn=lambda: time.sleep(0.01),
+                                task_type="work", partition="p1")
+                for _ in range(10)]
+        rh.submit(fast)
+        rh.wait([d.uid for d in fast], timeout=10)
+        hang = threading.Event()
+
+        def straggler():
+            if not hang.is_set():
+                hang.set()
+                time.sleep(1.0)  # 100x median
+            return "s"
+
+        s = TaskDescription(fn=straggler, task_type="work", partition="p1",
+                            max_retries=3, payload={"x": 1})
+        rh.submit(s)
+        rh.wait([s.uid], timeout=10)
+        twins = [t for t in rh.tasks.values()
+                 if t.desc.metadata.get("_straggler_twin")]
+        assert twins, "straggler should have been duplicated"
+        twin = twins[0]
+        # the twin must land on the same partition with the same retry
+        # budget and payload as the original
+        assert twin.desc.partition == "p1"
+        assert twin.desc.max_retries == 3
+        assert twin.desc.payload == {"x": 1}
+        assert twin.desc.service == s.service
+        assert rh.result(s.uid) == "s"
+    finally:
+        rh.close()
+
+
 def test_service_lifecycle_and_restart():
     class Crashy:
         crashes = {"n": 0}

@@ -1,9 +1,16 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+``hypothesis`` is an optional dev dependency: skip the whole module (rather
+than dying at collection) when it isn't installed, so ``pytest -x -q`` stays
+green either way.
+"""
 import threading
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.coupling import InMemoryStore
 from repro.core.resources import Allocation, ResourceDescription

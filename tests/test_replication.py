@@ -1,0 +1,365 @@
+"""Replicated services: router-driven dispatch spread, aggregate stats,
+per-replica restart, scaling, and endpoint lifecycle."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (ExecutionPolicy, ResourceDescription, Rhapsody,
+                        ServiceDescription, TaskDescription, TaskKind)
+
+
+class Echo:
+    def handle(self, payload):
+        time.sleep(0.001)
+        return ("ok", payload)
+
+
+def make_rh(**policy_kw):
+    policy = ExecutionPolicy(**policy_kw)
+    return Rhapsody(ResourceDescription(nodes=2, cores_per_node=16),
+                    policy=policy, n_workers=2)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch path: INFERENCE tasks route through Rhapsody.router
+# ---------------------------------------------------------------------------
+
+
+def test_inference_tasks_spread_across_replicas():
+    """Acceptance: under round_robin with >= 2x replicas requests, every
+    replica receives traffic — proves _dispatch_inference goes through the
+    router, not a fixed endpoint."""
+    rh = make_rh(routing="round_robin")
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=Echo,
+                                               replicas=3))
+        descs = [TaskDescription(kind=TaskKind.INFERENCE, service="svc",
+                                 payload={"prompt": [1] * (i + 1)},
+                                 task_type="inference")
+                 for i in range(12)]
+        uids = rh.submit(descs)
+        assert rh.wait(uids, timeout=20)
+        stats = rs.stats()
+        per = [p["requests"] for p in stats["per_replica"]]
+        assert len(per) == 3
+        assert all(c > 0 for c in per), per
+        assert stats["requests"] == 12
+        assert stats["completed"] == 12
+        assert stats["errors"] == 0
+    finally:
+        rh.close()
+
+
+def test_balanced_routing_spreads_token_load():
+    rh = make_rh(routing="balanced")
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=Echo,
+                                               replicas=2))
+        # one huge prompt + many small ones: token-aware routing must not
+        # pile the small ones onto the replica holding the huge prompt
+        descs = [TaskDescription(kind=TaskKind.INFERENCE, service="svc",
+                                 payload={"prompt": [0] * 500})]
+        descs += [TaskDescription(kind=TaskKind.INFERENCE, service="svc",
+                                  payload={"prompt": [0] * 5})
+                  for _ in range(10)]
+        uids = rh.submit(descs)
+        assert rh.wait(uids, timeout=20)
+        per = [p["requests"] for p in rs.stats()["per_replica"]]
+        assert min(per) >= 1
+        assert max(per) - min(per) >= 5  # small ones went to the other side
+    finally:
+        rh.close()
+
+
+def test_direct_request_also_routes():
+    """ReplicaSet.request() (the legacy endpoint surface) load-balances."""
+    rh = make_rh(routing="round_robin")
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=Echo,
+                                               replicas=2))
+        futs = [rs.request({"prompt": [1]}) for _ in range(8)]
+        for f in futs:
+            f.result(10.0)
+        per = [p["requests"] for p in rs.stats()["per_replica"]]
+        assert per == [4, 4]
+    finally:
+        rh.close()
+
+
+def test_unknown_service_fails_task():
+    rh = make_rh()
+    try:
+        t = TaskDescription(kind=TaskKind.INFERENCE, service="nope",
+                            payload={})
+        rh.submit(t)
+        rh.wait([t.uid], timeout=10)
+        with pytest.raises(KeyError):
+            rh.result(t.uid)
+    finally:
+        rh.close()
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle: per-replica restart, scaling, stop
+# ---------------------------------------------------------------------------
+
+
+class CrashOnceEngine:
+    """Pumped servicer whose first 'boom' submission kills its replica."""
+    crashed = None  # set per-test to a shared dict
+
+    def __init__(self):
+        self.jobs = {}
+        self.uid = 0
+
+    def submit(self, payload):
+        if payload == "boom" and not CrashOnceEngine.crashed["n"]:
+            CrashOnceEngine.crashed["n"] += 1
+            raise SystemError("replica preempted")
+        self.uid += 1
+        self.jobs[self.uid] = payload
+        return self.uid
+
+    def step(self):
+        out = [(u, ("done", p)) for u, p in self.jobs.items()]
+        self.jobs.clear()
+        return out
+
+
+def test_single_replica_crash_restarts_only_that_replica():
+    CrashOnceEngine.crashed = {"n": 0}
+    rh = make_rh(routing="round_robin", restart_failed_services=True)
+    try:
+        rs = rh.add_service(ServiceDescription(name="eng",
+                                               factory=CrashOnceEngine,
+                                               replicas=2))
+        before = list(rs.instances)
+        assert rs.request("fine").result(10.0) == ("done", "fine")
+        # crash one replica; its in-flight request replays after restart
+        assert rs.request("boom").result(15.0) == ("done", "boom")
+        deadline = time.perf_counter() + 10
+        while time.perf_counter() < deadline and not rs.ready():
+            time.sleep(0.01)
+        assert rs.n_replicas == 2
+        assert rs.ready()
+        after = list(rs.instances)
+        # exactly one replica was replaced; its sibling was untouched
+        assert len(set(before) & set(after)) == 1
+        assert len(set(after) - set(before)) == 1
+        # the set keeps serving on both replicas
+        futs = [rs.request(f"r{i}") for i in range(4)]
+        for f in futs:
+            f.result(10.0)
+        per = [p["requests"] for p in rs.stats()["per_replica"]]
+        assert all(c > 0 for c in per)
+    finally:
+        rh.close()
+
+
+def test_dead_service_without_restart_raises_instead_of_hanging():
+    """When every replica has crashed and restarts are disabled, route()
+    must fail fast, not queue onto a dead endpoint forever."""
+
+    class DiesImmediately:
+        def submit(self, payload):
+            raise SystemError("dead on arrival")
+
+        def step(self):
+            return []
+
+    rh = make_rh(restart_failed_services=False)
+    try:
+        rs = rh.add_service(ServiceDescription(name="doomed",
+                                               factory=DiesImmediately))
+        rs.request("boom")  # kills the only replica
+        deadline = time.perf_counter() + 5
+        while time.perf_counter() < deadline and rs.instances[0].error is None:
+            time.sleep(0.01)
+        assert rs.instances[0].error is not None
+        with pytest.raises(KeyError):
+            rs.request("after-death")
+    finally:
+        rh.close()
+
+
+def test_scale_up_and_down_reroutes_work():
+    rh = make_rh(routing="round_robin")
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=Echo,
+                                               replicas=1))
+        rs.scale_to(3)
+        assert rs.n_replicas == 3
+        futs = [rs.request(i) for i in range(9)]
+        for f in futs:
+            f.result(10.0)
+        assert all(p["requests"] > 0
+                   for p in rs.stats()["per_replica"])
+        rs.scale_to(1)
+        assert rs.n_replicas == 1
+        assert rs.request("still-up").result(10.0) == ("ok", "still-up")
+        # aggregate stats survive the shrink: retired replicas' counters
+        # are folded in rather than dropped
+        stats = rs.stats()
+        assert stats["requests"] == 10
+        assert stats["completed"] == 10
+    finally:
+        rh.close()
+
+
+def test_scale_up_with_unready_replica_degrades_gracefully():
+    """A replica whose factory hangs past the ready timeout must not stay
+    in the routing set (requests to it would sit unadmitted)."""
+    calls = {"n": 0}
+
+    class SecondOneHangs:
+        def __init__(self):
+            calls["n"] += 1
+            if calls["n"] > 1:
+                time.sleep(30)
+
+        def handle(self, payload):
+            return "h"
+
+    rh = make_rh(routing="round_robin")
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc",
+                                               factory=SecondOneHangs))
+        rs.scale_to(2, ready_timeout=0.2)
+        assert rs.n_replicas == 1  # grow aborted, set stays consistent
+        futs = [rs.request(i) for i in range(4)]
+        assert all(f.result(10.0) == "h" for f in futs)
+    finally:
+        rh.close()
+
+
+def test_stop_removes_endpoint_and_get_raises():
+    """Regression: stop() used to leave a dead endpoint registered, so
+    get() handed out a handle whose requests hung until timeout."""
+    rh = make_rh()
+    try:
+        rh.add_service(ServiceDescription(name="svc", factory=Echo))
+        assert rh.get_service("svc").request("x").result(10.0) == ("ok", "x")
+        rh.services.stop("svc")
+        with pytest.raises(KeyError):
+            rh.get_service("svc")
+        with pytest.raises(KeyError):
+            rh.services.get("svc")
+    finally:
+        rh.close()
+
+
+def test_sync_servicer_not_passed_private_metadata():
+    """Regression: internal keys (_straggler_twin, _replays, ...) must be
+    stripped before handle(), like the pumped submit path already does —
+    otherwise a straggler twin of an INFERENCE task TypeErrors."""
+    seen = []
+
+    class Strict:
+        def handle(self, payload, **kw):
+            seen.append(kw)
+            return "ok"
+
+    rh = make_rh()
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=Strict))
+        assert rs.request("x", _straggler_twin=True,
+                          visible=1).result(10.0) == "ok"
+        assert seen == [{"visible": 1}]
+    finally:
+        rh.close()
+
+
+def test_relaunch_same_name_serves_outstanding_requests():
+    """Regression: re-launching a live service name must hand queued
+    requests to the new replicas instead of abandoning their futures."""
+    rh = make_rh(routing="round_robin")
+    try:
+        rh.add_service(ServiceDescription(name="svc", factory=Slow))
+        old = rh.get_service("svc")
+        futs = [old.request(i) for i in range(30)]
+        new = rh.add_service(ServiceDescription(name="svc", factory=Echo,
+                                                replicas=2))
+        assert new is not old
+        results = {f.result(30.0) for f in futs}
+        # early requests served by Slow ('z'), drained ones by Echo
+        assert results <= {"z", ("ok", 0)} | {("ok", i) for i in range(30)}
+        assert new.request("after").result(10.0) == ("ok", "after")
+    finally:
+        rh.close()
+
+
+def test_crash_exhausted_replays_count_as_errors():
+    """Regression: futures failed after the replay budget must bump the
+    errors stat, or depth() stays inflated and biases routing forever."""
+
+    class AlwaysCrash:
+        def __init__(self):
+            pass
+
+        def submit(self, payload):
+            raise SystemError("dead on arrival")
+
+        def step(self):
+            return []
+
+    rh = make_rh(restart_failed_services=True)
+    try:
+        rs = rh.add_service(ServiceDescription(name="bad",
+                                               factory=AlwaysCrash))
+        fut = rs.request("x")
+        with pytest.raises(SystemError):
+            fut.result(20.0)
+        deadline = time.perf_counter() + 5
+        ep = rs.endpoints[0]
+        while time.perf_counter() < deadline and ep.depth() > 0:
+            time.sleep(0.01)
+        assert ep.depth() == 0, ep.stats
+    finally:
+        rh.close()
+
+
+def test_policy_default_replicas():
+    rh = make_rh(replicas=2)
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=Echo))
+        assert rs.n_replicas == 2  # picked up from ExecutionPolicy.replicas
+    finally:
+        rh.close()
+
+
+# ---------------------------------------------------------------------------
+# Autoscaling: queue depth grows the set, idleness shrinks it
+# ---------------------------------------------------------------------------
+
+
+class Slow:
+    def handle(self, payload):
+        time.sleep(0.01)
+        return "z"
+
+
+def test_autoscale_grows_and_shrinks():
+    rh = make_rh(routing="least_loaded", autoscale=True,
+                 autoscale_min_replicas=1, autoscale_max_replicas=3,
+                 autoscale_high_depth=2.0, autoscale_low_depth=0.5,
+                 autoscale_interval_s=0.02, autoscale_sustain=2)
+    try:
+        rs = rh.add_service(ServiceDescription(name="slow", factory=Slow))
+        assert rs.n_replicas == 1
+        futs = [rs.request(i) for i in range(150)]
+        deadline = time.perf_counter() + 15
+        while rs.n_replicas < 2 and time.perf_counter() < deadline:
+            time.sleep(0.02)
+        assert rs.n_replicas >= 2, "sustained queue depth must scale up"
+        assert rs.n_replicas <= 3, "bounded by autoscale_max_replicas"
+        for f in futs:
+            f.result(30.0)
+        deadline = time.perf_counter() + 15
+        while rs.n_replicas > 1 and time.perf_counter() < deadline:
+            time.sleep(0.02)
+        assert rs.n_replicas == 1, "idle set must shrink to the minimum"
+        # still serving after all that churn
+        assert rs.request("tail").result(10.0) == "z"
+    finally:
+        rh.close()

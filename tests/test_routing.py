@@ -1,0 +1,142 @@
+"""Router unit tests: balance invariants, determinism, incremental pick()
+API, and the queue-depth-aware least-loaded policy."""
+import pytest
+
+from repro.core.router import (ROUTERS, LeastLoadedRouter, RandomRouter,
+                               RoundRobinRouter, TokenAwareBalancedRouter,
+                               default_cost, make_router)
+
+
+def _requests(lens):
+    return [[0] * L for L in lens]
+
+
+LENS = [3, 50, 7, 120, 1, 44, 9, 80, 80, 2, 17, 61]
+
+
+# ---------------------------------------------------------------------------
+# Batch assign(): exact cover + balance invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", sorted(ROUTERS))
+@pytest.mark.parametrize("n", [1, 2, 3, 5])
+def test_assign_exact_cover(kind, n):
+    reqs = _requests(LENS)
+    assign = make_router(kind).assign(reqs, n, cost=len)
+    assert len(assign) == n
+    flat = sorted(i for a in assign for i in a)
+    assert flat == list(range(len(reqs)))
+
+
+@pytest.mark.parametrize("kind", sorted(ROUTERS))
+def test_assign_empty_requests(kind):
+    assign = make_router(kind).assign([], 3)
+    assert assign == [[], [], []]
+
+
+@pytest.mark.parametrize("kind", sorted(ROUTERS))
+def test_assign_single_instance(kind):
+    reqs = _requests(LENS)
+    assign = make_router(kind).assign(reqs, 1, cost=len)
+    assert len(assign) == 1
+    assert sorted(assign[0]) == list(range(len(reqs)))
+
+
+def test_round_robin_request_count_spread():
+    for n in (2, 3, 4):
+        assign = make_router("round_robin").assign(_requests(LENS), n)
+        counts = [len(a) for a in assign]
+        assert max(counts) - min(counts) <= 1
+
+
+@pytest.mark.parametrize("kind", ["balanced", "least_loaded"])
+def test_balanced_token_load_spread(kind):
+    reqs = _requests(LENS)
+    n = 3
+    assign = make_router(kind).assign(reqs, n, cost=len)
+    loads = [sum(LENS[i] for i in a) for a in assign]
+    counts = [len(a) for a in assign]
+    # LPT guarantee: spread bounded by the single largest item; every
+    # instance gets work when there are enough requests
+    assert max(loads) - min(loads) <= max(LENS)
+    assert min(counts) >= 1
+
+
+def test_random_router_deterministic_under_seed():
+    a = make_router("random", seed=7).assign(_requests(LENS), 4, cost=len)
+    b = make_router("random", seed=7).assign(_requests(LENS), 4, cost=len)
+    c = make_router("random", seed=8).assign(_requests(LENS), 4, cost=len)
+    assert a == b
+    assert a != c  # overwhelmingly likely for 12 requests over 4 instances
+
+
+# ---------------------------------------------------------------------------
+# Incremental pick(): the middleware dispatch API
+# ---------------------------------------------------------------------------
+
+
+def test_pick_round_robin_cycles():
+    r = RoundRobinRouter()
+    picks = [r.pick(n_instances=3, group="g") for _ in range(7)]
+    assert picks == [0, 1, 2, 0, 1, 2, 0]
+
+
+def test_pick_single_instance_is_zero():
+    for kind in sorted(ROUTERS):
+        assert make_router(kind).pick(5.0, n_instances=1) == 0
+
+
+def test_pick_rejects_bad_n():
+    with pytest.raises(ValueError):
+        RoundRobinRouter().pick(n_instances=0)
+
+
+def test_pick_groups_are_independent():
+    r = RoundRobinRouter()
+    assert r.pick(n_instances=2, group="a") == 0
+    assert r.pick(n_instances=2, group="b") == 0
+    assert r.pick(n_instances=2, group="a") == 1
+    assert r.pick(n_instances=2, group="b") == 1
+
+
+def test_pick_balanced_tracks_cumulative_load():
+    r = TokenAwareBalancedRouter()
+    first = r.pick(100.0, n_instances=2, group="g")
+    second = r.pick(1.0, n_instances=2, group="g")
+    assert second != first  # heavy request loads one side; next goes other
+    third = r.pick(1.0, n_instances=2, group="g")
+    assert third == second  # still lighter than the 100-token side
+
+
+def test_pick_resizes_when_replica_count_changes():
+    r = TokenAwareBalancedRouter()
+    for _ in range(6):
+        assert r.pick(1.0, n_instances=2, group="g") in (0, 1)
+    # autoscale grows the set: new replicas must receive traffic
+    picks = [r.pick(1.0, n_instances=4, group="g") for _ in range(8)]
+    assert set(picks) & {2, 3}
+    # ... and shrinking stays in range
+    picks = [r.pick(1.0, n_instances=2, group="g") for _ in range(4)]
+    assert set(picks) <= {0, 1}
+
+
+def test_least_loaded_prefers_shallow_queue():
+    r = LeastLoadedRouter()
+    idx = r.pick(1.0, n_instances=3, group="g", queue_depths=[5, 0, 9])
+    assert idx == 1
+    idx = r.pick(1.0, n_instances=3, group="g", queue_depths=[0, 4, 4])
+    assert idx == 0
+
+
+def test_least_loaded_falls_back_without_depths():
+    r = LeastLoadedRouter()
+    picks = {r.pick(1.0, n_instances=2, group="g") for _ in range(4)}
+    assert picks == {0, 1}  # balanced fallback spreads
+
+
+def test_default_cost_estimates_tokens():
+    assert default_cost({"prompt": [1, 2, 3]}) == 3.0
+    assert default_cost([1] * 7) == 7.0
+    assert default_cost(42) == 1.0
+    assert default_cost({"no_prompt": 1, "two_keys": 2}) == 1.0
