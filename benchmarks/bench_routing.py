@@ -14,6 +14,16 @@ model compute)::
 
 reports aggregate and per-replica throughput plus p50/p95/p99 latency per
 replica count — the Fig 5d shape: near-linear aggregate scaling.
+
+Affinity sweep (``--affinity``): sessioned multi-turn request streams
+(each session's prompt grows turn over turn, the chat pattern) against a
+synthetic servicer whose cost covers only the prompt tokens its replica
+has NOT already served — the KV-reuse cost model.  Compares
+``prefix_affinity`` vs ``least_loaded`` across replica counts on both the
+sessioned stream (hit rate + throughput win) and a uniform stream of
+unrelated prompts (no-regression check)::
+
+    PYTHONPATH=src python -m benchmarks.bench_routing --affinity --replicas 1 2 4
 """
 from __future__ import annotations
 
@@ -199,6 +209,133 @@ def replica_sweep(replica_counts, *, n_requests: int = 64,
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Prefix-affinity sweep: sessioned multi-turn streams, KV-reuse cost model
+# ---------------------------------------------------------------------------
+
+
+class SessionedServicer:
+    """Synthetic engine with per-replica prefix caching: serving a prompt
+    costs wall time only for the tokens this replica has not already
+    served for the same session prefix (the KV-reuse model).  Affinity
+    routing keeps a session on one replica, so its growing prompt re-pays
+    only the new suffix; scattering it re-pays the whole prompt."""
+
+    def __init__(self, base_ms: float = 1.0, us_per_token: float = 60.0):
+        self.base_ms = base_ms
+        self.us_per_token = us_per_token
+        self._seen: dict = {}  # session prefix -> longest prompt len served
+
+    def handle(self, payload):
+        p = payload["prompt"]
+        key = tuple(p[:16])
+        cached = min(self._seen.get(key, 0), len(p))
+        uncached = len(p) - cached
+        time.sleep(self.base_ms * 1e-3 + uncached * self.us_per_token * 1e-6)
+        self._seen[key] = max(self._seen.get(key, 0), len(p))
+        return {"n_prompt": len(p), "uncached": uncached}
+
+
+def sessioned_prompts(n_sessions: int, turns: int, *, prefix_len: int = 32,
+                      turn_len: int = 24, seed: int = 0) -> list:
+    """Per-turn waves of prompts: session s's turn t prompt is its unique
+    base prefix plus t accumulated turn extensions (monotonically growing,
+    like a chat transcript).  Turn lengths are heterogeneous and each
+    wave's arrival order is shuffled — on a perfectly regular stream a
+    load-balancing router stays accidentally sticky (every wave assigns
+    identically), which no production request mix resembles.  Returns
+    ``turns`` lists of ``n_sessions`` prompts."""
+    rng = np.random.RandomState(seed)
+    bases = [list(rng.randint(0, 512, size=prefix_len))
+             for _ in range(n_sessions)]
+    waves = []
+    grown = [list(b) for b in bases]
+    for _ in range(turns):
+        for s in range(n_sessions):
+            ext = rng.randint(max(1, turn_len // 2), 2 * turn_len)
+            grown[s] = grown[s] + list(rng.randint(0, 512, size=ext))
+        wave = [list(g) for g in grown]
+        rng.shuffle(wave)
+        waves.append(wave)
+    return waves
+
+
+def affinity_run(n_replicas: int, policy: str, waves, *,
+                 uniform=None) -> dict:
+    """Drive sessioned turn-waves (and optionally a uniform stream) through
+    the middleware under ``policy``; report hit rate + throughput."""
+    rh = Rhapsody(
+        ResourceDescription(nodes=1, cores_per_node=64),
+        policy=ExecutionPolicy(routing=policy, affinity_spill_factor=4.0),
+        n_workers=1)
+    try:
+        rs = rh.add_service(ServiceDescription(
+            name="sess", replicas=n_replicas, factory=SessionedServicer))
+        prompts = uniform if uniform is not None else None
+        n_requests = 0
+        total_tokens = 0
+        t0 = time.perf_counter()
+        if prompts is not None:  # uniform stream: one wave, no sessions
+            waves = [prompts]
+        for wave in waves:
+            descs = [TaskDescription(kind=TaskKind.INFERENCE, service="sess",
+                                     payload={"prompt": p},
+                                     task_type="sessioned_inference")
+                     for p in wave]
+            uids = rh.submit(descs)
+            if not rh.wait(uids, timeout=600):
+                raise TimeoutError("sessioned stream timed out")
+            n_requests += len(uids)
+            total_tokens += sum(len(p) for p in wave)
+        dt = time.perf_counter() - t0
+        stats = rs.stats()
+        hits, misses = stats["prefix_hits"], stats["prefix_misses"]
+        per = [p["requests"] for p in stats["per_replica"]]
+        return {"replicas": n_replicas, "policy": policy,
+                "requests": n_requests, "seconds": dt,
+                "req_per_s": n_requests / dt,
+                "tok_per_s": total_tokens / dt,
+                "hit_rate": hits / max(1, hits + misses),
+                "per_replica_requests": per}
+    finally:
+        rh.close()
+
+
+def affinity_sweep(replica_counts, *, n_sessions: int = 8, turns: int = 8,
+                   n_uniform: int = 192, seed: int = 0,
+                   repeats: int = 3) -> list:
+    """Each (stream, policy, replicas) cell reports the best of ``repeats``
+    runs: these are sub-second sleep-calibrated microbenchmarks, where OS
+    thread scheduling adds +-30% run-to-run noise that best-of-N removes
+    (the routing decisions themselves are deterministic per run)."""
+    waves = sessioned_prompts(n_sessions, turns, seed=seed)
+    uniform = hetero_prompts(n_uniform, seed=seed + 1, lo=32, hi=224)
+    rows = []
+    for n in replica_counts:
+        n = max(1, n)
+        for policy in ("least_loaded", "prefix_affinity"):
+            r = max((affinity_run(n, policy, waves)
+                     for _ in range(repeats)),
+                    key=lambda x: x["req_per_s"])
+            r["stream"] = "sessioned"
+            rows.append(r)
+            u = max((affinity_run(n, policy, None, uniform=uniform)
+                     for _ in range(repeats)),
+                    key=lambda x: x["req_per_s"])
+            u["stream"] = "uniform"
+            rows.append(u)
+    return rows
+
+
+def _print_affinity(rows):
+    print("stream,replicas,policy,requests,req_per_s,tok_per_s,hit_rate,"
+          "per_replica_requests")
+    for r in rows:
+        print(f"{r['stream']},{r['replicas']},{r['policy']},"
+              f"{r['requests']},{r['req_per_s']:.0f},{r['tok_per_s']:.0f},"
+              f"{r['hit_rate']:.2f},\"{r['per_replica_requests']}\"")
+
+
 def _print_sweep(rows):
     base = rows[0]["req_per_s"]
     print("replicas,req_per_s,per_replica_req_per_s,speedup,"
@@ -218,8 +355,19 @@ if __name__ == "__main__":
                          "e.g. --replicas 1 2 4")
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--routing", default="balanced", choices=tuple(ROUTERS))
+    ap.add_argument("--affinity", action="store_true",
+                    help="prefix-affinity vs least-loaded sweep: sessioned "
+                         "multi-turn + uniform streams, hit rate and "
+                         "throughput per replica count")
+    ap.add_argument("--sessions", type=int, default=8)
+    ap.add_argument("--turns", type=int, default=8)
     args = ap.parse_args()
-    if args.replicas:
+    if args.affinity:
+        _print_affinity(affinity_sweep(args.replicas or (1, 2, 4),
+                                       n_sessions=args.sessions,
+                                       turns=args.turns,
+                                       n_uniform=args.requests))
+    elif args.replicas:
         _print_sweep(replica_sweep(args.replicas,
                                    n_requests=args.requests,
                                    routing=args.routing))

@@ -10,15 +10,27 @@ replica via ``ExecutionPolicy.routing``:
   * ``balanced``     — token-aware: equalize cumulative prompt-token load
                        AND request count per replica (paper, Fig 5d),
   * ``least_loaded`` — additionally reads live per-replica queue depth, so
-                       a backed-up replica sheds load.
+                       a backed-up replica sheds load,
+  * ``prefix_affinity`` — sticky sessions: requests sharing a prompt
+                       prefix (the first ``affinity_prefix_len`` tokens,
+                       hashed) pin to the replica whose engine already
+                       holds the matching KV cache, so multi-turn prompts
+                       skip prefill for the resident prefix; spills to the
+                       least-loaded replica when the sticky one is backed
+                       up past ``affinity_spill_factor``.  Per-replica
+                       ``prefix_hits``/``prefix_misses`` land in
+                       ``ReplicaSet.stats()``.
 
 Replication knobs (see ``repro.core.policy.ExecutionPolicy``):
 ``replicas`` sets the default replica count for services that leave
 ``ServiceDescription.replicas`` unset; ``autoscale=True`` with
 ``autoscale_{min,max}_replicas`` / ``autoscale_{high,low}_depth`` grows and
 shrinks replica sets from sustained per-replica queue depth.  Each replica
-restarts independently on crash; in-flight requests replay on the restarted
-replica.
+restarts independently on crash with exponential backoff
+(``restart_backoff_s`` doubling up to ``restart_backoff_max_s``), giving up
+after ``restart_max_attempts`` consecutive crashes so a broken replica
+degrades the set instead of hot-looping; in-flight requests replay on the
+restarted replica.
 
 Run: PYTHONPATH=src python examples/serve_llm.py [--requests 24] [--replicas 2]
 """
@@ -80,6 +92,12 @@ def main():
         print(f"mean TTFT {np.mean(ttfts) * 1e3:.0f} ms; "
               f"p95 latency {np.percentile([r['latency_s'] for r in results], 95):.2f}s; "
               f"per-replica requests {per}")
+        if args.routing == "prefix_affinity":
+            stats = replica_set.stats()
+            hits, misses = stats["prefix_hits"], stats["prefix_misses"]
+            print(f"prefix-affinity hit rate "
+                  f"{hits / max(1, hits + misses):.2f} "
+                  f"({hits} hits / {misses} misses)")
     finally:
         rh.close()
 

@@ -20,7 +20,7 @@ from typing import Any, Iterable, Optional, Sequence, Union
 from .events import EventLog
 from .policy import ExecutionPolicy
 from .resources import Allocation, ResourceDescription, partition
-from .router import default_cost, make_router
+from .router import default_cost, router_from_policy
 from .service import ServiceDescription, ServiceManager
 from .task import Task, TaskDescription, TaskKind, TaskState
 
@@ -50,7 +50,7 @@ class Rhapsody:
             b.start(self._backend_complete)
             if hasattr(b, "on_start"):
                 b.on_start = self._backend_start
-        self.router = make_router(self.policy.routing)
+        self.router = router_from_policy(self.policy)
         self.services = ServiceManager(self.policy, self.events,
                                        router=self.router)
 
@@ -234,9 +234,12 @@ class Rhapsody:
             replica_set = self.services.get(desc.service)
             # the load-balancing spine: every INFERENCE task picks its
             # replica through the policy router (token-cost + queue-depth
-            # aware), not a fixed endpoint
-            endpoint = replica_set.route(default_cost(desc.payload),
-                                         self.router)
+            # aware), not a fixed endpoint; under prefix_affinity routing
+            # the payload's prompt-prefix signature makes same-session
+            # requests stick to their cache-warm replica
+            endpoint = replica_set.route(
+                default_cost(desc.payload), self.router,
+                affinity_key=self.router.signature(desc.payload))
         except KeyError as e:
             self._complete(task, None, e)
             return

@@ -15,7 +15,14 @@ class ExecutionPolicy:
     default_partition: Optional[str] = None
     colocate_coupled: bool = True  # coupled pairs pinned to the same node
     # routing (inference)
-    routing: str = "balanced"  # random | round_robin | balanced | least_loaded
+    routing: str = "balanced"  # random | round_robin | balanced |
+    #                            least_loaded | prefix_affinity
+    affinity_prefix_len: int = 32  # prompt tokens/chars hashed into the
+    #                                sticky key (prefix_affinity routing)
+    affinity_spill_factor: float = 2.0  # sticky replica sheds when its
+    #                                     queue depth exceeds
+    #                                     factor * (min depth + 1); <=0
+    #                                     disables spilling entirely
     # services: replication + autoscaling
     replicas: int = 1  # default replica count when a ServiceDescription
     #                    leaves ``replicas`` unset
@@ -36,3 +43,11 @@ class ExecutionPolicy:
     service_ready_timeout: float = 30.0
     service_heartbeat: float = 5.0
     restart_failed_services: bool = True
+    restart_backoff_s: float = 0.05  # first relaunch delay after a crash;
+    #                                  doubles per consecutive crash
+    restart_backoff_max_s: float = 2.0  # exponential backoff ceiling; a
+    #                                     replica healthy for 4x this long
+    #                                     earns a fresh restart budget
+    restart_max_attempts: int = 6  # consecutive crash-relaunches before a
+    #                                replica is declared dead (degraded
+    #                                set); <=0 means retry forever

@@ -15,11 +15,22 @@ count and estimated input-token volume per instance (longest-processing-
 time-first bin packing in batch mode), which suppresses stragglers under
 heterogeneous prompt costs; ``LeastLoadedRouter`` additionally reads live
 per-replica queue depths so slow or backed-up replicas shed load.
+
+``PrefixAffinityRouter`` adds KV-cache awareness on top of least-loaded:
+requests carrying the same ``affinity_key`` (a hash of a bounded prompt
+prefix, see ``request_signature``) stick to the replica that served the
+key before — the replica whose KV cache already holds the shared prefix —
+spilling to the least-loaded replica only when the sticky one is backed
+up past ``spill_factor``.  This is the vLLM-prefix-caching / SGLang-
+RadixAttention scheduling insight: affinity beats pure balance once the
+serving side can reuse prefill work (see ``repro.serving.engine``).
 """
 from __future__ import annotations
 
+import hashlib
 import random
 import threading
+from collections import OrderedDict
 from typing import Any, Callable, Optional, Sequence
 
 
@@ -37,27 +48,80 @@ def default_cost(request) -> float:
     return 1.0
 
 
+def request_signature(request, prefix_len: int = 32) -> Optional[int]:
+    """Affinity key for one request: a stable hash of its bounded prompt
+    prefix.  Requests sharing the first ``prefix_len`` prompt tokens (or
+    characters) map to the same key, so a prefix-affinity router can pin
+    them to the replica whose KV cache already holds that prefix.  Dict
+    payloads are keyed by ``payload["prompt"]``; requests with no
+    discernible prompt return ``None`` (no affinity — route by load).
+    """
+    prompt = request.get("prompt") if isinstance(request, dict) else request
+    if prompt is None or prefix_len <= 0:
+        return None
+    if isinstance(prompt, (str, bytes)):
+        prefix = prompt[:prefix_len]
+    else:
+        try:
+            prefix = tuple(prompt[:prefix_len])
+        except TypeError:  # not sliceable (int uid, object payload, ...)
+            return None
+        try:
+            # canonicalize integer token ids: the hash must not depend on
+            # the element type (python int vs numpy scalar) or on numpy's
+            # repr, or value-equal turns of one session would key apart
+            prefix = tuple(x.__index__() for x in prefix)
+        except (AttributeError, TypeError):
+            pass  # non-integer elements: hash their repr as-is
+    # blake2b, not hash(): stable across processes/PYTHONHASHSEED so
+    # offline traces and live routing agree on session identity
+    digest = hashlib.blake2b(repr(prefix).encode(), digest_size=8)
+    return int.from_bytes(digest.digest(), "big")
+
+
 class Router:
     """Base router: per-group incremental state + a generic batch assign.
 
     Subclasses implement ``_new_state(n)`` and ``_pick(state, cost,
     queue_depths)``; ``pick`` handles locking, group bookkeeping, and
     resizing state when a replica set grows or shrinks (autoscaling).
+    Affinity-aware subclasses override ``_pick_affinity`` instead, which
+    additionally sees the request's ``affinity_key`` and may report how
+    the pick was made through the ``info`` out-dict.
     """
+
+    uses_affinity = False  # True -> callers should compute signature()
 
     def __init__(self):
         self._lock = threading.Lock()
         self._groups: dict[str, Any] = {}
 
+    def signature(self, request) -> Optional[int]:
+        """Affinity key for ``request``; None for affinity-blind routers
+        (so callers can pass ``signature(payload)`` unconditionally)."""
+        return None
+
     # -- incremental API ----------------------------------------------------
     def pick(self, cost: float = 1.0, *, n_instances: int,
              group: str = "default",
-             queue_depths: Optional[Sequence[float]] = None) -> int:
-        """Route one request of estimated ``cost``; returns a replica index."""
+             queue_depths: Optional[Sequence[float]] = None,
+             affinity_key: Optional[int] = None,
+             info: Optional[dict] = None) -> int:
+        """Route one request of estimated ``cost``; returns a replica index.
+
+        ``affinity_key`` (see ``request_signature``) lets sticky routers
+        pin requests sharing a prompt prefix to one replica; ``info``, if
+        given, is filled with ``{"affinity": "hit"|"miss"|"spill"}`` so the
+        caller can account KV-reuse without a second lookup.
+        """
         if n_instances <= 0:
             raise ValueError("n_instances must be >= 1")
-        if n_instances == 1:
-            return 0
+        if n_instances == 1 and (affinity_key is None
+                                 or not self.uses_affinity):
+            return 0  # trivial: skip state bookkeeping entirely
+        # keyed picks on an affinity router take the full path even at
+        # n=1, so first contact still counts as a miss and hit rates stay
+        # comparable across replica counts
         with self._lock:
             state = self._groups.pop(group, None)
             if state is None or state["n"] != n_instances:
@@ -69,7 +133,8 @@ class Router:
             # pop + reinsert keeps insertion order = recency order, so
             # the eviction above drops the least-recently-USED group
             self._groups[group] = state
-            idx = self._pick(state, cost, queue_depths)
+            idx = self._pick_affinity(state, cost, queue_depths,
+                                      affinity_key, info)
         return idx
 
     def reset(self, group: str = "default"):
@@ -100,6 +165,13 @@ class Router:
     def _resize(self, state: Optional[dict], n: int) -> dict:
         """Default: start fresh when the replica count changes."""
         return self._new_state(n)
+
+    def _pick_affinity(self, state: dict, cost: float,
+                       queue_depths: Optional[Sequence[float]],
+                       affinity_key: Optional[int],
+                       info: Optional[dict]) -> int:
+        """Affinity-blind default: ignore the key, delegate to ``_pick``."""
+        return self._pick(state, cost, queue_depths)
 
     def _pick(self, state: dict, cost: float,
               queue_depths: Optional[Sequence[float]]) -> int:
@@ -186,13 +258,99 @@ class LeastLoadedRouter(TokenAwareBalancedRouter):
         return super()._pick(state, cost, queue_depths)
 
 
+class PrefixAffinityRouter(LeastLoadedRouter):
+    """Sticky-session routing keyed by prompt-prefix hash (KV-cache reuse).
+
+    Per group, a bounded LRU map ``affinity_key -> replica index`` pins a
+    session (all requests sharing a prompt prefix) to one replica, so the
+    serving engine behind it can skip prefill for the resident prefix.
+    Unkeyed requests and first-seen keys fall through to the least-loaded
+    policy; a sticky replica whose live queue depth exceeds
+    ``spill_factor * (min_depth + 1)`` sheds the request (and re-homes the
+    session) rather than letting affinity defeat load balance.  Resizes
+    (autoscaling a FIXED group) keep mappings that still point at live
+    replicas and drop the rest.
+    """
+
+    uses_affinity = True
+
+    def __init__(self, prefix_len: int = 32, spill_factor: float = 2.0,
+                 map_capacity: int = 4096):
+        super().__init__()
+        self.prefix_len = prefix_len
+        self.spill_factor = spill_factor
+        self.map_capacity = map_capacity
+
+    def signature(self, request) -> Optional[int]:
+        return request_signature(request, prefix_len=self.prefix_len)
+
+    def _new_state(self, n):
+        state = super()._new_state(n)
+        state["amap"] = OrderedDict()  # affinity_key -> replica idx (LRU)
+        return state
+
+    def _resize(self, state, n):
+        fresh = super()._resize(state, n)
+        if state is not None:
+            # sessions pinned to replicas that survive the resize keep
+            # their (still cache-warm) home; the rest re-home on next pick
+            fresh["amap"] = OrderedDict(
+                (k, v) for k, v in state["amap"].items() if v < n)
+        return fresh
+
+    def _overloaded(self, sticky: int, queue_depths) -> bool:
+        if queue_depths is None or self.spill_factor <= 0:
+            return False  # no live load signal: stickiness wins
+        return queue_depths[sticky] > self.spill_factor * (
+            min(queue_depths) + 1.0)
+
+    def _pick_affinity(self, state, cost, queue_depths, affinity_key, info):
+        if affinity_key is None:
+            return self._pick(state, cost, queue_depths)
+        amap = state["amap"]
+        sticky = amap.get(affinity_key)
+        if sticky is not None and sticky < state["n"]:
+            if not self._overloaded(sticky, queue_depths):
+                amap.move_to_end(affinity_key)
+                # charge the balance history the fallback policy reads, so
+                # sticky traffic still counts as load on its home replica
+                state["loads"][sticky] += cost
+                state["counts"][sticky] += 1
+                if info is not None:
+                    info["affinity"] = "hit"
+                return sticky
+            if info is not None:
+                info["affinity"] = "spill"
+        elif info is not None:
+            info["affinity"] = "miss"
+        idx = self._pick(state, cost, queue_depths)
+        amap[affinity_key] = idx  # (re-)home the session where it landed
+        amap.move_to_end(affinity_key)
+        while len(amap) > self.map_capacity:
+            amap.popitem(last=False)
+        return idx
+
+
 ROUTERS = {
     "random": RandomRouter,
     "round_robin": RoundRobinRouter,
     "balanced": TokenAwareBalancedRouter,
     "least_loaded": LeastLoadedRouter,
+    "prefix_affinity": PrefixAffinityRouter,
 }
 
 
 def make_router(kind: str, **kw) -> Router:
     return ROUTERS[kind](**kw)
+
+
+def router_from_policy(policy) -> Router:
+    """Build the policy's router, threading through its affinity knobs."""
+    kind = getattr(policy, "routing", None) or "round_robin"
+    kw = {}
+    if kind == "prefix_affinity":
+        kw = {
+            "prefix_len": getattr(policy, "affinity_prefix_len", 32),
+            "spill_factor": getattr(policy, "affinity_spill_factor", 2.0),
+        }
+    return make_router(kind, **kw)

@@ -5,9 +5,15 @@ A ``ServiceDescription`` declares a factory for a *servicer* — anything with
 continuous-batching engine) or just ``handle(payload) -> result`` (sync RPC)
 — plus how many replicas to run.  The ``ServiceManager`` owns a *replica
 set* per service name: per-replica ``ServiceInstance`` + ``ServiceEndpoint``,
-aggregated stats, per-replica restart-on-crash, and (optionally) queue-depth
-driven autoscaling within policy bounds.  Requests fan out across replicas
-through the shared router (see ``repro.core.router``).
+aggregated stats, per-replica restart-on-crash (exponential backoff via
+``restart_backoff_s``/``restart_backoff_max_s``, giving up after
+``restart_max_attempts`` consecutive crashes so a persistently broken
+servicer degrades the set instead of hot-looping), and (optionally)
+queue-depth driven autoscaling within policy bounds.  Requests fan out
+across replicas through the shared router (see ``repro.core.router``);
+with ``routing="prefix_affinity"`` each request's prompt-prefix signature
+pins sessions to their cache-warm replica, and the outcome is accounted
+per endpoint as ``prefix_hits``/``prefix_misses`` in ``stats()``.
 """
 from __future__ import annotations
 
@@ -18,7 +24,7 @@ import threading
 import time
 from typing import Any, Callable, Optional
 
-from .router import Router, default_cost, make_router
+from .router import Router, default_cost, router_from_policy
 from .task import ResourceRequirements
 
 
@@ -31,6 +37,10 @@ class ServiceDescription:
     ready_timeout: float = 30.0
     partition: Optional[str] = None
     replicas: Optional[int] = None  # None -> ExecutionPolicy.replicas
+
+
+_STAT_KEYS = ("requests", "completed", "errors", "cost",
+              "prefix_hits", "prefix_misses")
 
 
 class _Future:
@@ -69,7 +79,10 @@ class ServiceEndpoint:
         self.requests: "queue.Queue" = queue.Queue()
         self.ready = threading.Event()
         self.stats = {"requests": 0, "completed": 0, "errors": 0,
-                      "cost": 0.0}  # routed token-cost (load imbalance)
+                      "cost": 0.0,  # routed token-cost (load imbalance)
+                      # sticky-routing outcomes (prefix_affinity): a hit
+                      # means this replica was the request's cache-warm home
+                      "prefix_hits": 0, "prefix_misses": 0}
         self._stats_lock = threading.Lock()
         self.retired = False  # set when scaled away / replaced
         self.on_retired: Optional[Callable] = None  # drains my queue
@@ -110,6 +123,7 @@ class ServiceInstance(threading.Thread):
         self.endpoint = endpoint
         self.alive = True
         self.last_beat = time.perf_counter()
+        self.ready_at: Optional[float] = None  # when this instance came up
         self.servicer = None
         self._pending: dict = {}
         self._on_exit = on_exit
@@ -122,6 +136,7 @@ class ServiceInstance(threading.Thread):
             if hasattr(self.servicer, "setup"):
                 self.servicer.setup()
             self.endpoint.ready.set()
+            self.ready_at = time.perf_counter()
             pumped = hasattr(self.servicer, "step")
             while self.alive or (self._drain and self._pending):
                 self.last_beat = time.perf_counter()
@@ -259,14 +274,14 @@ class ReplicaSet:
         # bounded: older ones are folded into _retired_agg once their
         # drains have long finished (autoscale oscillation must not leak)
         self._retired: list[ServiceEndpoint] = []
-        self._retired_agg = {"requests": 0, "completed": 0, "errors": 0,
-                             "cost": 0.0}
+        self._retired_agg = {k: 0 for k in _STAT_KEYS}
         self._scaling = False  # an async autoscale grow/shrink in flight
         self._scale_lock = threading.Lock()  # serializes scale_to callers
         self._gen = 0  # bumped on every membership change so recurring
         #                memberships never resume stale router history
         self._next_idx = 0  # monotonic replica_idx allocator
         self._uid = next(_replica_set_seq)
+        self._crash_history: dict[int, dict] = {}  # replica_idx -> backoff
         self._closed = False
         self._successor: Optional["ReplicaSet"] = None  # set on re-launch
         self._lock = threading.RLock()
@@ -280,12 +295,32 @@ class ReplicaSet:
     def n_replicas(self) -> int:
         return len(self.endpoints)
 
+    @property
+    def n_live(self) -> int:
+        """Replicas actually able to serve (or come back): excludes ones
+        retired in place, e.g. after exhausting their restart budget.  The
+        autoscaler bounds-checks against THIS count, so a dead replica
+        doesn't permanently consume configured capacity."""
+        with self._lock:
+            return sum(1 for ep in self.endpoints if not ep.retired)
+
     def request(self, payload, **meta) -> _Future:
-        ep = self.route(default_cost(payload), self.manager.router)
+        router = self.manager.router
+        ep = self.route(default_cost(payload), router,
+                        affinity_key=router.signature(payload))
         return ep.request(payload, **meta)
 
-    def route(self, cost: float, router: Router) -> ServiceEndpoint:
+    def route(self, cost: float, router: Router,
+              affinity_key: Optional[int] = None,
+              account_affinity: bool = True) -> ServiceEndpoint:
         """Pick the replica endpoint for one request of estimated cost.
+
+        ``affinity_key`` (``router.signature(payload)``) makes sticky
+        routers pin same-prefix requests to one replica; the outcome is
+        accounted on the chosen endpoint as ``prefix_hits``/``prefix_misses``
+        unless ``account_affinity`` is False (reroutes: the original route
+        already counted this request's outcome, counting the second hop too
+        would break hits+misses == keyed requests).
 
         Only READY replicas are candidates: a freshly spawned replica is
         in ``endpoints`` before its factory finishes, and routing to it
@@ -307,7 +342,9 @@ class ReplicaSet:
             successor = self._successor
         if not eps:
             if successor is not None:  # name was re-launched; follow it
-                return successor.route(cost, router)
+                return successor.route(cost, router,
+                                       affinity_key=affinity_key,
+                                       account_affinity=account_affinity)
             raise KeyError(f"service {self.name} has no live replicas")
         # key router state by generation + candidate MEMBERSHIP, not just
         # the name: positions in eps shift as replicas crash/recover, and
@@ -316,9 +353,17 @@ class ReplicaSet:
         # one replica's history to another
         group = (self.name, self._uid, self._gen) + tuple(
             ep.replica_idx for ep in eps)
+        info: dict = {}
         idx = router.pick(cost, n_instances=len(eps), group=group,
-                          queue_depths=[ep.depth() for ep in eps])
+                          queue_depths=[ep.depth() for ep in eps],
+                          affinity_key=affinity_key, info=info)
         eps[idx].bump("cost", cost)
+        if account_affinity:
+            affinity = info.get("affinity")
+            if affinity == "hit":
+                eps[idx].bump("prefix_hits")
+            elif affinity is not None:  # miss or spill: prefix not reused
+                eps[idx].bump("prefix_misses")
         return eps[idx]
 
     def ready(self) -> bool:
@@ -334,14 +379,17 @@ class ReplicaSet:
             folded = dict(self._retired_agg)
         agg = {k: folded[k] + sum(p[k] for p in per)
                + sum(p[k] for p in retired)
-               for k in ("requests", "completed", "errors", "cost")}
+               for k in _STAT_KEYS}
         agg["replicas"] = len(per)
         agg["per_replica"] = per
         return agg
 
     def mean_depth(self) -> float:
         with self._lock:
-            eps = list(self.endpoints)
+            # a replica declared dead (restart budget exhausted -> retired
+            # in place) serves nothing: averaging in its empty queue would
+            # dilute the autoscaler's scale-up signal
+            eps = [ep for ep in self.endpoints if not ep.retired]
         if not eps:
             return 0.0
         return sum(ep.depth() for ep in eps) / len(eps)
@@ -379,6 +427,36 @@ class ReplicaSet:
             self._gen += 1  # recovered replica starts with fresh history
         inst.start()
         _await_ready(inst, self.desc.ready_timeout)
+
+    def _restart_backoff(self, inst: ServiceInstance) -> tuple[float, bool]:
+        """Exponential-backoff bookkeeping for one crashed replica.
+
+        Returns ``(delay_s, give_up)``: how long to wait before relaunching
+        on the replica's existing endpoint, and whether the replica has
+        exhausted its ``restart_max_attempts`` budget and should be declared
+        dead instead (the set degrades rather than hot-looping a replica
+        whose factory/servicer crashes persistently).  A replica that
+        SERVED healthily (came ready, then ran) for 4x the backoff ceiling
+        before this crash earns a fresh budget — wall time between crashes
+        doesn't count, or a factory that burns seconds initializing before
+        dying would reset its own budget every cycle.
+        """
+        pol = self.manager.policy
+        base = max(0.0, getattr(pol, "restart_backoff_s", 0.05))
+        cap = max(base, getattr(pol, "restart_backoff_max_s", 2.0))
+        max_attempts = getattr(pol, "restart_max_attempts", 6)
+        now = time.perf_counter()
+        with self._lock:
+            hist = self._crash_history.setdefault(
+                inst.endpoint.replica_idx, {"attempts": 0})
+            if hist["attempts"] and inst.ready_at is not None \
+                    and now - inst.ready_at > 4 * cap:
+                hist["attempts"] = 0  # recovered: crashes are not consecutive
+            hist["attempts"] += 1
+            if max_attempts and max_attempts > 0 and \
+                    hist["attempts"] > max_attempts:
+                return 0.0, True
+            return min(cap, base * 2 ** (hist["attempts"] - 1)), False
 
     def scale_to(self, n: int, ready_timeout: Optional[float] = None):
         """Grow or shrink to ``n`` replicas; shrink re-routes queued work."""
@@ -462,9 +540,14 @@ class ReplicaSet:
             # the target's own increment (route() re-adds cost there)
             ep.bump("requests", -1)
             ep.bump("cost", -default_cost(payload))
+            router = self.manager.router
             try:
-                target = self.route(default_cost(payload),
-                                    self.manager.router)
+                # sticky keys still steer the reroute, but the affinity
+                # outcome is NOT re-counted: the original route() already
+                # accounted this request
+                target = self.route(default_cost(payload), router,
+                                    affinity_key=router.signature(payload),
+                                    account_affinity=False)
             except KeyError:
                 # keep the request accounted where it died so stats()
                 # still balances (requests = completed + errors + depth)
@@ -513,6 +596,9 @@ class ReplicaSet:
         bounded."""
         with self._lock:
             self._retired.extend(endpoints)
+            for ep in endpoints:  # replica_idx is never reused: drop its
+                #                   backoff bookkeeping with the endpoint
+                self._crash_history.pop(ep.replica_idx, None)
             while len(self._retired) > 8:
                 if self._retired[0].depth() > 0:
                     break  # drain still landing completions; keep it live
@@ -551,8 +637,7 @@ class ServiceManager:
         self.policy = policy
         self.events = event_log
         self.replica_sets: dict[str, ReplicaSet] = {}
-        self.router = router or make_router(
-            getattr(policy, "routing", None) or "round_robin")
+        self.router = router or router_from_policy(policy)
         self._lock = threading.Lock()
         self._autoscaler: Optional[threading.Thread] = None
         self._autoscale_stop = threading.Event()
@@ -664,18 +749,31 @@ class ServiceManager:
             return
         if self.policy is not None and getattr(
                 self.policy, "restart_failed_services", False):
-            try:
-                rs._relaunch(inst)
-            except Exception:
-                pass
-        else:
-            # no restart is coming: nothing will ever drain this dead
-            # replica's queue (including crash-replayed in-flight
-            # requests), so fail those futures now instead of letting
-            # clients hang to their own timeouts
-            inst.endpoint.on_retired = rs._fail_queue
-            inst.endpoint.retired = True
-            rs._fail_queue(inst.endpoint)
+            delay, give_up = rs._restart_backoff(inst)
+            if not give_up:
+                if delay > 0:
+                    # runs on the dying replica's own thread, so the wait
+                    # stalls nobody else; siblings keep serving and the
+                    # router skips this (not-ready) endpoint meanwhile
+                    time.sleep(delay)
+                try:
+                    rs._relaunch(inst)
+                except Exception:
+                    pass
+                return
+            # budget exhausted: a persistently crashing replica must not
+            # hot-loop.  Declare it dead (set degrades; route() skips it)
+            # and fail its queued futures instead of abandoning them.
+            if self.events:
+                self.events.emit(inst.desc.name, "FAILED", "service",
+                                 "restart_exhausted")
+        # no restart is coming: nothing will ever drain this dead
+        # replica's queue (including crash-replayed in-flight
+        # requests), so fail those futures now instead of letting
+        # clients hang to their own timeouts
+        inst.endpoint.on_retired = rs._fail_queue
+        inst.endpoint.retired = True
+        rs._fail_queue(inst.endpoint)
 
     # -- autoscaling --------------------------------------------------------
     def _maybe_start_autoscaler(self):
@@ -719,16 +817,18 @@ class ServiceManager:
             if rs._scaling:  # previous grow/shrink still in flight
                 continue
             n = rs.n_replicas
+            live = rs.n_live  # bounds use LIVE capacity: replicas dead in
+            #                   place must not block replacement scale-ups
             depth = rs.mean_depth()
             if depth > pol.autoscale_high_depth and \
-                    n < pol.autoscale_max_replicas:
+                    live < pol.autoscale_max_replicas:
                 hot[name] = hot.get(name, 0) + 1
                 cold[name] = 0
                 if hot[name] >= pol.autoscale_sustain:
                     hot[name] = 0
                     self._scale_async(name, rs, n, n + 1, "SCALE_UP")
             elif depth < pol.autoscale_low_depth and \
-                    n > pol.autoscale_min_replicas:
+                    live > pol.autoscale_min_replicas:
                 cold[name] = cold.get(name, 0) + 1
                 hot[name] = 0
                 if cold[name] >= pol.autoscale_sustain:

@@ -3,9 +3,15 @@
 Brings up ONE replicated inference service (``--replicas N``) through the
 RHAPSODY middleware and drives a synthetic request stream as INFERENCE
 tasks, so every request is routed to a replica by the policy router
-(``--routing``: random | round_robin | balanced | least_loaded).  Reports
-aggregate + per-replica throughput, latency, and utilization — the runnable
-end of the inference-at-scale path the dry-run lowers at production shapes.
+(``--routing``: random | round_robin | balanced | least_loaded |
+prefix_affinity).  With ``prefix_affinity``, requests sharing a prompt
+prefix stick to one replica (``--affinity-prefix-len`` tokens hashed into
+the session key, spilling to the least-loaded replica past
+``--affinity-spill-factor``), and the engines skip prefill for resident
+prefixes; per-replica ``prefix_hits``/``prefix_misses`` are reported.
+Reports aggregate + per-replica throughput, latency, and utilization — the
+runnable end of the inference-at-scale path the dry-run lowers at
+production shapes.
 """
 from __future__ import annotations
 
@@ -35,6 +41,12 @@ def main():
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--routing", default="balanced",
                     choices=tuple(ROUTERS))
+    ap.add_argument("--affinity-prefix-len", type=int, default=32,
+                    help="prompt tokens hashed into the sticky-session key "
+                         "(prefix_affinity routing)")
+    ap.add_argument("--affinity-spill-factor", type=float, default=2.0,
+                    help="sticky replica sheds load when its queue exceeds "
+                         "factor * (min depth + 1); <=0 never spills")
     args = ap.parse_args()
 
     cfg = (get_smoke_config(args.arch)
@@ -42,7 +54,10 @@ def main():
            else get_config(args.arch))
     rh = Rhapsody(ResourceDescription(nodes=args.replicas,
                                       cores_per_node=16),
-                  policy=ExecutionPolicy(routing=args.routing),
+                  policy=ExecutionPolicy(
+                      routing=args.routing,
+                      affinity_prefix_len=args.affinity_prefix_len,
+                      affinity_spill_factor=args.affinity_spill_factor),
                   n_workers=2)
     try:
         replica_set = rh.add_service(ServiceDescription(
@@ -84,6 +99,13 @@ def main():
               f"mean slot-utilization {np.mean(utils):.2f}")
         print("[serve] per-replica requests:",
               [p["requests"] for p in stats["per_replica"]])
+        if args.routing == "prefix_affinity":
+            hits, misses = stats["prefix_hits"], stats["prefix_misses"]
+            reuse = [inst.servicer.stats.prefix_cached_tokens
+                     for inst in replica_set.instances]
+            print(f"[serve] prefix-affinity: {hits} hits / {misses} misses "
+                  f"(rate {hits / max(1, hits + misses):.2f}); "
+                  f"engine prefill tokens skipped per replica: {reuse}")
     finally:
         rh.close()
 

@@ -10,6 +10,15 @@ the paper sweeps (Fig. 5c): ``max_num_seqs`` (decode slot count) and
   2. runs one batched decode over all slots,
   3. emits new tokens, retiring finished requests and freeing slots.
 
+Prefix reuse (the serving half of prefix-affinity routing): a freed slot's
+KV cache stays resident until the slot is recycled, remembering the token
+sequence it holds.  When a submitted prompt *extends* a resident sequence
+— the multi-turn chat pattern the ``prefix_affinity`` router steers back
+to this replica — admission skips prefill for the cached prefix entirely:
+the slot is re-claimed, its length rewound to the covered prefix, and only
+the new suffix is fed through the (already batched) decode path.  Hits and
+skipped tokens are tracked in ``EngineStats``.
+
 Telemetry (per-step active slots, tokens, queue depth) feeds the paper's
 utilization/throughput experiments.
 """
@@ -43,6 +52,12 @@ class Request:
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
     slot: Optional[int] = None
+    # prefix-reuse resume: prompt suffix still to be fed through decode
+    # (one token per step); no output is emitted while any remain
+    pending_prefix: list = dataclasses.field(default_factory=list)
+    cached_prefix: int = 0  # prompt tokens whose prefill was skipped
+    truncated: bool = False  # prompt exceeded max_len/bucket at prefill:
+    #                          the cache does not cover the full prompt
 
     @property
     def done(self) -> bool:
@@ -67,6 +82,8 @@ class EngineStats:
     prefill_tokens: int = 0
     active_slot_steps: int = 0
     slot_steps: int = 0
+    prefix_reuse_hits: int = 0  # admissions that resumed a resident slot
+    prefix_cached_tokens: int = 0  # prompt tokens whose prefill was skipped
     started: float = dataclasses.field(default_factory=time.perf_counter)
 
     @property
@@ -85,7 +102,7 @@ class InferenceEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_num_seqs: int = 8,
                  max_num_batched_tokens: int = 2048, max_len: int = 512,
                  prefill_buckets=(32, 64, 128, 256, 512), seed: int = 0,
-                 mesh=None):
+                 mesh=None, enable_prefix_reuse: bool = True):
         self.cfg = cfg
         self.api: ModelApi = get_model(cfg)
         self.params = params
@@ -97,6 +114,11 @@ class InferenceEngine:
         self.pool = CachePool(cfg, max_num_seqs, max_len)
         self.queue: list[Request] = []
         self.running: dict[int, Request] = {}  # slot -> request
+        # slot -> token sequence its (freed) cache still covers; consulted
+        # at admission for the prefix-reuse fast path.  State-carrying
+        # families (ssm/hybrid) have no per-position KV to rewind, so the
+        # fast path is gated off for them below.
+        self._resident: dict[int, list] = {}
         self.stats = EngineStats()
         self._uid = itertools.count()
         self._key = jax.random.PRNGKey(seed)
@@ -114,6 +136,11 @@ class InferenceEngine:
         # families (ssm/hybrid) need exact-length prefill (order-dependent
         # state), which recompiles per distinct prompt length.
         self._exact_prefill = cfg.family in ("ssm", "hybrid")
+        # prefix reuse needs prompt token i <-> cache position i: true for
+        # pure text decoders, not for ssm/hybrid (monolithic state, nothing
+        # to rewind) or vlm/encdec (vision/audio prefix offsets positions)
+        self._prefix_reuse = (enable_prefix_reuse
+                              and cfg.family in ("dense", "moe"))
 
         def prefill_fn(params, batch):
             kw = {"max_len": max_len}
@@ -149,12 +176,17 @@ class InferenceEngine:
         return events
 
     def collect_finished(self) -> list:
-        """Retire finished requests, freeing their slots."""
+        """Retire finished requests, freeing their slots.  With prefix
+        reuse on, the freed slot's KV stays resident (it is only memory
+        already allocated) and the sequence it covers is remembered so a
+        later prompt extending it can skip that prefill."""
         done = []
         for slot, req in list(self.running.items()):
             if req.done:
                 del self.running[slot]
                 self.pool.free(slot)
+                if self._prefix_reuse and not req.truncated:
+                    self._resident[slot] = list(req.prompt) + list(req.output)
                 done.append(req)
         return done
 
@@ -176,6 +208,9 @@ class InferenceEngine:
         budget = self.max_num_batched_tokens
         while self.queue and self.pool.n_free > 0:
             req = self.queue[0]
+            if self._prefix_reuse and self._try_resume(req):
+                self.queue.pop(0)  # resumed: no prefill, no budget charge
+                continue
             n = min(req.n_prompt, self.max_len - 1)
             bucket = n if self._exact_prefill else _bucket(n, self.buckets)
             n = min(n, bucket)  # over-long prompts keep their last n tokens
@@ -183,6 +218,8 @@ class InferenceEngine:
                 break
             self.queue.pop(0)
             slot = self.pool.allocate()
+            self._resident.pop(slot, None)  # cache is about to be replaced
+            req.truncated = n < req.n_prompt
             budget -= bucket
             tokens = np.zeros((1, bucket), np.int32)
             tokens[0, :n] = req.prompt[-n:]  # right-pad into the bucket
@@ -202,13 +239,63 @@ class InferenceEngine:
             else:
                 logits_last = logits[0]
             self.stats.prefill_tokens += bucket
-            tok = int(jnp.argmax(logits_last))
+            if req.temperature > 0:
+                # match the decode path's temperature gating: the first
+                # generated token must follow the same sampling policy
+                # whether it comes from a fresh prefill or a resumed slot
+                self._key, sub = jax.random.split(self._key)
+                tok = int(sample(logits_last[None, :], sub,
+                                 temperature=req.temperature)[0])
+            else:
+                tok = int(jnp.argmax(logits_last))
             req.slot = slot
             req.output.append(tok)
             req.first_token_at = time.perf_counter()
             self._last_tokens = self._last_tokens.at[slot].set(tok)
             self.running[slot] = req
             self._check_done(req)
+
+    def _try_resume(self, req: Request) -> bool:
+        """Prefix-reuse fast path: if ``req.prompt`` extends the token
+        sequence a freed slot's cache still covers, claim that slot and
+        skip prefill for the covered prefix.
+
+        A resident sequence of length L has KV for its first L-1 tokens
+        (the final emitted token was never fed back), so the resume rewinds
+        the slot's length to L-1 and feeds ``prompt[L-1:]`` through the
+        batched decode — one token per step, exactly the incremental path —
+        with the last feed's logits producing the first new token.  Junk
+        appended at positions >= L-1 while the slot idled (decode advances
+        every slot) is overwritten by those feeds after the rewind.
+        """
+        m = req.n_prompt
+        if m >= self.max_len:  # would be truncated: prefix math breaks
+            return False
+        # minimum-benefit gate: the uncovered suffix is fed one token per
+        # decode step, so resuming must cover at least half the prompt —
+        # a short shared stem on a long fresh prompt is cheaper to prefill
+        # in one bucketed call than to drip through hundreds of decodes
+        best_slot, best_len = None, max(1, (m + 1) // 2)
+        for slot, seq in self._resident.items():
+            L = len(seq)
+            if L > best_len and L <= m and req.prompt[:L] == seq:
+                best_slot, best_len = slot, L
+        if best_slot is None or not self.pool.take(best_slot):
+            return False
+        seq = self._resident.pop(best_slot)
+        covered = len(seq) - 1
+        self.pool.set_len(best_slot, covered)
+        self._last_tokens = self._last_tokens.at[best_slot].set(
+            req.prompt[covered])
+        req.pending_prefix = list(req.prompt[covered + 1:])
+        req.cached_prefix = covered
+        req.slot = best_slot
+        self.running[best_slot] = req
+        self.stats.prefix_reuse_hits += 1
+        self.stats.prefix_cached_tokens += covered
+        self.stats.prefill_tokens += 1  # the feed queued into _last_tokens;
+        #                                 the rest count as they are fed
+        return True
 
     def _decode_step(self):
         self._key, sub = jax.random.split(self._key)
@@ -222,17 +309,33 @@ class InferenceEngine:
         sampled = sample(logits, sub, temperature=1.0)
         t = jnp.asarray(temps)
         tokens = jnp.where(t > 0, sampled, greedy)
-        self._last_tokens = tokens
         tokens_np = np.asarray(tokens)
+        # only a resumed request forces the host-side token rewrite (and
+        # the device re-upload below); the common all-decode step keeps the
+        # device array as-is
+        has_pending = any(req.pending_prefix
+                          for req in self.running.values())
+        if has_pending:
+            tokens_np = tokens_np.copy()
         events = []
         for slot, req in list(self.running.items()):
             if req.done:
                 continue
+            if req.pending_prefix:
+                # resumed request still catching up on its prompt suffix:
+                # force-feed the next prompt token instead of the model's
+                # prediction, and emit nothing until the prompt is consumed
+                tokens_np[slot] = req.pending_prefix.pop(0)
+                self.stats.prefill_tokens += 1
+                continue
             tok = int(tokens_np[slot])
             req.output.append(tok)
+            if req.first_token_at is None:  # resumed: first real token
+                req.first_token_at = time.perf_counter()
             events.append((req.uid, tok))
             self.stats.decode_tokens += 1
             self._check_done(req)
+        self._last_tokens = jnp.asarray(tokens_np) if has_pending else tokens
         return events
 
     def _check_done(self, req: Request):

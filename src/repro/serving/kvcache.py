@@ -57,6 +57,16 @@ class CachePool:
     def free(self, slot: int):
         self._free.append(slot)
 
+    def take(self, slot: int) -> bool:
+        """Claim a SPECIFIC free slot (prefix-reuse admission: the engine
+        wants the slot whose cache already holds a matching prefix, not
+        whichever the allocator would pop).  Returns False if taken."""
+        try:
+            self._free.remove(slot)
+        except ValueError:
+            return False
+        return True
+
     @property
     def n_free(self) -> int:
         return len(self._free)

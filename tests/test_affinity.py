@@ -1,0 +1,173 @@
+"""Prefix-affinity (sticky-session) routing end to end: INFERENCE tasks
+dispatched through Rhapsody pin same-prefix sessions to one replica, hit
+counters land in ReplicaSet.stats(), and spill keeps affinity from
+defeating load balance."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (ExecutionPolicy, ResourceDescription, Rhapsody,
+                        ServiceDescription, TaskDescription, TaskKind)
+
+
+class Echo:
+    def handle(self, payload):
+        time.sleep(0.001)
+        return ("ok", payload)
+
+
+def make_rh(**policy_kw):
+    policy_kw.setdefault("routing", "prefix_affinity")
+    return Rhapsody(ResourceDescription(nodes=2, cores_per_node=16),
+                    policy=ExecutionPolicy(**policy_kw), n_workers=2)
+
+
+def _session_task(base: int, turn: int):
+    # turn t prompt = 40-token session prefix + growing tail (chat shape)
+    prompt = [base] * 40 + list(range(turn + 1))
+    return TaskDescription(kind=TaskKind.INFERENCE, service="svc",
+                           payload={"prompt": prompt},
+                           task_type="inference")
+
+
+def test_sticky_dispatch_pins_sessions_and_spreads_load():
+    """Acceptance: two interleaved sessions through the middleware land on
+    one replica each (all but the first request of a session is a prefix
+    hit) while both replicas carry traffic."""
+    turns = 8
+    rh = make_rh(affinity_spill_factor=50.0)  # tiny echo load: never spill
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=Echo,
+                                               replicas=2))
+        descs = []
+        for t in range(turns):  # interleave the two sessions turn by turn
+            descs.append(_session_task(1, t))
+            descs.append(_session_task(2, t))
+        uids = rh.submit(descs)
+        assert rh.wait(uids, timeout=30)
+        stats = rs.stats()
+        per = stats["per_replica"]
+        # both replicas serve exactly one session's worth of requests
+        assert [p["requests"] for p in per] == [turns, turns]
+        # every request after a session's first sticks to its home replica
+        assert [p["prefix_hits"] for p in per] == [turns - 1, turns - 1]
+        assert stats["prefix_misses"] == 2  # one first-contact per session
+        assert stats["completed"] == 2 * turns
+    finally:
+        rh.close()
+
+
+def test_direct_request_surface_is_sticky_too():
+    """ReplicaSet.request() (the non-task client path) computes the same
+    affinity signature as the dispatcher."""
+    rh = make_rh(affinity_spill_factor=50.0)
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=Echo,
+                                               replicas=3))
+        futs = [rs.request({"prompt": [9] * 40 + [t]}) for t in range(6)]
+        for f in futs:
+            f.result(10.0)
+        per = [p["requests"] for p in rs.stats()["per_replica"]]
+        assert sorted(per) == [0, 0, 6]  # one replica owns the session
+        assert rs.stats()["prefix_hits"] == 5
+    finally:
+        rh.close()
+
+
+def test_unkeyed_payloads_route_without_affinity_accounting():
+    rh = make_rh()
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=Echo,
+                                               replicas=2))
+        # ints have no prompt to key on -> signature None -> no affinity
+        futs = [rs.request(1000 + i) for i in range(4)]
+        for f in futs:
+            f.result(10.0)
+        stats = rs.stats()
+        assert stats["prefix_hits"] == 0
+        assert stats["prefix_misses"] == 0
+        assert stats["completed"] == 4
+    finally:
+        rh.close()
+
+
+def test_spill_rehomes_session_under_load():
+    """A sticky replica that backs up past the spill factor sheds the
+    session to a less-loaded sibling instead of queueing behind itself."""
+
+    class Gated:
+        def __init__(self):
+            self.gate = GATE
+
+        def handle(self, payload):
+            # the session's home replica blocks while the gate is held,
+            # building observable queue depth
+            if payload.get("block") and not self.gate.is_set():
+                self.gate.wait(10.0)
+            return "ok"
+
+    GATE = threading.Event()
+    rh = make_rh(affinity_spill_factor=1.0, inference_timeout_s=30.0)
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=Gated,
+                                               replicas=2))
+        key_payload = {"prompt": [5] * 40, "block": True}
+        home = rs.route(40.0, rh.router,
+                        affinity_key=rh.router.signature(key_payload))
+        # pile blocked requests onto the sticky home
+        futs = [home.request(dict(key_payload)) for _ in range(6)]
+        for f in futs:  # depth builds: 6 outstanding on home, 0 elsewhere
+            assert not f.done()
+        spilled = rs.route(40.0, rh.router,
+                           affinity_key=rh.router.signature(key_payload))
+        assert spilled is not home
+        GATE.set()
+        for f in futs:
+            assert f.result(15.0) == "ok"
+        assert rs.stats()["prefix_misses"] >= 1  # the spill was accounted
+    finally:
+        GATE.set()
+        rh.close()
+
+
+def test_degraded_replica_does_not_strand_sessions():
+    """When a session's home replica dies (restarts disabled), the sticky
+    map re-homes the session to a live replica instead of raising."""
+
+    class DiesOnBoom:
+        def __init__(self):
+            self.jobs = {}
+            self.uid = 0
+
+        def submit(self, payload):
+            if isinstance(payload, dict) and payload.get("boom"):
+                raise SystemError("replica down")
+            self.uid += 1
+            self.jobs[self.uid] = payload
+            return self.uid
+
+        def step(self):
+            out = [(u, "ok") for u in self.jobs]
+            self.jobs.clear()
+            return out
+
+    rh = make_rh(restart_failed_services=False, max_retries=0)
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=DiesOnBoom,
+                                               replicas=2))
+        payload = {"prompt": [4] * 40}
+        home = rs.route(40.0, rh.router,
+                        affinity_key=rh.router.signature(payload))
+        with pytest.raises((SystemError, RuntimeError)):
+            home.request({"prompt": [4] * 40, "boom": True}).result(10.0)
+        deadline = time.perf_counter() + 5
+        idx = rs.endpoints.index(home)
+        while time.perf_counter() < deadline and \
+                rs.instances[idx].error is None:
+            time.sleep(0.01)
+        # sticky key re-homes to the surviving replica (fresh router group:
+        # membership changed, so the dead endpoint is no longer a candidate)
+        assert rs.request(payload).result(10.0) == "ok"
+    finally:
+        rh.close()

@@ -14,7 +14,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.coupling import InMemoryStore
 from repro.core.resources import Allocation, ResourceDescription
-from repro.core.router import make_router
+from repro.core.router import ROUTERS, make_router, request_signature
 from repro.training.optim import (dequantize_signed, dequantize_unsigned,
                                   quantize_signed, quantize_unsigned)
 
@@ -68,11 +68,56 @@ def test_mapper_never_oversubscribes(nodes, cores, reqs):
     n=st.integers(1, 8),
 )
 def test_router_partition_property(lens, n):
+    """EVERY registered router's assign() covers each request exactly once."""
     reqs = [[0] * L for L in lens]
-    for kind in ("random", "round_robin", "balanced"):
+    for kind in sorted(ROUTERS):
         assign = make_router(kind).assign(reqs, n, cost=len)
         flat = sorted(i for a in assign for i in a)
         assert flat == list(range(len(reqs)))  # exact cover
+
+
+# one pick() step: (n_instances, cost, session id or None, depths?)
+_pick_steps = st.lists(
+    st.tuples(st.integers(1, 8), st.floats(0.0, 500.0),
+              st.one_of(st.none(), st.integers(0, 5)), st.booleans()),
+    min_size=1, max_size=80)
+
+
+@settings(max_examples=50, deadline=None)
+@given(kind=st.sampled_from(sorted(ROUTERS)), steps=_pick_steps)
+def test_pick_always_in_range_under_interleaved_resizes(kind, steps):
+    """Random pick() sequences with the replica count changing between
+    calls (the autoscale pattern) never return an out-of-range index —
+    for every registered router, keyed or not, with or without depths."""
+    r = make_router(kind)
+    for n, cost, session, with_depths in steps:
+        key = (None if session is None else
+               request_signature({"prompt": [session] * 40}))
+        depths = [float((session or 0) + j) for j in range(n)] \
+            if with_depths else None
+        idx = r.pick(cost, n_instances=n, group="g", queue_depths=depths,
+                     affinity_key=key)
+        assert 0 <= idx < n
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    sessions=st.lists(st.integers(0, 9), min_size=2, max_size=60),
+    n=st.integers(2, 6),
+)
+def test_prefix_affinity_sticky_while_membership_stable(sessions, n):
+    """With a stable replica count and no spill pressure, every repeat of
+    a session key re-picks the replica that served it first."""
+    r = make_router("prefix_affinity", spill_factor=0.0)  # never spill
+    home: dict = {}
+    for s in sessions:
+        key = request_signature({"prompt": [s] * 40})
+        idx = r.pick(1.0, n_instances=n, group="g", affinity_key=key)
+        assert 0 <= idx < n
+        if key in home:
+            assert idx == home[key], "sticky violated on stable membership"
+        else:
+            home[key] = idx
 
 
 @settings(max_examples=30, deadline=None)

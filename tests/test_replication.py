@@ -339,6 +339,208 @@ class Slow:
         return "z"
 
 
+# ---------------------------------------------------------------------------
+# Restart backoff: a persistently crashing replica must not hot-loop
+# ---------------------------------------------------------------------------
+
+
+def test_persistent_crasher_stops_hot_looping_and_degrades():
+    """The first construction serves; every relaunch crashes in setup().
+    Exponential backoff + restart_max_attempts must bound the relaunch
+    count, declare the replica dead, and leave the set degraded (the
+    healthy sibling keeps serving)."""
+    built = {"n": 0}
+
+    class CrashLoop:
+        def __init__(self):
+            built["n"] += 1
+            self.first = built["n"] <= 2  # one healthy boot per replica
+            self.jobs = {}
+            self.uid = 0
+
+        def setup(self):
+            if not self.first:
+                raise SystemError("still broken")
+
+        def submit(self, payload):
+            if payload == "boom":
+                raise SystemError("boom")
+            self.uid += 1
+            self.jobs[self.uid] = payload
+            return self.uid
+
+        def step(self):
+            out = [(u, "ok") for u in self.jobs]
+            self.jobs.clear()
+            return out
+
+    rh = make_rh(routing="round_robin", restart_failed_services=True,
+                 restart_backoff_s=0.01, restart_backoff_max_s=0.05,
+                 restart_max_attempts=3)
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=CrashLoop,
+                                               replicas=2, ready_timeout=5.0))
+        assert built["n"] == 2
+        # kill one replica; every relaunch crashes in setup -> crash loop.
+        # The replayed in-flight request fails once the budget runs out.
+        with pytest.raises((SystemError, RuntimeError)):
+            rs.request("boom").result(10.0)
+        deadline = time.perf_counter() + 10
+        while time.perf_counter() < deadline:
+            if rh.services.list()["svc"] == "degraded":
+                break
+            time.sleep(0.02)
+        assert rh.services.list()["svc"] == "degraded"
+        # bounded: initial 2 boots + (1 + max_attempts) relaunch tries max
+        n_after_give_up = built["n"]
+        assert n_after_give_up <= 2 + 1 + 3, built
+        time.sleep(0.3)  # several backoff ceilings: no further relaunches
+        assert built["n"] == n_after_give_up
+        # the surviving replica still serves
+        assert rs.request("fine").result(10.0) == "ok"
+    finally:
+        rh.close()
+
+
+def test_backoff_delays_relaunch_but_recovers():
+    """A transient double-crash still recovers — backoff delays, it does
+    not give up below the attempt cap — and the crash budget resets after
+    a healthy stretch."""
+    crashes = {"n": 0}
+
+    class CrashTwice:
+        def __init__(self):
+            self.jobs = {}
+            self.uid = 0
+
+        def submit(self, payload):
+            if payload == "boom" and crashes["n"] < 2:
+                crashes["n"] += 1
+                raise SystemError("transient")
+            self.uid += 1
+            self.jobs[self.uid] = payload
+            return self.uid
+
+        def step(self):
+            out = [(u, "ok") for u in self.jobs]
+            self.jobs.clear()
+            return out
+
+    rh = make_rh(restart_failed_services=True, restart_backoff_s=0.01,
+                 restart_backoff_max_s=0.05, restart_max_attempts=3)
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc",
+                                               factory=CrashTwice))
+        # both crashes replay the in-flight request on the relaunched
+        # replica; the third attempt serves it
+        assert rs.request("boom").result(15.0) == "ok"
+        assert crashes["n"] == 2
+        assert rs.request("fine").result(10.0) == "ok"
+        hist = rs._crash_history[rs.endpoints[0].replica_idx]
+        assert hist["attempts"] == 2
+    finally:
+        rh.close()
+
+
+# ---------------------------------------------------------------------------
+# Concurrency stress: clients hammer route()+request() during scaling
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_requests_during_scaling_conserve_futures():
+    """N client threads vs a scaler thread bouncing the replica count:
+    every future resolves exactly once with its own payload, and the
+    aggregate stats stay conserved (requests == completed, no errors,
+    nothing lost or double-counted across retire/reroute races)."""
+    rh = make_rh(routing="least_loaded")
+    n_threads, per_thread = 6, 40
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=Echo,
+                                               replicas=1))
+        stop = threading.Event()
+
+        def scaler():
+            n = 3
+            while not stop.is_set():
+                rs.scale_to(n)
+                n = 1 if n == 3 else 3
+                time.sleep(0.005)
+
+        results: list = [None] * n_threads
+        errors: list = [None] * n_threads
+
+        def client(tid):
+            got = []
+            try:
+                futs = [(i, rs.request({"prompt": [tid, i] * 4}))
+                        for i in range(per_thread)]
+                for i, f in enumerate(futs):
+                    got.append((i, f[1].result(30.0)))
+            except BaseException as e:  # noqa: BLE001
+                errors[tid] = e
+            results[tid] = got
+
+        scale_thread = threading.Thread(target=scaler, daemon=True)
+        scale_thread.start()
+        clients = [threading.Thread(target=client, args=(t,))
+                   for t in range(n_threads)]
+        for c in clients:
+            c.start()
+        for c in clients:
+            c.join(timeout=60)
+        stop.set()
+        scale_thread.join(timeout=10)
+        assert all(e is None for e in errors), errors
+        # exactly-once, with the right payload: no lost or cross-resolved
+        # future anywhere
+        for tid, got in enumerate(results):
+            assert len(got) == per_thread
+            for i, res in got:
+                assert res == ("ok", {"prompt": [tid, i] * 4})
+        # settle any late drains, then check conservation
+        deadline = time.perf_counter() + 10
+        total = n_threads * per_thread
+        while time.perf_counter() < deadline:
+            stats = rs.stats()
+            if stats["completed"] + stats["errors"] >= total:
+                break
+            time.sleep(0.02)
+        stats = rs.stats()
+        assert stats["errors"] == 0
+        assert stats["completed"] == total
+        assert stats["requests"] == total
+    finally:
+        rh.close()
+
+
+def test_autoscale_replaces_replica_dead_in_place():
+    """A replica retired in place (restart budget exhausted) must not
+    consume autoscale capacity: with max_replicas == configured replicas,
+    the set still grows a substitute when the survivor backs up."""
+    rh = make_rh(routing="least_loaded", autoscale=True,
+                 autoscale_min_replicas=1, autoscale_max_replicas=2,
+                 autoscale_high_depth=2.0, autoscale_low_depth=0.5,
+                 autoscale_interval_s=0.02, autoscale_sustain=2)
+    try:
+        rs = rh.add_service(ServiceDescription(name="slow", factory=Slow,
+                                               replicas=2))
+        # simulate the _handle_exit give-up outcome: dead in place
+        dead = rs.endpoints[0]
+        dead.ready.clear()
+        dead.retired = True
+        assert rs.n_live == 1
+        futs = [rs.request(i) for i in range(150)]
+        deadline = time.perf_counter() + 15
+        while rs.n_live < 2 and time.perf_counter() < deadline:
+            time.sleep(0.02)
+        assert rs.n_live == 2, "dead replica blocked the replacement"
+        assert dead in rs.endpoints  # degraded signal stays visible
+        for f in futs:
+            f.result(30.0)
+    finally:
+        rh.close()
+
+
 def test_autoscale_grows_and_shrinks():
     rh = make_rh(routing="least_loaded", autoscale=True,
                  autoscale_min_replicas=1, autoscale_max_replicas=3,

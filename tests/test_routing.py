@@ -1,10 +1,13 @@
 """Router unit tests: balance invariants, determinism, incremental pick()
-API, and the queue-depth-aware least-loaded policy."""
+API, the queue-depth-aware least-loaded policy, and prefix-affinity
+(sticky-session) routing."""
 import pytest
 
-from repro.core.router import (ROUTERS, LeastLoadedRouter, RandomRouter,
+from repro.core.router import (ROUTERS, LeastLoadedRouter,
+                               PrefixAffinityRouter, RandomRouter,
                                RoundRobinRouter, TokenAwareBalancedRouter,
-                               default_cost, make_router)
+                               default_cost, make_router,
+                               request_signature, router_from_policy)
 
 
 def _requests(lens):
@@ -140,3 +143,162 @@ def test_default_cost_estimates_tokens():
     assert default_cost([1] * 7) == 7.0
     assert default_cost(42) == 1.0
     assert default_cost({"no_prompt": 1, "two_keys": 2}) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Prefix affinity: request signatures + sticky pick()
+# ---------------------------------------------------------------------------
+
+
+def test_request_signature_keys_on_bounded_prefix():
+    base = {"prompt": [7] * 40}
+    same_prefix = {"prompt": [7] * 40 + [1, 2, 3]}
+    other = {"prompt": [8] * 40}
+    assert request_signature(base) == request_signature(same_prefix)
+    assert request_signature(base) != request_signature(other)
+    # bounded: tokens past prefix_len don't matter, tokens within do
+    assert request_signature({"prompt": [1, 2, 3]}, prefix_len=2) == \
+        request_signature({"prompt": [1, 2, 9]}, prefix_len=2)
+    assert request_signature({"prompt": [1, 2]}, prefix_len=2) != \
+        request_signature({"prompt": [1, 9]}, prefix_len=2)
+    # strings work too (tokenizer-free callers)
+    assert request_signature("hello world", prefix_len=5) == \
+        request_signature("hellooooo", prefix_len=5)
+
+
+def test_request_signature_canonicalizes_integer_types():
+    """Value-equal token ids must key identically whether they arrive as
+    python ints or numpy scalars (one session's turns can mix both)."""
+    import numpy as np
+
+    plain = {"prompt": [1, 2, 3] * 20}
+    npy = {"prompt": list(np.asarray([1, 2, 3] * 20))}
+    assert request_signature(plain) == request_signature(npy)
+    # floats are NOT coerced (lossy): they key by their own repr
+    assert request_signature({"prompt": [1.5] * 40}) != \
+        request_signature({"prompt": [1] * 40})
+
+
+def test_request_signature_none_for_unkeyable_payloads():
+    assert request_signature({"no_prompt": 1}) is None
+    assert request_signature(42) is None
+    assert request_signature(None) is None
+    assert request_signature({"prompt": [1]}, prefix_len=0) is None
+
+
+def test_signature_method_only_on_affinity_router():
+    payload = {"prompt": [1] * 8}
+    assert make_router("least_loaded").signature(payload) is None
+    assert make_router("prefix_affinity").signature(payload) is not None
+    assert PrefixAffinityRouter.uses_affinity
+    assert not LeastLoadedRouter.uses_affinity
+
+
+def test_prefix_affinity_sticks_same_key_to_same_replica():
+    r = make_router("prefix_affinity")
+    k = request_signature({"prompt": [3] * 40})
+    first = r.pick(1.0, n_instances=4, group="g", affinity_key=k)
+    for _ in range(10):
+        assert r.pick(1.0, n_instances=4, group="g", affinity_key=k) == first
+
+
+def test_prefix_affinity_reports_hit_miss_via_info():
+    r = make_router("prefix_affinity")
+    k = request_signature({"prompt": [3] * 40})
+    info = {}
+    r.pick(1.0, n_instances=4, group="g", affinity_key=k, info=info)
+    assert info["affinity"] == "miss"
+    info = {}
+    r.pick(1.0, n_instances=4, group="g", affinity_key=k, info=info)
+    assert info["affinity"] == "hit"
+    info = {}
+    r.pick(1.0, n_instances=4, group="g", info=info)  # unkeyed: no report
+    assert "affinity" not in info
+
+
+def test_prefix_affinity_distinct_sessions_spread():
+    """First-seen keys fall through to least-loaded, so distinct sessions
+    land on distinct replicas instead of piling up."""
+    r = make_router("prefix_affinity")
+    homes = [r.pick(10.0, n_instances=4, group="g",
+                    affinity_key=request_signature({"prompt": [s] * 40}))
+             for s in range(4)]
+    assert sorted(homes) == [0, 1, 2, 3]
+
+
+def test_prefix_affinity_spills_when_sticky_replica_backed_up():
+    r = make_router("prefix_affinity", spill_factor=2.0)
+    k = request_signature({"prompt": [1] * 40})
+    home = r.pick(1.0, n_instances=3, group="g", affinity_key=k)
+    depths = [0.0] * 3
+    depths[home] = 50.0  # way past spill_factor * (min + 1)
+    info = {}
+    spilled = r.pick(1.0, n_instances=3, group="g", affinity_key=k,
+                     queue_depths=depths, info=info)
+    assert spilled != home
+    assert info["affinity"] == "spill"
+    # the session re-homed: next pick (no pressure) sticks to the new home
+    info = {}
+    assert r.pick(1.0, n_instances=3, group="g", affinity_key=k,
+                  info=info) == spilled
+    assert info["affinity"] == "hit"
+
+
+def test_prefix_affinity_spill_disabled_by_nonpositive_factor():
+    r = make_router("prefix_affinity", spill_factor=0.0)
+    k = request_signature({"prompt": [1] * 40})
+    home = r.pick(1.0, n_instances=3, group="g", affinity_key=k)
+    depths = [0.0] * 3
+    depths[home] = 1e9
+    assert r.pick(1.0, n_instances=3, group="g", affinity_key=k,
+                  queue_depths=depths) == home
+
+
+def test_prefix_affinity_resize_keeps_surviving_homes():
+    r = make_router("prefix_affinity")
+    keys = [request_signature({"prompt": [s] * 40}) for s in range(4)]
+    homes = {k: r.pick(1.0, n_instances=4, group="g", affinity_key=k)
+             for k in keys}
+    # shrink to 2: sessions homed on replicas 0/1 keep them, the rest
+    # re-home in range; grow back keeps everything in range
+    for n in (2, 4, 3):
+        for k in keys:
+            idx = r.pick(1.0, n_instances=n, group="g", affinity_key=k)
+            assert 0 <= idx < n
+            if homes[k] < n <= 2:  # surviving home after the first shrink
+                assert idx == homes[k]
+
+
+def test_prefix_affinity_map_is_lru_bounded():
+    r = make_router("prefix_affinity", map_capacity=8)
+    for s in range(50):
+        r.pick(1.0, n_instances=2, group="g",
+               affinity_key=request_signature({"prompt": [s, s + 1] * 20}))
+    assert len(r._groups["g"]["amap"]) <= 8
+
+
+def test_prefix_affinity_single_instance_miss_then_hit():
+    """Even at one replica, first contact is a miss and repeats are hits,
+    so hit rates mean the same thing at every replica count."""
+    r = make_router("prefix_affinity")
+    info = {}
+    assert r.pick(1.0, n_instances=1, group="g",
+                  affinity_key=1234, info=info) == 0
+    assert info["affinity"] == "miss"
+    info = {}
+    assert r.pick(1.0, n_instances=1, group="g",
+                  affinity_key=1234, info=info) == 0
+    assert info["affinity"] == "hit"
+
+
+def test_router_from_policy_threads_affinity_knobs():
+    class P:
+        routing = "prefix_affinity"
+        affinity_prefix_len = 7
+        affinity_spill_factor = 5.5
+
+    r = router_from_policy(P())
+    assert isinstance(r, PrefixAffinityRouter)
+    assert r.prefix_len == 7
+    assert r.spill_factor == 5.5
+    assert router_from_policy(None).__class__ is RoundRobinRouter

@@ -86,3 +86,87 @@ def test_cache_pool_set_len(small_lm):
     lens = pool.cache["scan"]["len"]
     assert int(lens[0, 1]) == 7
     assert int(lens[0, 0]) == 0
+
+
+# ---------------------------------------------------------------------------
+# Prefix-reuse fast path: a prompt extending a resident slot's tokens skips
+# prefill for the cached prefix and still generates identically
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_reuse_matches_from_scratch(small_lm):
+    cfg, api, params = small_lm
+    eng = InferenceEngine(cfg, params, max_num_seqs=4,
+                          max_num_batched_tokens=256, max_len=128,
+                          prefill_buckets=(16, 32, 64))
+    rng = np.random.RandomState(0)
+    p1 = list(rng.randint(0, 512, size=12))
+    u1 = eng.submit(p1, max_new_tokens=5)
+    turn1 = eng.run()[u1].output
+    # turn 2 extends turn 1's transcript (prompt + reply + new user tokens)
+    p2 = p1 + turn1 + list(rng.randint(0, 512, size=7))
+    u2 = eng.submit(p2, max_new_tokens=5)
+    out2 = eng.run()[u2].output
+    assert eng.stats.prefix_reuse_hits == 1
+    # resident sequence covers p1 + turn1 minus the never-fed last token
+    assert eng.stats.prefix_cached_tokens == len(p1) + len(turn1) - 1
+    assert out2 == _ref_generate(api, params, cfg, p2, 5)
+
+
+def test_prefix_reuse_multi_turn_chain(small_lm):
+    """Three chained turns: each resumes the previous one's slot."""
+    cfg, api, params = small_lm
+    eng = InferenceEngine(cfg, params, max_num_seqs=2,
+                          max_num_batched_tokens=256, max_len=128,
+                          prefill_buckets=(16, 32, 64))
+    prompt = [11, 12, 13, 14, 15]
+    for turn in range(3):
+        uid = eng.submit(list(prompt), max_new_tokens=4)
+        out = eng.run()[uid].output
+        assert out == _ref_generate(api, params, cfg, prompt, 4)
+        prompt = prompt + out + [100 + turn, 101 + turn]
+    assert eng.stats.prefix_reuse_hits == 2
+    assert eng.pool.n_free == 2  # all slots returned
+
+
+def test_unrelated_prompt_does_not_resume(small_lm):
+    cfg, api, params = small_lm
+    eng = InferenceEngine(cfg, params, max_num_seqs=2,
+                          max_num_batched_tokens=256, max_len=128,
+                          prefill_buckets=(16, 32))
+    u1 = eng.submit([1, 2, 3, 4, 5, 6], max_new_tokens=3)
+    eng.run()
+    u2 = eng.submit([9, 8, 7, 6, 5, 4], max_new_tokens=3)
+    out = eng.run()[u2].output
+    assert eng.stats.prefix_reuse_hits == 0
+    assert out == _ref_generate(api, params, cfg, [9, 8, 7, 6, 5, 4], 3)
+
+
+def test_prefix_reuse_can_be_disabled(small_lm):
+    cfg, _, params = small_lm
+    eng = InferenceEngine(cfg, params, max_num_seqs=2, max_len=64,
+                          prefill_buckets=(16,), enable_prefix_reuse=False)
+    u1 = eng.submit([1, 2, 3, 4], max_new_tokens=3)
+    out1 = eng.run()[u1].output
+    u2 = eng.submit([1, 2, 3, 4] + out1 + [5], max_new_tokens=3)
+    eng.run()
+    assert eng.stats.prefix_reuse_hits == 0
+    assert not eng._resident
+
+
+def test_prefix_reuse_slot_contention(small_lm):
+    """A resident slot claimed by a fresh prefill (normal allocation) is
+    no longer resumable; the engine stays correct either way."""
+    cfg, api, params = small_lm
+    eng = InferenceEngine(cfg, params, max_num_seqs=1,
+                          max_num_batched_tokens=256, max_len=128,
+                          prefill_buckets=(16, 32))
+    u1 = eng.submit([1, 2, 3, 4, 5], max_new_tokens=3)
+    out1 = eng.run()[u1].output
+    # unrelated request recycles the only slot -> residency dropped
+    u2 = eng.submit([7, 7, 7, 7], max_new_tokens=3)
+    eng.run()
+    p3 = [1, 2, 3, 4, 5] + out1 + [6]
+    u3 = eng.submit(p3, max_new_tokens=3)
+    out3 = eng.run()[u3].output
+    assert out3 == _ref_generate(api, params, cfg, p3, 3)
