@@ -18,16 +18,30 @@ replica count — the Fig 5d shape: near-linear aggregate scaling.
 Affinity sweep (``--affinity``): sessioned multi-turn request streams
 (each session's prompt grows turn over turn, the chat pattern) against a
 synthetic servicer whose cost covers only the prompt tokens its replica
-has NOT already served — the KV-reuse cost model.  Compares
-``prefix_affinity`` vs ``least_loaded`` across replica counts on both the
-sessioned stream (hit rate + throughput win) and a uniform stream of
-unrelated prompts (no-regression check)::
+has NOT already served — the KV-reuse cost model, radix-accurate: a
+replica that served a *diverging* sibling prompt still covers the shared
+stem (partial prefix resume).  Compares ``radix_affinity`` (longest-
+prefix-match + prefix-aware spill) vs ``prefix_affinity`` (PR 2's
+hashed-LRU baseline) vs ``least_loaded`` across replica counts on three
+streams:
+
+  * ``sessioned`` — per-session unique prefixes, monotonically growing
+    prompts (hit rate + throughput win for both sticky policies);
+  * ``branching`` — the agentic-campaign pattern (paper §Fig. 7): every
+    agent shares one system-prompt stem LONGER than the hashed affinity
+    window, then diverges with its own turns.  The hash maps all agents
+    to a single key, so hashed-LRU cannot tell sessions apart; radix
+    longest-match still homes each agent on its warmest replica;
+  * ``uniform`` — unrelated prompts (no-regression check)::
 
     PYTHONPATH=src python -m benchmarks.bench_routing --affinity --replicas 1 2 4
+
+``--json`` emits the rows as a JSON array (CI smoke parses it).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
@@ -35,6 +49,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import (ExecutionPolicy, ResourceDescription, Rhapsody,
                         ServiceDescription, TaskDescription, TaskKind)
+from repro.core.prefix import RadixIndex
 from repro.core.router import ROUTERS
 from repro.serving.client import llm_service_factory
 
@@ -215,43 +230,44 @@ def replica_sweep(replica_counts, *, n_requests: int = 64,
 
 
 class SessionedServicer:
-    """Synthetic engine with per-replica prefix caching: serving a prompt
-    costs wall time only for the tokens this replica has not already
-    served for the same session prefix (the KV-reuse model).  Affinity
+    """Synthetic engine with per-replica radix prefix caching: serving a
+    prompt costs wall time only for the tokens this replica's cache does
+    not already cover — where coverage is the longest common prefix with
+    ANY sequence served here, exactly the engine's partial-resume rule (a
+    diverging sibling prompt still covers the shared stem).  Affinity
     routing keeps a session on one replica, so its growing prompt re-pays
-    only the new suffix; scattering it re-pays the whole prompt."""
+    only the new suffix; scattering it re-pays everything past the stem.
+    Exposes ``residency_summary`` so the replica set can gossip this
+    replica's cache contents to the router."""
 
     def __init__(self, base_ms: float = 1.0, us_per_token: float = 60.0):
         self.base_ms = base_ms
         self.us_per_token = us_per_token
-        self._seen: dict = {}  # session prefix -> longest prompt len served
+        self._served = RadixIndex(capacity=512)  # models bounded KV space
 
     def handle(self, payload):
         p = payload["prompt"]
-        key = tuple(p[:16])
-        cached = min(self._seen.get(key, 0), len(p))
+        cached, _ = self._served.longest_match(p)
         uncached = len(p) - cached
         time.sleep(self.base_ms * 1e-3 + uncached * self.us_per_token * 1e-6)
-        self._seen[key] = max(self._seen.get(key, 0), len(p))
+        self._served.insert(p, 0)  # one anonymous cache: compaction folds
+        #                            a session's earlier, shorter turns
         return {"n_prompt": len(p), "uncached": uncached}
 
+    def residency_summary(self, max_len: int = 128):
+        return self._served.summary(max_entries=64, max_len=max_len)
 
-def sessioned_prompts(n_sessions: int, turns: int, *, prefix_len: int = 32,
-                      turn_len: int = 24, seed: int = 0) -> list:
-    """Per-turn waves of prompts: session s's turn t prompt is its unique
-    base prefix plus t accumulated turn extensions (monotonically growing,
-    like a chat transcript).  Turn lengths are heterogeneous and each
-    wave's arrival order is shuffled — on a perfectly regular stream a
+
+def _turn_waves(bases: list, turns: int, turn_len: int, rng) -> list:
+    """Grow each base by one heterogeneous-length turn per wave and
+    shuffle each wave's arrival order — on a perfectly regular stream a
     load-balancing router stays accidentally sticky (every wave assigns
     identically), which no production request mix resembles.  Returns
-    ``turns`` lists of ``n_sessions`` prompts."""
-    rng = np.random.RandomState(seed)
-    bases = [list(rng.randint(0, 512, size=prefix_len))
-             for _ in range(n_sessions)]
-    waves = []
+    ``turns`` lists of ``len(bases)`` prompts (growing transcripts)."""
     grown = [list(b) for b in bases]
+    waves = []
     for _ in range(turns):
-        for s in range(n_sessions):
+        for s in range(len(grown)):
             ext = rng.randint(max(1, turn_len // 2), 2 * turn_len)
             grown[s] = grown[s] + list(rng.randint(0, 512, size=ext))
         wave = [list(g) for g in grown]
@@ -260,13 +276,45 @@ def sessioned_prompts(n_sessions: int, turns: int, *, prefix_len: int = 32,
     return waves
 
 
+def sessioned_prompts(n_sessions: int, turns: int, *, prefix_len: int = 32,
+                      turn_len: int = 24, seed: int = 0) -> list:
+    """Per-turn waves of prompts: session s's turn t prompt is its UNIQUE
+    base prefix plus t accumulated turn extensions (monotonically growing,
+    like a chat transcript)."""
+    rng = np.random.RandomState(seed)
+    bases = [list(rng.randint(0, 512, size=prefix_len))
+             for _ in range(n_sessions)]
+    return _turn_waves(bases, turns, turn_len, rng)
+
+
+def branching_prompts(n_agents: int, turns: int, *, stem_len: int = 48,
+                      turn_len: int = 24, seed: int = 0) -> list:
+    """Branching-session waves: the agentic-campaign pattern (paper
+    §Fig. 7).  EVERY agent's prompt starts with one SHARED system-prompt
+    stem — longer than the hashed affinity window, so ``request_signature``
+    maps all agents to a single key — then diverges with the agent's own
+    accumulated turns.  Hashed-LRU routing cannot tell the agents apart;
+    radix longest-prefix-match homes each agent on the replica holding its
+    own transcript, and the shared stem is still partially resumable
+    anywhere."""
+    rng = np.random.RandomState(seed)
+    stem = list(rng.randint(0, 512, size=stem_len))
+    return _turn_waves([stem] * n_agents, turns, turn_len, rng)
+
+
 def affinity_run(n_replicas: int, policy: str, waves, *,
                  uniform=None) -> dict:
     """Drive sessioned turn-waves (and optionally a uniform stream) through
     the middleware under ``policy``; report hit rate + throughput."""
+    # spill tuning per policy: hashed-LRU re-homes its whole (coarse) key
+    # on every spill, so it needs a lax threshold to avoid thrash; radix
+    # spills to the SECOND-longest prefix holder (which then serves the
+    # shared stem warm), so an eager threshold spreads a shared-stem
+    # stampede across replicas without losing reuse
+    spill = 2.0 if policy == "radix_affinity" else 4.0
     rh = Rhapsody(
         ResourceDescription(nodes=1, cores_per_node=64),
-        policy=ExecutionPolicy(routing=policy, affinity_spill_factor=4.0),
+        policy=ExecutionPolicy(routing=policy, affinity_spill_factor=spill),
         n_workers=1)
     try:
         rs = rh.add_service(ServiceDescription(
@@ -302,28 +350,30 @@ def affinity_run(n_replicas: int, policy: str, waves, *,
 
 
 def affinity_sweep(replica_counts, *, n_sessions: int = 8, turns: int = 8,
-                   n_uniform: int = 192, seed: int = 0,
-                   repeats: int = 3) -> list:
+                   n_uniform: int = 192, seed: int = 0, repeats: int = 3,
+                   policies=("least_loaded", "prefix_affinity",
+                             "radix_affinity")) -> list:
     """Each (stream, policy, replicas) cell reports the best of ``repeats``
     runs: these are sub-second sleep-calibrated microbenchmarks, where OS
     thread scheduling adds +-30% run-to-run noise that best-of-N removes
     (the routing decisions themselves are deterministic per run)."""
-    waves = sessioned_prompts(n_sessions, turns, seed=seed)
-    uniform = hetero_prompts(n_uniform, seed=seed + 1, lo=32, hi=224)
+    streams = [
+        ("sessioned", sessioned_prompts(n_sessions, turns, seed=seed), None),
+        ("branching", branching_prompts(n_sessions, turns, seed=seed + 2),
+         None),
+        ("uniform", None,
+         hetero_prompts(n_uniform, seed=seed + 1, lo=32, hi=224)),
+    ]
     rows = []
     for n in replica_counts:
         n = max(1, n)
-        for policy in ("least_loaded", "prefix_affinity"):
-            r = max((affinity_run(n, policy, waves)
-                     for _ in range(repeats)),
-                    key=lambda x: x["req_per_s"])
-            r["stream"] = "sessioned"
-            rows.append(r)
-            u = max((affinity_run(n, policy, None, uniform=uniform)
-                     for _ in range(repeats)),
-                    key=lambda x: x["req_per_s"])
-            u["stream"] = "uniform"
-            rows.append(u)
+        for policy in policies:
+            for stream, waves, uniform in streams:
+                r = max((affinity_run(n, policy, waves, uniform=uniform)
+                         for _ in range(repeats)),
+                        key=lambda x: x["req_per_s"])
+                r["stream"] = stream
+                rows.append(r)
     return rows
 
 
@@ -356,20 +406,28 @@ if __name__ == "__main__":
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--routing", default="balanced", choices=tuple(ROUTERS))
     ap.add_argument("--affinity", action="store_true",
-                    help="prefix-affinity vs least-loaded sweep: sessioned "
-                         "multi-turn + uniform streams, hit rate and "
-                         "throughput per replica count")
+                    help="affinity routing sweep (radix longest-match vs "
+                         "hashed-LRU vs least-loaded): sessioned, "
+                         "branching (shared-stem agents), and uniform "
+                         "streams; hit rate and throughput per replica "
+                         "count")
     ap.add_argument("--sessions", type=int, default=8)
     ap.add_argument("--turns", type=int, default=8)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="best-of-N runs per cell (noise suppression)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit rows as a JSON array instead of CSV")
     args = ap.parse_args()
     if args.affinity:
-        _print_affinity(affinity_sweep(args.replicas or (1, 2, 4),
-                                       n_sessions=args.sessions,
-                                       turns=args.turns,
-                                       n_uniform=args.requests))
+        rows = affinity_sweep(args.replicas or (1, 2, 4),
+                              n_sessions=args.sessions,
+                              turns=args.turns,
+                              n_uniform=args.requests,
+                              repeats=max(1, args.repeats))
+        print(json.dumps(rows)) if args.json else _print_affinity(rows)
     elif args.replicas:
-        _print_sweep(replica_sweep(args.replicas,
-                                   n_requests=args.requests,
-                                   routing=args.routing))
+        rows = replica_sweep(args.replicas, n_requests=args.requests,
+                             routing=args.routing)
+        print(json.dumps(rows)) if args.json else _print_sweep(rows)
     else:
         main(Reporter())

@@ -16,13 +16,24 @@ class ExecutionPolicy:
     colocate_coupled: bool = True  # coupled pairs pinned to the same node
     # routing (inference)
     routing: str = "balanced"  # random | round_robin | balanced |
-    #                            least_loaded | prefix_affinity
+    #                            least_loaded | prefix_affinity |
+    #                            radix_affinity
     affinity_prefix_len: int = 32  # prompt tokens/chars hashed into the
     #                                sticky key (prefix_affinity routing)
     affinity_spill_factor: float = 2.0  # sticky replica sheds when its
     #                                     queue depth exceeds
     #                                     factor * (min depth + 1); <=0
     #                                     disables spilling entirely
+    affinity_max_prefix: int = 128  # radix_affinity: prompt tokens kept
+    #                                 (lossless) in the session/residency
+    #                                 radix indices
+    affinity_min_match: int = 8  # radix_affinity: shortest common prefix
+    #                              that counts as a match (shorter ones
+    #                              route by load, not stickiness)
+    residency_sync_every: int = 32  # routed requests between residency
+    #                                 gossip pulls from the replicas'
+    #                                 engines (0 disables the periodic
+    #                                 pull; stats() always syncs)
     # services: replication + autoscaling
     replicas: int = 1  # default replica count when a ServiceDescription
     #                    leaves ``replicas`` unset
@@ -51,3 +62,8 @@ class ExecutionPolicy:
     restart_max_attempts: int = 6  # consecutive crash-relaunches before a
     #                                replica is declared dead (degraded
     #                                set); <=0 means retry forever
+    dead_replica_grace_s: float = 2.0  # how long a declared-dead replica
+    #                                    stays visible (degraded) before it
+    #                                    is folded out of the set with its
+    #                                    stats merged into the aggregate;
+    #                                    <0 keeps the corpse forever

@@ -24,6 +24,23 @@ spilling to the least-loaded replica only when the sticky one is backed
 up past ``spill_factor``.  This is the vLLM-prefix-caching / SGLang-
 RadixAttention scheduling insight: affinity beats pure balance once the
 serving side can reuse prefill work (see ``repro.serving.engine``).
+
+``RadixAffinityRouter`` replaces the fixed-length hash with true radix
+longest-prefix-match over the raw token prefix (``request_prefix``):
+sessions whose turns diverge *after* the hashed window still route to
+their warmest replica, an overloaded sticky replica sheds to the replica
+holding the **second-longest** matching prefix (not blindly to
+least-loaded), and per-replica residency summaries gossiped by the
+replica set (``update_residency``) ground those decisions in what each
+replica's KV cache actually holds.  See ``repro.core.prefix`` for the
+unified residency architecture.
+
+Sticky state (the affinity maps / radix indices) lives in a store keyed
+separately from per-membership balance state: callers that pass stable
+``members`` identities and an ``affinity_group`` (see
+``ReplicaSet.route``) keep session assignments across replica-set
+membership changes, so an autoscale or crash re-homes only the sessions
+whose replica actually left.
 """
 from __future__ import annotations
 
@@ -32,6 +49,8 @@ import random
 import threading
 from collections import OrderedDict
 from typing import Any, Callable, Optional, Sequence
+
+from .prefix import RadixIndex
 
 
 def default_cost(request) -> float:
@@ -79,6 +98,31 @@ def request_signature(request, prefix_len: int = 32) -> Optional[int]:
     return int.from_bytes(digest.digest(), "big")
 
 
+def request_prefix(request, max_len: int = 128) -> Optional[tuple]:
+    """Raw bounded prompt prefix of one request, as a canonical tuple —
+    the radix router's affinity key.  Unlike ``request_signature`` this is
+    lossless up to ``max_len``, so longest-prefix-match can see WHERE two
+    sessions diverge instead of collapsing them to equal/unequal hashes.
+    Dict payloads are keyed by ``payload["prompt"]``; requests with no
+    sliceable prompt return ``None`` (no affinity — route by load)."""
+    prompt = request.get("prompt") if isinstance(request, dict) else request
+    if prompt is None or max_len <= 0:
+        return None
+    if isinstance(prompt, (str, bytes)):
+        return tuple(prompt[:max_len]) or None
+    try:
+        prefix = tuple(prompt[:max_len])
+    except TypeError:  # not sliceable (int uid, object payload, ...)
+        return None
+    try:
+        # same integer canonicalization as request_signature: value-equal
+        # token ids must compare equal whatever their element type
+        prefix = tuple(x.__index__() for x in prefix)
+    except (AttributeError, TypeError):
+        pass  # non-integer elements: match by their own equality
+    return prefix or None
+
+
 class Router:
     """Base router: per-group incremental state + a generic batch assign.
 
@@ -91,12 +135,20 @@ class Router:
     """
 
     uses_affinity = False  # True -> callers should compute signature()
+    uses_residency = False  # True -> callers should gossip residency
+    #                         summaries via update_residency()
 
     def __init__(self):
         self._lock = threading.Lock()
         self._groups: dict[str, Any] = {}
+        # sticky/affinity state, keyed SEPARATELY from balance state: a
+        # caller that keys ``group`` by membership (so positional load
+        # history resets on churn) can still pass a stable
+        # ``affinity_group`` so session assignments survive membership
+        # changes (LRU-bounded like _groups)
+        self._affinity: "OrderedDict[Any, dict]" = OrderedDict()
 
-    def signature(self, request) -> Optional[int]:
+    def signature(self, request) -> Optional[Any]:
         """Affinity key for ``request``; None for affinity-blind routers
         (so callers can pass ``signature(payload)`` unconditionally)."""
         return None
@@ -105,17 +157,30 @@ class Router:
     def pick(self, cost: float = 1.0, *, n_instances: int,
              group: str = "default",
              queue_depths: Optional[Sequence[float]] = None,
-             affinity_key: Optional[int] = None,
-             info: Optional[dict] = None) -> int:
+             affinity_key: Optional[Any] = None,
+             info: Optional[dict] = None,
+             members: Optional[Sequence] = None,
+             affinity_group: Optional[Any] = None) -> int:
         """Route one request of estimated ``cost``; returns a replica index.
 
-        ``affinity_key`` (see ``request_signature``) lets sticky routers
-        pin requests sharing a prompt prefix to one replica; ``info``, if
-        given, is filled with ``{"affinity": "hit"|"miss"|"spill"}`` so the
-        caller can account KV-reuse without a second lookup.
+        ``affinity_key`` (see ``request_signature``/``request_prefix``)
+        lets sticky routers pin requests sharing a prompt prefix to one
+        replica; ``info``, if given, is filled with ``{"affinity":
+        "hit"|"miss"|"spill"}`` so the caller can account KV-reuse without
+        a second lookup.
+
+        ``members`` names the current candidates with STABLE identities
+        (e.g. replica indices that are never reused); sticky routers store
+        assignments against those identities, so a membership change
+        re-homes only sessions whose member actually left.  Defaults to
+        positions ``0..n-1``.  ``affinity_group`` keys the sticky state
+        (defaults to ``group``); pass something stable across membership
+        changes to carry assignments through autoscale/crash churn.
         """
         if n_instances <= 0:
             raise ValueError("n_instances must be >= 1")
+        if members is not None and len(members) != n_instances:
+            raise ValueError("members must have n_instances entries")
         if n_instances == 1 and (affinity_key is None
                                  or not self.uses_affinity):
             return 0  # trivial: skip state bookkeeping entirely
@@ -133,13 +198,45 @@ class Router:
             # pop + reinsert keeps insertion order = recency order, so
             # the eviction above drops the least-recently-USED group
             self._groups[group] = state
+            astate = None
+            if self.uses_affinity:
+                astate = self._affinity_state(
+                    group if affinity_group is None else affinity_group)
+            mem = tuple(members) if members is not None \
+                else tuple(range(n_instances))
             idx = self._pick_affinity(state, cost, queue_depths,
-                                      affinity_key, info)
+                                      affinity_key, info,
+                                      astate=astate, members=mem)
         return idx
 
-    def reset(self, group: str = "default"):
+    def _affinity_state(self, key) -> dict:
+        """Get-or-create the sticky state for one affinity group (caller
+        holds the lock)."""
+        astate = self._affinity.pop(key, None)
+        if astate is None:
+            astate = self._new_affinity_state()
+            while len(self._affinity) >= 512:
+                self._affinity.popitem(last=False)
+        self._affinity[key] = astate
+        return astate
+
+    def update_residency(self, affinity_group, member, seqs: Sequence):
+        """Feed one member's resident prefix sequences (replica-set
+        gossip); affinity-blind routers ignore it."""
+
+    def forget_member(self, affinity_group, member):
+        """Drop all sticky state pointing at ``member`` (it left the
+        replica set for good); affinity-blind routers ignore it."""
+
+    def reset(self, group: str = "default", affinity_group=None):
+        """Drop one group's balance state and its sticky state.  Callers
+        that route with a distinct ``affinity_group`` (see
+        ``ReplicaSet.route``) must pass it too — sticky state lives under
+        that key, not under ``group``."""
         with self._lock:
             self._groups.pop(group, None)
+            self._affinity.pop(
+                group if affinity_group is None else affinity_group, None)
 
     # -- batch API ----------------------------------------------------------
     def _batch_order(self, requests: Sequence, cost: Callable):
@@ -162,14 +259,27 @@ class Router:
     def _new_state(self, n: int) -> dict:
         return {"n": n}
 
+    def _new_affinity_state(self) -> dict:
+        return {}
+
     def _resize(self, state: Optional[dict], n: int) -> dict:
         """Default: start fresh when the replica count changes."""
         return self._new_state(n)
 
+    def _overloaded(self, idx: int,
+                    queue_depths: Optional[Sequence[float]]) -> bool:
+        """Spill signal shared by the sticky routers: a replica whose live
+        queue depth exceeds ``spill_factor * (min_depth + 1)`` sheds."""
+        factor = getattr(self, "spill_factor", 0.0)
+        if queue_depths is None or factor <= 0:
+            return False  # no live load signal: stickiness wins
+        return queue_depths[idx] > factor * (min(queue_depths) + 1.0)
+
     def _pick_affinity(self, state: dict, cost: float,
                        queue_depths: Optional[Sequence[float]],
-                       affinity_key: Optional[int],
-                       info: Optional[dict]) -> int:
+                       affinity_key: Optional[Any],
+                       info: Optional[dict], *, astate: Optional[dict],
+                       members: tuple) -> int:
         """Affinity-blind default: ignore the key, delegate to ``_pick``."""
         return self._pick(state, cost, queue_depths)
 
@@ -261,15 +371,16 @@ class LeastLoadedRouter(TokenAwareBalancedRouter):
 class PrefixAffinityRouter(LeastLoadedRouter):
     """Sticky-session routing keyed by prompt-prefix hash (KV-cache reuse).
 
-    Per group, a bounded LRU map ``affinity_key -> replica index`` pins a
-    session (all requests sharing a prompt prefix) to one replica, so the
-    serving engine behind it can skip prefill for the resident prefix.
+    Per affinity group, a bounded LRU map ``affinity_key -> member`` pins
+    a session (all requests sharing a prompt prefix) to one replica, so
+    the serving engine behind it can skip prefill for the resident prefix.
     Unkeyed requests and first-seen keys fall through to the least-loaded
     policy; a sticky replica whose live queue depth exceeds
     ``spill_factor * (min_depth + 1)`` sheds the request (and re-homes the
-    session) rather than letting affinity defeat load balance.  Resizes
-    (autoscaling a FIXED group) keep mappings that still point at live
-    replicas and drop the rest.
+    session) rather than letting affinity defeat load balance.  Sticky
+    entries name stable member identities, so membership changes (an
+    autoscale shrink, a crash) re-home only the sessions whose member
+    actually left the candidate set.
     """
 
     uses_affinity = True
@@ -284,50 +395,160 @@ class PrefixAffinityRouter(LeastLoadedRouter):
     def signature(self, request) -> Optional[int]:
         return request_signature(request, prefix_len=self.prefix_len)
 
-    def _new_state(self, n):
-        state = super()._new_state(n)
-        state["amap"] = OrderedDict()  # affinity_key -> replica idx (LRU)
-        return state
+    def _new_affinity_state(self):
+        return {"amap": OrderedDict()}  # affinity_key -> member id (LRU)
 
-    def _resize(self, state, n):
-        fresh = super()._resize(state, n)
-        if state is not None:
-            # sessions pinned to replicas that survive the resize keep
-            # their (still cache-warm) home; the rest re-home on next pick
-            fresh["amap"] = OrderedDict(
-                (k, v) for k, v in state["amap"].items() if v < n)
-        return fresh
+    def forget_member(self, affinity_group, member):
+        with self._lock:
+            astate = self._affinity.get(affinity_group)
+            if astate is None:
+                return
+            amap = astate["amap"]
+            for k in [k for k, v in amap.items() if v == member]:
+                del amap[k]
 
-    def _overloaded(self, sticky: int, queue_depths) -> bool:
-        if queue_depths is None or self.spill_factor <= 0:
-            return False  # no live load signal: stickiness wins
-        return queue_depths[sticky] > self.spill_factor * (
-            min(queue_depths) + 1.0)
-
-    def _pick_affinity(self, state, cost, queue_depths, affinity_key, info):
+    def _pick_affinity(self, state, cost, queue_depths, affinity_key, info,
+                       *, astate, members):
         if affinity_key is None:
             return self._pick(state, cost, queue_depths)
-        amap = state["amap"]
+        amap = astate["amap"]
         sticky = amap.get(affinity_key)
-        if sticky is not None and sticky < state["n"]:
-            if not self._overloaded(sticky, queue_depths):
+        pos = members.index(sticky) if sticky in members else None
+        if pos is not None:
+            if not self._overloaded(pos, queue_depths):
                 amap.move_to_end(affinity_key)
                 # charge the balance history the fallback policy reads, so
                 # sticky traffic still counts as load on its home replica
-                state["loads"][sticky] += cost
-                state["counts"][sticky] += 1
+                state["loads"][pos] += cost
+                state["counts"][pos] += 1
                 if info is not None:
                     info["affinity"] = "hit"
-                return sticky
+                return pos
             if info is not None:
                 info["affinity"] = "spill"
         elif info is not None:
             info["affinity"] = "miss"
         idx = self._pick(state, cost, queue_depths)
-        amap[affinity_key] = idx  # (re-)home the session where it landed
+        amap[affinity_key] = members[idx]  # (re-)home the session here
         amap.move_to_end(affinity_key)
         while len(amap) > self.map_capacity:
             amap.popitem(last=False)
+        return idx
+
+
+class RadixAffinityRouter(LeastLoadedRouter):
+    """Radix longest-prefix-match routing (the SGLang RadixAttention
+    scheduling insight, applied at the router layer).
+
+    Per affinity group, TWO ``RadixIndex`` structures over raw token
+    prefixes (``request_prefix``, lossless up to ``max_prefix`` tokens):
+
+      * ``sessions`` — observed prompt prefix -> member that served it
+        (assignment memory, replacing the hashed LRU map).  Because the
+        match is longest-common-prefix, a session whose turns diverge
+        after any fixed hash window still finds its warmest replica, and
+        two sessions sharing only a system-prompt stem are distinguished
+        by their own turns.
+      * ``residency`` — prefixes each member's KV cache actually holds,
+        gossiped by the replica set (``update_residency``) from the
+        engines' residency summaries.
+
+    A pick routes to the member with the deepest match of at least
+    ``min_match`` tokens (ties prefer the shallower queue); when that
+    member is overloaded (same ``spill_factor`` rule as
+    ``PrefixAffinityRouter``) it sheds to the member holding the
+    *second-longest* matching prefix — prefix-aware spill — and only
+    falls back to least-loaded when no other member knows the prefix.
+    Assignments name stable member identities, so membership churn
+    re-homes only sessions homed on a departed member.
+    """
+
+    uses_affinity = True
+    uses_residency = True
+
+    def __init__(self, max_prefix: int = 128, min_match: int = 8,
+                 spill_factor: float = 2.0, map_capacity: int = 4096):
+        super().__init__()
+        self.max_prefix = max_prefix
+        self.min_match = max(1, min_match)
+        self.spill_factor = spill_factor
+        self.map_capacity = map_capacity
+
+    def signature(self, request) -> Optional[tuple]:
+        return request_prefix(request, max_len=self.max_prefix)
+
+    def _new_affinity_state(self):
+        return {"sessions": RadixIndex(capacity=self.map_capacity),
+                "residency": RadixIndex(capacity=self.map_capacity)}
+
+    def update_residency(self, affinity_group, member, seqs):
+        """Replace ``member``'s gossiped residency with ``seqs`` (its
+        engine's current resident prefix sequences)."""
+        with self._lock:
+            astate = self._affinity_state(affinity_group)
+            res = astate["residency"]
+            res.remove_value(member)
+            # cap is a runaway guard only: normal payloads are bounded by
+            # the engine's slot count (and the index's own LRU capacity)
+            for s in list(seqs)[:1024]:
+                res.insert(tuple(s)[:self.max_prefix], member)
+
+    def forget_member(self, affinity_group, member):
+        with self._lock:
+            astate = self._affinity.get(affinity_group)
+            if astate is None:
+                return
+            astate["sessions"].remove_value(member)
+            astate["residency"].remove_value(member)
+
+    def _pick_affinity(self, state, cost, queue_depths, affinity_key, info,
+                       *, astate, members):
+        if not isinstance(affinity_key, tuple) or not affinity_key:
+            return self._pick(state, cost, queue_depths)
+        seq = affinity_key[:self.max_prefix]
+        # best common-prefix length per member, across BOTH assignment
+        # memory and gossiped residency (one O(len(seq)) descent each)
+        depth = astate["sessions"].match_lengths(seq)
+        for v, d in astate["residency"].match_lengths(seq).items():
+            if d > depth.get(v, 0):
+                depth[v] = d
+        pos = {m: i for i, m in enumerate(members)}
+        ranked = [(d, pos[m]) for m, d in depth.items()
+                  if d >= self.min_match and m in pos]
+        # deepest match first; equal depths (e.g. several members holding
+        # the same shared stem) prefer the shallower live queue
+        ranked.sort(key=lambda t: (
+            -t[0], queue_depths[t[1]] if queue_depths is not None else 0.0))
+        outcome = "miss"
+        idx = None
+        for _d, i in ranked:
+            if not self._overloaded(i, queue_depths):
+                idx = i
+                if outcome == "miss":
+                    outcome = "hit"
+                break
+            outcome = "spill"  # matching member overloaded: try the next-
+            #                    longest matching prefix holder
+        if idx is None and ranked and queue_depths is not None and \
+                self.spill_factor > 0 and \
+                queue_depths[ranked[0][1]] <= 2 * self.spill_factor * (
+                    min(queue_depths) + 1.0):
+            # every prefix holder is past the eager threshold, but going
+            # COLD re-pays the whole prefill — stay with the deepest match
+            # until pressure doubles the spill threshold (two-tier spill:
+            # warm->warm moves are cheap, warm->cold moves are not)
+            idx = ranked[0][1]
+            outcome = "hit"
+        if idx is None:
+            idx = self._pick(state, cost, queue_depths)  # charges balance
+        else:
+            state["loads"][idx] += cost
+            state["counts"][idx] += 1
+        if info is not None:
+            info["affinity"] = outcome
+        # remember where this (possibly grown) prefix landed; compaction
+        # inside RadixIndex replaces the session's shorter earlier turns
+        astate["sessions"].insert(seq, members[idx])
         return idx
 
 
@@ -337,6 +558,7 @@ ROUTERS = {
     "balanced": TokenAwareBalancedRouter,
     "least_loaded": LeastLoadedRouter,
     "prefix_affinity": PrefixAffinityRouter,
+    "radix_affinity": RadixAffinityRouter,
 }
 
 
@@ -351,6 +573,12 @@ def router_from_policy(policy) -> Router:
     if kind == "prefix_affinity":
         kw = {
             "prefix_len": getattr(policy, "affinity_prefix_len", 32),
+            "spill_factor": getattr(policy, "affinity_spill_factor", 2.0),
+        }
+    elif kind == "radix_affinity":
+        kw = {
+            "max_prefix": getattr(policy, "affinity_max_prefix", 128),
+            "min_match": getattr(policy, "affinity_min_match", 8),
             "spill_factor": getattr(policy, "affinity_spill_factor", 2.0),
         }
     return make_router(kind, **kw)

@@ -11,9 +11,22 @@ aggregated stats, per-replica restart-on-crash (exponential backoff via
 servicer degrades the set instead of hot-looping), and (optionally)
 queue-depth driven autoscaling within policy bounds.  Requests fan out
 across replicas through the shared router (see ``repro.core.router``);
-with ``routing="prefix_affinity"`` each request's prompt-prefix signature
-pins sessions to their cache-warm replica, and the outcome is accounted
-per endpoint as ``prefix_hits``/``prefix_misses`` in ``stats()``.
+with ``routing="prefix_affinity"`` / ``"radix_affinity"`` each request's
+prompt-prefix signature pins sessions to their cache-warm replica, and the
+outcome is accounted per endpoint as ``prefix_hits``/``prefix_misses`` in
+``stats()``.
+
+Cross-layer residency (see ``repro.core.prefix``): routes pass each
+replica's STABLE identity (``replica_idx``, never reused) plus a stable
+affinity group to the router, so sticky assignments survive membership
+churn — after an autoscale or crash only sessions homed on the departed
+replica re-home.  The stats tick (and every ``residency_sync_every``-th
+route) collects per-replica residency summaries from servicers that
+expose ``residency_summary()`` and gossips them to the router, grounding
+prefix-aware spill in what each replica's KV cache actually holds.  A
+replica that exhausts its restart budget is declared dead, counted in
+``stats()["dead_replicas"]``, and after ``dead_replica_grace_s`` folded
+out of the set with its stats merged into the aggregate.
 """
 from __future__ import annotations
 
@@ -282,6 +295,13 @@ class ReplicaSet:
         self._next_idx = 0  # monotonic replica_idx allocator
         self._uid = next(_replica_set_seq)
         self._crash_history: dict[int, dict] = {}  # replica_idx -> backoff
+        self._route_count = 0  # drives the periodic residency gossip pull
+        self._sync_inflight = False  # at most one async gossip pull at once
+        self._gossip_lock = threading.Lock()  # orders gossip pulls vs
+        #                     forget_member so an in-flight pull can't
+        #                     re-insert a reaped replica's residency
+        self._dead_count = 0  # replicas declared dead (operator-visible)
+        self._dead_pending: list = []  # (declared_at, endpoint) to fold
         self._closed = False
         self._successor: Optional["ReplicaSet"] = None  # set on re-launch
         self._lock = threading.RLock()
@@ -329,6 +349,8 @@ class ReplicaSet:
             pairs = list(zip(self.endpoints, self.instances))
             eps = [ep for ep, _ in pairs
                    if ep.ready.is_set() and not ep.retired]
+            self._route_count += 1  # under the lock: lost increments
+            route_count = self._route_count  # would starve gossip ticks
             if not eps:
                 # none ready yet (launch/relaunch window): queue on a
                 # replica that is still coming up. A crashed replica
@@ -346,17 +368,30 @@ class ReplicaSet:
                                        affinity_key=affinity_key,
                                        account_affinity=account_affinity)
             raise KeyError(f"service {self.name} has no live replicas")
-        # key router state by generation + candidate MEMBERSHIP, not just
+        # periodically gossip replica residency summaries to the router so
+        # prefix-aware spill sees fresh caches (stats() also syncs); the
+        # pull runs on a background thread — snapshotting every engine's
+        # index must not add inline latency to the unlucky Nth request
+        if getattr(router, "uses_residency", False):
+            every = getattr(self.manager.policy, "residency_sync_every", 32)
+            if every and every > 0 and route_count % every == 0:
+                self._sync_residency_async()
+        # key BALANCE state by generation + candidate MEMBERSHIP, not just
         # the name: positions in eps shift as replicas crash/recover, and
         # reusing positional load history across different subsets (or a
         # recurring subset from before a membership change) would charge
-        # one replica's history to another
-        group = (self.name, self._uid, self._gen) + tuple(
-            ep.replica_idx for ep in eps)
+        # one replica's history to another.  Sticky state instead keys on
+        # the stable (name, uid) affinity group with stable replica_idx
+        # member identities, so session assignments survive membership
+        # churn and only sessions homed on a departed replica re-home.
+        members = tuple(ep.replica_idx for ep in eps)
+        group = (self.name, self._uid, self._gen) + members
         info: dict = {}
         idx = router.pick(cost, n_instances=len(eps), group=group,
                           queue_depths=[ep.depth() for ep in eps],
-                          affinity_key=affinity_key, info=info)
+                          affinity_key=affinity_key, info=info,
+                          members=members,
+                          affinity_group=(self.name, self._uid))
         eps[idx].bump("cost", cost)
         if account_affinity:
             affinity = info.get("affinity")
@@ -372,17 +407,74 @@ class ReplicaSet:
         return bool(eps) and all(ep.ready.is_set() for ep in eps)
 
     def stats(self) -> dict:
-        """Aggregate request stats plus the per-replica breakdown."""
+        """Aggregate request stats plus the per-replica breakdown.  This is
+        the stats tick: it also gossips residency summaries to the router
+        and folds any dead replica whose grace period expired."""
+        self.reap_dead()
+        self._sync_residency()
         with self._lock:
             per = [dict(ep.stats) for ep in self.endpoints]
             retired = [dict(ep.stats) for ep in self._retired]
             folded = dict(self._retired_agg)
+            dead = self._dead_count
         agg = {k: folded[k] + sum(p[k] for p in per)
                + sum(p[k] for p in retired)
                for k in _STAT_KEYS}
         agg["replicas"] = len(per)
+        agg["dead_replicas"] = dead  # lifetime count of replicas that
+        #                              exhausted their restart budget (or
+        #                              crashed with restarts disabled)
         agg["per_replica"] = per
         return agg
+
+    def _sync_residency_async(self):
+        """Run one residency gossip pull off the routing path; coalesces
+        with a pull already in flight."""
+        with self._lock:
+            if self._sync_inflight or self._closed:
+                return
+            self._sync_inflight = True
+
+        def work():
+            try:
+                self._sync_residency()
+            finally:
+                self._sync_inflight = False
+
+        threading.Thread(target=work, name=f"residency-{self.name}",
+                         daemon=True).start()
+
+    def _sync_residency(self):
+        """Collect per-replica residency summaries from servicers that
+        expose them and feed the router's residency index (no-op for
+        routers that don't consume gossip and for summary-less
+        servicers)."""
+        router = self.manager.router
+        if not getattr(router, "uses_residency", False):
+            return  # nobody consumes the gossip: skip the collection cost
+        # gossip at the router's own match fidelity: truncating below the
+        # sessions index's max_prefix would silently cap residency matches
+        max_len = getattr(self.manager.policy, "affinity_max_prefix", 128)
+        with self._gossip_lock:  # a retire's forget_member (see
+            # _fold_retired) waits for this pull, so a member reaped AFTER
+            # the snapshot below is forgotten AFTER its last update here
+            with self._lock:
+                pairs = [(ep, inst) for ep, inst
+                         in zip(self.endpoints, self.instances)
+                         if not ep.retired and ep.ready.is_set()]
+            for ep, inst in pairs:
+                fn = getattr(inst.servicer, "residency_summary", None)
+                if fn is None:
+                    continue
+                try:
+                    try:
+                        seqs = fn(max_len=max_len)
+                    except TypeError:  # fixed-fidelity servicer summary
+                        seqs = fn()
+                except Exception:
+                    continue  # crashed mid-snapshot: next tick retries
+                router.update_residency((self.name, self._uid),
+                                        ep.replica_idx, seqs)
 
     def mean_depth(self) -> float:
         with self._lock:
@@ -426,6 +518,16 @@ class ReplicaSet:
             self.instances[idx] = inst
             self._gen += 1  # recovered replica starts with fresh history
         inst.start()
+        router = self.manager.router
+        if getattr(router, "uses_residency", False):
+            # the relaunched servicer starts with an EMPTY cache: drop the
+            # pre-crash gossiped residency so prefix-aware picks stop
+            # chasing a cache that no longer exists.  Sticky assignments
+            # stay — the session must re-warm somewhere, and its home is
+            # as good a place as any.
+            with self._gossip_lock:
+                router.update_residency((self.name, self._uid),
+                                        dead.endpoint.replica_idx, [])
         _await_ready(inst, self.desc.ready_timeout)
 
     def _restart_backoff(self, inst: ServiceInstance) -> tuple[float, bool]:
@@ -605,6 +707,74 @@ class ReplicaSet:
                 old = self._retired.pop(0)
                 for k in self._retired_agg:
                     self._retired_agg[k] += old.stats[k]
+        with self._gossip_lock:  # after any in-flight gossip pull, so a
+            # pull that snapshotted these endpoints can't resurrect them
+            for ep in endpoints:
+                # the replica is gone for good: sticky sessions homed on
+                # it must re-home, and its gossiped residency is stale
+                self.manager.router.forget_member((self.name, self._uid),
+                                                  ep.replica_idx)
+
+    def _declare_dead(self, inst: ServiceInstance):
+        """Mark one replica permanently dead (restart budget exhausted, or
+        restarts disabled): fail its queued futures, count it for
+        operators, and schedule the grace-period fold that removes it from
+        the set with its stats merged into the aggregate."""
+        ep = inst.endpoint
+        ep.on_retired = self._fail_queue
+        ep.retired = True
+        self._fail_queue(ep)
+        grace = getattr(self.manager.policy, "dead_replica_grace_s", 2.0)
+        with self._lock:
+            if self._closed:
+                return
+            self._dead_count += 1
+            if grace is None or grace < 0:
+                return  # operator opted to keep the corpse visible forever
+            self._dead_pending.append((time.perf_counter() + grace, ep))
+        timer = threading.Timer(max(grace, 0.0) + 1e-3, self.reap_dead)
+        timer.daemon = True
+        timer.start()
+
+    def reap_dead(self):
+        """Fold replicas declared dead whose grace period has expired:
+        remove them from the routing membership (bumping the generation)
+        and merge their stats into the retired aggregate.  Idempotent;
+        also called on every stats tick."""
+        now = time.perf_counter()
+        # membership change: serialize vs scaling — but never BLOCK a
+        # stats tick behind a slow in-flight scale; retry shortly instead
+        if not self._scale_lock.acquire(blocking=False):
+            with self._lock:
+                pending = bool(self._dead_pending) and not self._closed
+            if pending:
+                timer = threading.Timer(0.1, self.reap_dead)
+                timer.daemon = True
+                timer.start()
+            return
+        try:
+            folded: list[ServiceEndpoint] = []
+            with self._lock:
+                if self._closed:
+                    self._dead_pending.clear()
+                    return
+                for item in list(self._dead_pending):
+                    due, ep = item
+                    if now < due:
+                        continue
+                    self._dead_pending.remove(item)
+                    try:
+                        i = self.endpoints.index(ep)
+                    except ValueError:
+                        continue  # already swept by a scale-down
+                    self.endpoints.pop(i)
+                    self.instances.pop(i)
+                    self._gen += 1
+                    folded.append(ep)
+        finally:
+            self._scale_lock.release()
+        for ep in folded:
+            self._fold_retired([ep])
 
     def _stop_all(self, join_timeout: float = 2.0):
         # queued futures fail fast instead of hanging to client timeouts
@@ -703,18 +873,28 @@ class ServiceManager:
             raise KeyError(f"unknown service {name}")
         return rs
 
-    def list(self):
+    def list(self, verbose: bool = False):
         """name -> 'ready' (all replicas up) | 'degraded' (some up, e.g.
-        mid scale-up warm-up or crash-restart) | 'down' (none serving)."""
+        mid scale-up warm-up or crash-restart) | 'down' (none serving).
+        With ``verbose=True`` each value is a dict that also carries the
+        replica count and the operator-visible ``dead_replicas`` tally
+        (replicas that exhausted their restart budget and were — or are
+        about to be — folded out of the set)."""
         out = {}
         for n, rs in list(self.replica_sets.items()):  # snapshot: launch()
             # on another thread may insert while we iterate
             if rs.ready():
-                out[n] = "ready"
+                status = "ready"
             elif any(ep.ready.is_set() for ep in list(rs.endpoints)):
-                out[n] = "degraded"
+                status = "degraded"
             else:
-                out[n] = "down"
+                status = "down"
+            if verbose:
+                out[n] = {"status": status, "replicas": rs.n_replicas,
+                          "live": rs.n_live,
+                          "dead_replicas": rs._dead_count}
+            else:
+                out[n] = status
         return out
 
     def stats(self, name: str) -> dict:
@@ -768,12 +948,11 @@ class ServiceManager:
                 self.events.emit(inst.desc.name, "FAILED", "service",
                                  "restart_exhausted")
         # no restart is coming: nothing will ever drain this dead
-        # replica's queue (including crash-replayed in-flight
-        # requests), so fail those futures now instead of letting
-        # clients hang to their own timeouts
-        inst.endpoint.on_retired = rs._fail_queue
-        inst.endpoint.retired = True
-        rs._fail_queue(inst.endpoint)
+        # replica's queue (including crash-replayed in-flight requests),
+        # so fail those futures now instead of letting clients hang to
+        # their own timeouts; after dead_replica_grace_s the corpse is
+        # folded out of the set with its stats merged into the aggregate
+        rs._declare_dead(inst)
 
     # -- autoscaling --------------------------------------------------------
     def _maybe_start_autoscaler(self):

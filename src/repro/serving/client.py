@@ -49,6 +49,13 @@ class LLMServicer:
             }))
         return out
 
+    def residency_summary(self, max_len: int = 128):
+        """Resident prefix sequences for router gossip (thread-safe: the
+        engine's radix index locks internally, so the replica set may
+        snapshot while the engine thread serves).  ``max_len`` is the
+        router's match fidelity (``affinity_max_prefix``)."""
+        return self.engine.residency_summary(max_len=max_len)
+
     @property
     def stats(self):
         return self.engine.stats

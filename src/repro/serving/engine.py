@@ -11,13 +11,19 @@ the paper sweeps (Fig. 5c): ``max_num_seqs`` (decode slot count) and
   3. emits new tokens, retiring finished requests and freeing slots.
 
 Prefix reuse (the serving half of prefix-affinity routing): a freed slot's
-KV cache stays resident until the slot is recycled, remembering the token
-sequence it holds.  When a submitted prompt *extends* a resident sequence
-— the multi-turn chat pattern the ``prefix_affinity`` router steers back
-to this replica — admission skips prefill for the cached prefix entirely:
-the slot is re-claimed, its length rewound to the covered prefix, and only
-the new suffix is fed through the (already batched) decode path.  Hits and
-skipped tokens are tracked in ``EngineStats``.
+KV cache stays resident until the slot is recycled, and the token sequence
+it covers is indexed in a per-engine ``RadixIndex`` (``repro.core.prefix``).
+Admission asks the index for the deepest common prefix across ALL resident
+slots in one O(len(prompt)) descent — replacing the old per-slot linear
+scan — and resumes the best slot: its length is rewound to the covered
+prefix and only the remaining suffix is fed through the (already batched)
+decode path.  The match may be *partial*: a branching turn that shares a
+stem with a resident sequence but diverges mid-way rewinds to the
+divergence point instead of missing entirely (stale KV past the rewind is
+never attended and is overwritten as the suffix feeds in).  The same index
+exports ``residency_summary()``, which the replica set gossips to the
+router so spill decisions know which replica holds which prefix.  Hits,
+partial hits, and skipped tokens are tracked in ``EngineStats``.
 
 Telemetry (per-step active slots, tokens, queue depth) feeds the paper's
 utilization/throughput experiments.
@@ -33,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.prefix import RadixIndex
 from repro.models import ModelApi, get_model
 from repro.models.config import ModelConfig
 from .kvcache import CachePool
@@ -83,6 +90,8 @@ class EngineStats:
     active_slot_steps: int = 0
     slot_steps: int = 0
     prefix_reuse_hits: int = 0  # admissions that resumed a resident slot
+    prefix_partial_hits: int = 0  # resumes that rewound PAST a divergence
+    #                               (resident sequence != prompt prefix)
     prefix_cached_tokens: int = 0  # prompt tokens whose prefill was skipped
     started: float = dataclasses.field(default_factory=time.perf_counter)
 
@@ -114,11 +123,13 @@ class InferenceEngine:
         self.pool = CachePool(cfg, max_num_seqs, max_len)
         self.queue: list[Request] = []
         self.running: dict[int, Request] = {}  # slot -> request
-        # slot -> token sequence its (freed) cache still covers; consulted
-        # at admission for the prefix-reuse fast path.  State-carrying
+        # radix index over the token sequences freed slots' caches still
+        # cover (value = slot id); admission finds the deepest resident
+        # common prefix in one O(len(prompt)) descent.  State-carrying
         # families (ssm/hybrid) have no per-position KV to rewind, so the
         # fast path is gated off for them below.
-        self._resident: dict[int, list] = {}
+        self._prefix_index = RadixIndex()
+        self._resident_len: dict[int, int] = {}  # slot -> covered seq len
         self.stats = EngineStats()
         self._uid = itertools.count()
         self._key = jax.random.PRNGKey(seed)
@@ -184,9 +195,14 @@ class InferenceEngine:
         for slot, req in list(self.running.items()):
             if req.done:
                 del self.running[slot]
-                self.pool.free(slot)
                 if self._prefix_reuse and not req.truncated:
-                    self._resident[slot] = list(req.prompt) + list(req.output)
+                    seq = tuple(req.prompt) + tuple(req.output)
+                    self._drop_residency(slot)  # stale entry, if any
+                    self._prefix_index.insert(seq, slot)
+                    self._resident_len[slot] = len(seq)
+                    self.pool.free(slot, resident=True)
+                else:
+                    self.pool.free(slot)
                 done.append(req)
         return done
 
@@ -217,8 +233,8 @@ class InferenceEngine:
             if bucket > budget:
                 break
             self.queue.pop(0)
-            slot = self.pool.allocate()
-            self._resident.pop(slot, None)  # cache is about to be replaced
+            slot = self.pool.allocate()  # blank-preferring: resident KV is
+            self._drop_residency(slot)  # only evicted when no blank is left
             req.truncated = n < req.n_prompt
             budget -= bucket
             tokens = np.zeros((1, bucket), np.int32)
@@ -255,18 +271,38 @@ class InferenceEngine:
             self.running[slot] = req
             self._check_done(req)
 
-    def _try_resume(self, req: Request) -> bool:
-        """Prefix-reuse fast path: if ``req.prompt`` extends the token
-        sequence a freed slot's cache still covers, claim that slot and
-        skip prefill for the covered prefix.
+    def _drop_residency(self, slot: Optional[int]):
+        """Forget a slot's resident sequence (its cache is being replaced
+        or re-claimed)."""
+        if slot is not None:
+            self._prefix_index.remove_value(slot)
+            self._resident_len.pop(slot, None)
 
-        A resident sequence of length L has KV for its first L-1 tokens
-        (the final emitted token was never fed back), so the resume rewinds
-        the slot's length to L-1 and feeds ``prompt[L-1:]`` through the
+    def residency_summary(self, max_entries: Optional[int] = None,
+                          max_len: int = 128) -> list:
+        """Resident token sequences (newest first, truncated), the payload
+        the replica set gossips to the router's residency index."""
+        return self._prefix_index.summary(
+            max_entries=max_entries or self.max_num_seqs, max_len=max_len)
+
+    def _try_resume(self, req: Request) -> bool:
+        """Prefix-reuse fast path: claim the freed slot whose resident KV
+        shares the deepest usable prefix with ``req.prompt`` and skip
+        prefill for that prefix.
+
+        The radix index answers the best common-prefix length per resident
+        slot in one O(len(prompt)) descent.  A resident sequence of length
+        L has KV for its first L-1 tokens (the final emitted token was
+        never fed back), and the prompt's first d tokens match the resident
+        sequence, so positions < min(d, L-1) hold valid KV — including
+        *partial* matches where the resident transcript diverges from the
+        prompt at d < L (a branching turn).  The resume rewinds the slot's
+        length to that point and feeds the remaining prompt through the
         batched decode — one token per step, exactly the incremental path —
-        with the last feed's logits producing the first new token.  Junk
-        appended at positions >= L-1 while the slot idled (decode advances
-        every slot) is overwritten by those feeds after the rewind.
+        with the last feed's logits producing the first new token.  Stale
+        KV at positions >= the rewind (divergence junk, or junk appended
+        while the slot idled) is never attended and is overwritten by those
+        feeds.
         """
         m = req.n_prompt
         if m >= self.max_len:  # would be truncated: prefix math breaks
@@ -275,27 +311,37 @@ class InferenceEngine:
         # decode step, so resuming must cover at least half the prompt —
         # a short shared stem on a long fresh prompt is cheaper to prefill
         # in one bucketed call than to drip through hundreds of decodes
-        best_slot, best_len = None, max(1, (m + 1) // 2)
-        for slot, seq in self._resident.items():
-            L = len(seq)
-            if L > best_len and L <= m and req.prompt[:L] == seq:
-                best_slot, best_len = slot, L
-        if best_slot is None or not self.pool.take(best_slot):
-            return False
-        seq = self._resident.pop(best_slot)
-        covered = len(seq) - 1
-        self.pool.set_len(best_slot, covered)
-        self._last_tokens = self._last_tokens.at[best_slot].set(
-            req.prompt[covered])
-        req.pending_prefix = list(req.prompt[covered + 1:])
-        req.cached_prefix = covered
-        req.slot = best_slot
-        self.running[best_slot] = req
-        self.stats.prefix_reuse_hits += 1
-        self.stats.prefix_cached_tokens += covered
-        self.stats.prefill_tokens += 1  # the feed queued into _last_tokens;
-        #                                 the rest count as they are fed
-        return True
+        threshold = max(1, (m + 1) // 2)
+        candidates = []
+        for slot, d in self._prefix_index.match_lengths(req.prompt).items():
+            L = self._resident_len.get(slot)
+            if L is None:
+                continue
+            covered = min(d, L - 1, m - 1)
+            if covered >= threshold:
+                candidates.append((covered, slot, L, d))
+        candidates.sort(reverse=True)  # deepest usable rewind first
+        for covered, slot, L, d in candidates:
+            if not self.pool.take(slot):
+                continue  # defensively skip a slot that is no longer free
+            self._drop_residency(slot)
+            self.pool.set_len(slot, covered)
+            self._last_tokens = self._last_tokens.at[slot].set(
+                req.prompt[covered])
+            req.pending_prefix = list(req.prompt[covered + 1:])
+            req.cached_prefix = covered
+            req.slot = slot
+            self.running[slot] = req
+            self.stats.prefix_reuse_hits += 1
+            if d < L and d < m:  # the resident transcript and the prompt
+                #                  genuinely diverge (not a mere replay of
+                #                  a shorter prefix): a true partial resume
+                self.stats.prefix_partial_hits += 1
+            self.stats.prefix_cached_tokens += covered
+            self.stats.prefill_tokens += 1  # the feed queued into
+            #                  _last_tokens; the rest count as they are fed
+            return True
+        return False
 
     def _decode_step(self):
         self._key, sub = jax.random.split(self._key)

@@ -40,7 +40,16 @@ def batch_dim_for(keys, rank: int) -> int:
 
 
 class CachePool:
-    """Zero-initialized cache for ``max_seqs`` slots + slot allocator."""
+    """Zero-initialized cache for ``max_seqs`` slots + residency-aware
+    slot allocator.
+
+    A freed slot may stay *resident*: its KV still covers a token sequence
+    the engine's radix residency index remembers, so a later prompt can
+    resume it.  ``allocate()`` therefore prefers blank free slots (FIFO)
+    and only recycles a resident one when no blank slot is left — evicting
+    reusable KV while a never-used slot sits idle would throw away prefill
+    work for nothing.  Among resident slots, free order approximates
+    least-recent retirement, so the coldest cache is evicted first."""
 
     def __init__(self, cfg: ModelConfig, max_seqs: int, max_len: int):
         self.cfg = cfg
@@ -49,13 +58,30 @@ class CachePool:
         tmpl = sp.cache_template(cfg, max_seqs, max_len)
         self.cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), tmpl)
         self._free = list(range(max_seqs))
+        self._resident: set[int] = set()
 
     # -- slot allocation ------------------------------------------------
     def allocate(self) -> Optional[int]:
-        return self._free.pop(0) if self._free else None
+        """Pop a free slot, blank ones first; the caller must drop any
+        residency bookkeeping for the returned slot (its cache is about
+        to be replaced)."""
+        if not self._free:
+            return None
+        for i, slot in enumerate(self._free):
+            if slot not in self._resident:
+                return self._free.pop(i)
+        slot = self._free.pop(0)  # all free slots resident: evict coldest
+        self._resident.discard(slot)
+        return slot
 
-    def free(self, slot: int):
+    def free(self, slot: int, resident: bool = False):
+        """Return a slot to the pool; ``resident=True`` marks its KV as
+        still covering a resumable sequence (prefix reuse)."""
         self._free.append(slot)
+        if resident:
+            self._resident.add(slot)
+        else:
+            self._resident.discard(slot)
 
     def take(self, slot: int) -> bool:
         """Claim a SPECIFIC free slot (prefix-reuse admission: the engine
@@ -65,11 +91,18 @@ class CachePool:
             self._free.remove(slot)
         except ValueError:
             return False
+        self._resident.discard(slot)
         return True
 
     @property
     def n_free(self) -> int:
         return len(self._free)
+
+    @property
+    def n_free_blank(self) -> int:
+        """Free slots with no resident cache (allocate() serves these
+        first)."""
+        return sum(1 for s in self._free if s not in self._resident)
 
     # -- data movement ----------------------------------------------------
     def insert(self, slot: int, prefill_cache):

@@ -131,6 +131,141 @@ def test_spill_rehomes_session_under_load():
         rh.close()
 
 
+@pytest.mark.parametrize("routing", ["prefix_affinity", "radix_affinity"])
+def test_assignments_carry_across_autoscale_membership_change(routing):
+    """Acceptance: after a forced mid-stream scale event, sessions homed
+    on SURVIVING replicas keep their sticky replica; only sessions homed
+    on the departed replica re-home.  (Before the stable-member-identity
+    refactor, ANY membership change re-homed every session.)"""
+    rh = make_rh(routing=routing, affinity_spill_factor=0.0)  # never spill
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=Echo,
+                                               replicas=3))
+        payloads = [{"prompt": [s] * 40 + list(range(s + 1))}
+                    for s in range(6)]
+
+        def route_home(p):
+            return rs.route(40.0, rh.router,
+                            affinity_key=rh.router.signature(p)).replica_idx
+
+        home = {s: route_home(p) for s, p in enumerate(payloads)}
+        assert set(home.values()) == {0, 1, 2}  # first contacts spread
+        rs.scale_to(2)  # forced scale-down removes replica_idx 2
+        survivors = {ep.replica_idx for ep in rs.endpoints}
+        assert survivors == {0, 1}
+        for s, p in enumerate(payloads):
+            idx = route_home(p)
+            if home[s] in survivors:
+                assert idx == home[s], "surviving session lost its home"
+            else:
+                assert idx in survivors
+                home[s] = idx  # re-homed exactly once
+        rs.scale_to(3)  # grow back: the new replica gets a FRESH identity
+        assert {ep.replica_idx for ep in rs.endpoints} == {0, 1, 3}
+        for s, p in enumerate(payloads):
+            assert route_home(p) == home[s], "grow-back re-homed a session"
+    finally:
+        rh.close()
+
+
+def test_radix_dispatch_sticks_through_branching_sessions():
+    """End to end through the middleware: two agents share a 40-token stem
+    (identical hashed signature, so PR 2's router could not tell them
+    apart) and diverge after it.  Under load the stem stampede spills the
+    second agent to its own replica; every later turn then follows each
+    agent's OWN transcript — radix longest-match stickiness."""
+    turns = 6
+    rh = make_rh(routing="radix_affinity", affinity_spill_factor=2.0)
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=Echo,
+                                               replicas=2))
+        stem = [7] * 40
+        grown = {1: list(stem) + [1], 2: list(stem) + [2]}
+        # first contacts: agent 1 homes somewhere; a simulated backlog on
+        # that replica makes agent 2's stem-only match spill to the other
+        rs.request({"prompt": list(grown[1])}).result(10.0)
+        home1 = next(ep for ep in rs.endpoints if ep.stats["requests"])
+        home1.bump("requests", 50)  # fake queue depth -> overloaded
+        rs.request({"prompt": list(grown[2])}).result(10.0)
+        home1.bump("requests", -50)
+        per = [p["requests"] for p in rs.stats()["per_replica"]]
+        assert sorted(per) == [1, 1]  # the agents separated
+        # turns 2..N through the task dispatch path: each agent's growing
+        # transcript matches DEEPER on its own replica than the shared
+        # stem does anywhere else, so stickiness is per-agent
+        descs = []
+        for t in range(1, turns):
+            for agent in (1, 2):
+                grown[agent] += [agent * 10 + t]
+                descs.append(TaskDescription(
+                    kind=TaskKind.INFERENCE, service="svc",
+                    payload={"prompt": list(grown[agent])},
+                    task_type="inference"))
+        uids = rh.submit(descs)
+        assert rh.wait(uids, timeout=30)
+        stats = rs.stats()
+        assert [p["requests"] for p in stats["per_replica"]] == \
+            [turns, turns]
+        # one true miss (agent 1's first contact), one spill (agent 2's),
+        # everything after follows the per-agent transcript
+        assert stats["prefix_hits"] == 2 * (turns - 1)
+        assert stats["prefix_misses"] == 2
+    finally:
+        rh.close()
+
+
+def test_relaunch_clears_stale_gossiped_residency():
+    """A crashed-and-relaunched replica restarts with an EMPTY cache: its
+    pre-crash gossiped residency must be dropped from the router so
+    prefix matches don't chase a cache that no longer exists (the sibling
+    replica's gossip stays)."""
+
+    class CrashyResident:
+        def __init__(self):
+            self.jobs = {}
+            self.uid = 0
+
+        def submit(self, payload):
+            if payload == "boom":
+                raise SystemError("preempted")
+            self.uid += 1
+            self.jobs[self.uid] = payload
+            return self.uid
+
+        def step(self):
+            out = [(u, "ok") for u in self.jobs]
+            self.jobs.clear()
+            return out
+
+        def residency_summary(self, max_len=128):
+            return [[1, 2, 3, 4, 5, 6, 7, 8][:max_len]]
+
+    rh = make_rh(routing="radix_affinity", restart_failed_services=True,
+                 restart_backoff_s=0.01, restart_backoff_max_s=0.02,
+                 restart_max_attempts=10)
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc",
+                                               factory=CrashyResident,
+                                               replicas=2))
+        rs.stats()  # gossip tick: both replicas' residency lands
+        res = rh.router._affinity[("svc", rs._uid)]["residency"]
+        assert res.values() == {ep.replica_idx for ep in rs.endpoints}
+        victim = rs.endpoints[0]
+        with pytest.raises((SystemError, RuntimeError)):
+            victim.request("boom").result(10.0)  # crash -> relaunch
+        deadline = time.perf_counter() + 10
+        while time.perf_counter() < deadline and \
+                victim.replica_idx in res.values():
+            time.sleep(0.01)
+        # the relaunched replica's stale residency is gone; its sibling's
+        # survives untouched
+        assert victim.replica_idx not in res.values()
+        assert rs.endpoints[1].replica_idx in res.values()
+        assert victim.request("fine").result(10.0) == "ok"
+    finally:
+        rh.close()
+
+
 def test_degraded_replica_does_not_strand_sessions():
     """When a session's home replica dies (restarts disabled), the sticky
     map re-homes the session to a live replica instead of raising."""

@@ -1,0 +1,107 @@
+"""RadixIndex (repro.core.prefix) unit tests: the API semantics the
+engine admission path and the radix router rely on.  The hypothesis
+property tests (brute-force agreement under random interleavings) live in
+``test_prefix_properties.py`` so this module runs even without the
+optional dependency."""
+from repro.core.prefix import RadixIndex
+
+
+# ---------------------------------------------------------------------------
+# Unit tests: API semantics the engine/router rely on
+# ---------------------------------------------------------------------------
+
+
+def test_insert_and_longest_match_basic():
+    idx = RadixIndex()
+    assert idx.insert((1, 2, 3, 4), "a")
+    assert idx.insert((1, 2, 9, 9), "b")
+    assert idx.longest_match((1, 2, 3, 4, 5)) == (4, "a")
+    assert idx.longest_match((1, 2, 9)) == (3, "b")
+    assert idx.longest_match((1, 2)) in ((2, "a"), (2, "b"))
+    assert idx.longest_match((7, 7)) == (0, None)
+    assert idx.longest_match(()) == (0, None)
+    assert not idx.insert((), "x")  # empty sequences are rejected
+
+
+def test_match_lengths_reports_every_value():
+    idx = RadixIndex()
+    idx.insert((1, 2, 3), "a")
+    idx.insert((1, 2, 3, 4, 5), "b")
+    idx.insert((9,), "c")
+    assert idx.match_lengths((1, 2, 3, 4, 9)) == {"a": 3, "b": 4, "c": 0}
+    assert idx.match_lengths((1, 2)) == {"a": 2, "b": 2, "c": 0}
+
+
+def test_same_value_longer_sequence_compacts_prefix():
+    """A growing session replaces its earlier, shorter entry (compaction),
+    so the index stays one-entry-per-live-transcript."""
+    idx = RadixIndex()
+    idx.insert((1, 2), "s")
+    idx.insert((1, 2, 3, 4), "s")  # extends the first -> subsumes it
+    assert len(idx) == 1
+    assert idx.longest_match((1, 2, 3, 4)) == (4, "s")
+    # a DIFFERENT value's prefix entry is not compacted away
+    idx.insert((1, 2), "t")
+    idx.insert((1, 2, 3, 4, 5), "u")
+    assert len(idx) == 3
+
+
+def test_remove_value_drops_all_entries():
+    idx = RadixIndex()
+    idx.insert((1, 2, 3), "a")
+    idx.insert((5, 6), "a")
+    idx.insert((1, 9), "b")
+    assert idx.remove_value("a") == 2
+    assert "a" not in idx
+    assert idx.longest_match((1, 2, 3)) == (1, "b")
+    assert idx.remove_value("missing") == 0
+
+
+def test_lru_eviction_order_and_capacity():
+    idx = RadixIndex(capacity=2)
+    idx.insert((1, 1), "a")
+    idx.insert((2, 2), "b")
+    idx.insert((1, 1), "a")  # refresh: 'a' is now the most recent
+    idx.insert((3, 3), "c")  # capacity 2 -> evicts 'b' (oldest)
+    assert idx.values() == {"a", "c"}
+    assert len(idx) == 2
+    seq, value = idx.evict_lru()
+    assert (tuple(seq), value) == ((1, 1), "a")
+    assert len(idx) == 1
+
+
+def test_summary_newest_first_truncated():
+    idx = RadixIndex()
+    idx.insert(tuple(range(10)), "a")
+    idx.insert((7, 7, 7), "b")
+    s = idx.summary(max_entries=8, max_len=4)
+    assert s[0] == [7, 7, 7]
+    assert s[1] == [0, 1, 2, 3]
+    assert idx.summary(max_entries=1) == [[7, 7, 7]]
+
+
+def test_remove_exact_entry():
+    idx = RadixIndex()
+    idx.insert((1, 2, 3), "a")
+    idx.insert((1, 2), "b")
+    assert idx.remove((1, 2, 3), "a")
+    assert not idx.remove((1, 2, 3), "a")  # already gone
+    assert idx.longest_match((1, 2, 3)) == (2, "b")
+
+
+def test_clear_resets_everything():
+    idx = RadixIndex()
+    idx.insert((1, 2), "a")
+    idx.clear()
+    assert len(idx) == 0
+    assert idx.longest_match((1, 2)) == (0, None)
+    idx.insert((1, 2), "a")  # still usable after clear
+    assert idx.longest_match((1, 2)) == (2, "a")
+
+
+def test_string_tokens_work():
+    """The router keys sessions by raw char tuples for string prompts."""
+    idx = RadixIndex()
+    idx.insert(tuple("hello world"), 0)
+    d, v = idx.longest_match(tuple("hello there"))
+    assert (d, v) == (len("hello "), 0)

@@ -1,0 +1,143 @@
+"""RadixIndex property tests: agreement with a brute-force reference
+under random insert / evict / remove interleavings (LRU eviction order,
+same-value prefix compaction, capacity bounds, refcount/pruning
+invariants).
+
+``hypothesis`` is an optional dev dependency: skip the whole module
+(rather than dying at collection) when it isn't installed, matching
+``test_properties.py``.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.prefix import RadixIndex  # noqa: E402
+
+
+def _lcp(a, b):
+    n = min(len(a), len(b))
+    k = 0
+    while k < n and a[k] == b[k]:
+        k += 1
+    return k
+
+
+_ops = st.lists(
+    st.one_of(
+        # insert: (0, seq, value)
+        st.tuples(st.just(0),
+                  st.lists(st.integers(0, 3), min_size=1, max_size=10),
+                  st.integers(0, 4)),
+        # evict_lru: (1, None, None)
+        st.tuples(st.just(1), st.none(), st.none()),
+        # remove_value: (2, None, value)
+        st.tuples(st.just(2), st.none(), st.integers(0, 4)),
+    ),
+    min_size=1, max_size=60)
+
+
+class _BruteRef:
+    """Mirror of RadixIndex semantics on a plain recency-ordered list."""
+
+    def __init__(self, capacity):
+        self.capacity = capacity
+        self.items: list = []  # (seq, value), oldest first
+
+    def insert(self, seq, value):
+        # compaction: same-value strict prefixes of seq are subsumed
+        self.items = [(s, v) for s, v in self.items
+                      if not (v == value and len(s) < len(seq)
+                              and seq[:len(s)] == s)]
+        if (seq, value) in self.items:
+            self.items.remove((seq, value))
+        self.items.append((seq, value))
+        while self.capacity and len(self.items) > self.capacity:
+            if self.items[0] == (seq, value):
+                break
+            self.items.pop(0)
+
+    def best(self, q):
+        return max((_lcp(q, s) for s, _ in self.items), default=0)
+
+    def match_lengths(self, q):
+        out: dict = {}
+        for s, v in self.items:
+            out[v] = max(out.get(v, 0), _lcp(q, s))
+        return out
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=_ops, capacity=st.sampled_from([0, 3, 8]),
+       probe=st.lists(st.integers(0, 3), max_size=12))
+def test_radix_agrees_with_brute_force(ops, capacity, probe):
+    idx = RadixIndex(capacity=capacity)
+    ref = _BruteRef(capacity)
+    for op, seq, value in ops:
+        if op == 0:
+            seq = tuple(seq)
+            idx.insert(seq, value)
+            ref.insert(seq, value)
+        elif op == 1:
+            ev = idx.evict_lru()
+            if ref.items:
+                assert ev is not None
+                assert (tuple(ev[0]), ev[1]) == ref.items.pop(0)
+            else:
+                assert ev is None
+        else:
+            n = idx.remove_value(value)
+            assert n == sum(1 for _, v in ref.items if v == value)
+            ref.items = [(s, v) for s, v in ref.items if v != value]
+        assert len(idx) == len(ref.items)
+    probe = tuple(probe)
+    d, v = idx.longest_match(probe)
+    assert d == ref.best(probe)
+    if d > 0:  # the returned value must itself achieve the best depth
+        assert max(_lcp(probe, s)
+                   for s, vv in ref.items if vv == v) == d
+    assert idx.match_lengths(probe) == ref.match_lengths(probe)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seqs=st.lists(
+    st.lists(st.integers(0, 2), min_size=1, max_size=8), min_size=1,
+    max_size=20))
+def test_radix_insert_remove_roundtrip_leaves_empty(seqs):
+    """Inserting distinct-valued sequences then removing every value leaves
+    a structurally empty index (refcounts and pruning are consistent)."""
+    idx = RadixIndex()
+    for i, s in enumerate(seqs):
+        idx.insert(tuple(s), i)
+    for i in range(len(seqs)):
+        idx.remove_value(i)
+    assert len(idx) == 0
+    assert idx.values() == set()
+    assert not idx.root.edges  # tree fully pruned
+    assert not idx.root.vals
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    sessions=st.lists(st.integers(0, 5), min_size=2, max_size=50),
+    n=st.integers(2, 6),
+)
+def test_radix_router_sticky_while_membership_stable(sessions, n):
+    """With a stable replica count and no spill pressure, every repeat of
+    a session's (growing) prompt re-picks the replica that served it
+    first — the radix analogue of the hashed-LRU sticky property."""
+    from repro.core.router import make_router
+
+    r = make_router("radix_affinity", spill_factor=0.0, min_match=4)
+    grown: dict = {}
+    home: dict = {}
+    for s in sessions:
+        # session s's prompt grows turn over turn from a unique base
+        grown[s] = grown.get(s, tuple([s] * 8)) + (s, len(grown.get(s, ())))
+        key = r.signature({"prompt": list(grown[s])})
+        idx = r.pick(1.0, n_instances=n, group="g", affinity_key=key)
+        assert 0 <= idx < n
+        if s in home:
+            assert idx == home[s], "radix sticky violated on stable set"
+        else:
+            home[s] = idx

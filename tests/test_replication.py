@@ -442,6 +442,97 @@ def test_backoff_delays_relaunch_but_recovers():
         rh.close()
 
 
+def test_exhausted_replica_folds_after_grace():
+    """A replica that burns its restart budget is removed from the set
+    after the grace period with its stats merged into the aggregate, and
+    stats()/list(verbose=True) expose an operator-visible dead-replica
+    count — no retired-in-place corpse lingers."""
+
+    class BoomOnDemand:
+        def __init__(self):
+            self.jobs = {}
+            self.uid = 0
+
+        def submit(self, payload):
+            if payload == "boom":
+                raise SystemError("persistent fault")
+            self.uid += 1
+            self.jobs[self.uid] = payload
+            return self.uid
+
+        def step(self):
+            out = [(u, "ok") for u in self.jobs]
+            self.jobs.clear()
+            return out
+
+    rh = make_rh(routing="round_robin", restart_failed_services=True,
+                 restart_backoff_s=0.01, restart_backoff_max_s=0.02,
+                 restart_max_attempts=1, dead_replica_grace_s=0.15)
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc",
+                                               factory=BoomOnDemand,
+                                               replicas=2))
+        assert rs.request("warm").result(10.0) == "ok"
+        # the replayed boom crashes the relaunched replica too -> budget
+        # (1 attempt) exhausted -> declared dead
+        with pytest.raises((SystemError, RuntimeError)):
+            rs.request("boom").result(10.0)
+        deadline = time.perf_counter() + 10
+        while time.perf_counter() < deadline and rs.n_replicas > 1:
+            time.sleep(0.02)
+        assert rs.n_replicas == 1, "dead replica was not folded"
+        stats = rs.stats()
+        assert stats["dead_replicas"] == 1
+        # the folded replica's served/errored requests stay in the
+        # aggregate (merged, not dropped)
+        assert stats["requests"] >= 2
+        assert stats["errors"] >= 1
+        # the set is healthy again from the operator's point of view
+        assert rh.services.list()["svc"] == "ready"
+        verbose = rh.services.list(verbose=True)["svc"]
+        assert verbose["status"] == "ready"
+        assert verbose["replicas"] == 1
+        assert verbose["dead_replicas"] == 1
+        # ... and keeps serving on the survivor
+        assert rs.request("fine").result(10.0) == "ok"
+    finally:
+        rh.close()
+
+
+def test_negative_grace_keeps_dead_replica_visible():
+    """Operators can opt out of folding: a negative grace keeps the
+    degraded corpse in the set (the pre-fold behavior)."""
+
+    class DiesOnBoom:
+        def submit(self, payload):
+            if payload == "boom":
+                raise SystemError("dead")
+            return 1
+
+        def step(self):
+            return [(1, "ok")]
+
+    rh = make_rh(restart_failed_services=False, max_retries=0,
+                 dead_replica_grace_s=-1.0)
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc",
+                                               factory=DiesOnBoom,
+                                               replicas=2))
+        with pytest.raises((SystemError, RuntimeError)):
+            rs.request("boom").result(10.0)
+        deadline = time.perf_counter() + 5
+        while time.perf_counter() < deadline and \
+                all(i.error is None for i in rs.instances):
+            time.sleep(0.01)
+        time.sleep(0.3)  # several grace periods' worth: nothing folds
+        assert rs.n_replicas == 2  # corpse stays visible (degraded)
+        assert rs.n_live == 1
+        assert rs.stats()["dead_replicas"] == 1
+        assert rh.services.list()["svc"] == "degraded"
+    finally:
+        rh.close()
+
+
 # ---------------------------------------------------------------------------
 # Concurrency stress: clients hammer route()+request() during scaling
 # ---------------------------------------------------------------------------

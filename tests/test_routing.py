@@ -1,12 +1,13 @@
 """Router unit tests: balance invariants, determinism, incremental pick()
-API, the queue-depth-aware least-loaded policy, and prefix-affinity
-(sticky-session) routing."""
+API, the queue-depth-aware least-loaded policy, prefix-affinity
+(sticky-session) routing, and radix longest-prefix-match routing."""
 import pytest
 
 from repro.core.router import (ROUTERS, LeastLoadedRouter,
-                               PrefixAffinityRouter, RandomRouter,
-                               RoundRobinRouter, TokenAwareBalancedRouter,
-                               default_cost, make_router,
+                               PrefixAffinityRouter, RadixAffinityRouter,
+                               RandomRouter, RoundRobinRouter,
+                               TokenAwareBalancedRouter, default_cost,
+                               make_router, request_prefix,
                                request_signature, router_from_policy)
 
 
@@ -274,7 +275,7 @@ def test_prefix_affinity_map_is_lru_bounded():
     for s in range(50):
         r.pick(1.0, n_instances=2, group="g",
                affinity_key=request_signature({"prompt": [s, s + 1] * 20}))
-    assert len(r._groups["g"]["amap"]) <= 8
+    assert len(r._affinity["g"]["amap"]) <= 8
 
 
 def test_prefix_affinity_single_instance_miss_then_hit():
@@ -302,3 +303,189 @@ def test_router_from_policy_threads_affinity_knobs():
     assert r.prefix_len == 7
     assert r.spill_factor == 5.5
     assert router_from_policy(None).__class__ is RoundRobinRouter
+
+
+def test_router_from_policy_threads_radix_knobs():
+    class P:
+        routing = "radix_affinity"
+        affinity_max_prefix = 64
+        affinity_min_match = 5
+        affinity_spill_factor = 3.0
+
+    r = router_from_policy(P())
+    assert isinstance(r, RadixAffinityRouter)
+    assert r.max_prefix == 64
+    assert r.min_match == 5
+    assert r.spill_factor == 3.0
+
+
+# ---------------------------------------------------------------------------
+# Sticky assignments carry across membership changes (stable member ids)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["prefix_affinity", "radix_affinity"])
+def test_affinity_survives_membership_change_with_stable_members(kind):
+    """Assignments name stable member identities: when the candidate set
+    changes (autoscale/crash), sessions homed on surviving members keep
+    their replica — only sessions on the departed member re-home."""
+    r = make_router(kind, spill_factor=0.0)
+    keys = [r.signature({"prompt": [s] * 40}) for s in range(6)]
+    members = (10, 11, 12)
+    home = {k: members[r.pick(1.0, n_instances=3, group="m3",
+                              affinity_key=k, members=members,
+                              affinity_group="svc")]
+            for k in keys}
+    assert set(home.values()) == set(members)  # sessions spread first
+    # member 12 dies: a new membership (and new balance group) forms
+    survivors = (10, 11)
+    for k in keys:
+        idx = r.pick(1.0, n_instances=2, group="m2", affinity_key=k,
+                     members=survivors, affinity_group="svc")
+        if home[k] in survivors:
+            assert survivors[idx] == home[k], "surviving home lost"
+        else:
+            home[k] = survivors[idx]  # re-homed once, then sticky again
+    # grow back with a NEW member id (13, never 12): homes keep holding
+    grown = (10, 11, 13)
+    for k in keys:
+        idx = r.pick(1.0, n_instances=3, group="m3b", affinity_key=k,
+                     members=grown, affinity_group="svc")
+        assert grown[idx] == home[k]
+
+
+def test_pick_rejects_mismatched_members():
+    with pytest.raises(ValueError):
+        make_router("prefix_affinity").pick(
+            1.0, n_instances=2, affinity_key=1, members=(1, 2, 3))
+
+
+# ---------------------------------------------------------------------------
+# Radix longest-prefix-match routing
+# ---------------------------------------------------------------------------
+
+
+def test_request_prefix_is_lossless_and_bounded():
+    assert request_prefix({"prompt": [1, 2, 3]}) == (1, 2, 3)
+    assert request_prefix({"prompt": [1, 2, 3]}, max_len=2) == (1, 2)
+    assert request_prefix("abc") == ("a", "b", "c")
+    assert request_prefix({"no_prompt": 1}) is None
+    assert request_prefix(42) is None
+    assert request_prefix({"prompt": [1]}, max_len=0) is None
+    assert request_prefix({"prompt": []}) is None
+    # integer canonicalization matches request_signature's rule
+    import numpy as np
+    assert request_prefix({"prompt": list(np.asarray([1, 2]))}) == (1, 2)
+
+
+def test_radix_sticks_through_divergence_past_hash_window():
+    """The decisive case: two sessions share a 40-token stem (identical
+    hashed signature) and diverge after it.  The hash key cannot tell them
+    apart; radix longest-match homes each on its own replica."""
+    stem = [7] * 40
+    a1 = {"prompt": stem + [1, 1, 1, 1, 1, 1, 1, 1]}
+    b1 = {"prompt": stem + [2, 2, 2, 2, 2, 2, 2, 2]}
+    assert request_signature(a1) == request_signature(b1)  # hash collides
+    r = make_router("radix_affinity", min_match=8)
+    depths = [0.0, 0.0, 50.0]  # r2 busy: first contacts spread over r0/r1
+    ha = r.pick(1.0, n_instances=3, group="g", queue_depths=depths,
+                affinity_key=r.signature(a1))
+    # overload the first home so session b's stem match spills off it
+    d2 = list(depths)
+    d2[ha] = 50.0
+    hb = r.pick(1.0, n_instances=3, group="g", queue_depths=d2,
+                affinity_key=r.signature(b1))
+    assert hb != ha
+    # turn 2 grows each transcript: longest-match returns each session to
+    # its OWN home even though the stems (and hashes) are identical
+    a2 = {"prompt": a1["prompt"] + [9, 9, 9]}
+    b2 = {"prompt": b1["prompt"] + [8, 8, 8]}
+    info = {}
+    assert r.pick(1.0, n_instances=3, group="g",
+                  affinity_key=r.signature(a2), info=info) == ha
+    assert info["affinity"] == "hit"
+    info = {}
+    assert r.pick(1.0, n_instances=3, group="g",
+                  affinity_key=r.signature(b2), info=info) == hb
+    assert info["affinity"] == "hit"
+
+
+def test_radix_short_common_prefix_routes_by_load():
+    """Matches below min_match are noise (e.g. two unrelated prompts that
+    open with the same token): route by load, account a miss."""
+    r = make_router("radix_affinity", min_match=8)
+    r.pick(1.0, n_instances=2, group="g",
+           affinity_key=r.signature({"prompt": [1, 2, 3, 4] * 10}))
+    info = {}
+    r.pick(1.0, n_instances=2, group="g",
+           affinity_key=r.signature({"prompt": [1, 2, 9, 9] * 10}),
+           info=info)
+    assert info["affinity"] == "miss"  # only 2 tokens shared
+
+
+def test_radix_spills_to_second_longest_match():
+    """Prefix-aware spill: an overloaded sticky replica sheds to the
+    replica holding the SECOND-longest matching prefix (fed by residency
+    gossip), not to the least-loaded one."""
+    r = make_router("radix_affinity", min_match=4, spill_factor=2.0)
+    prompt = list(range(100, 140))
+    # member 0 served the whole session; member 1's engine holds a shorter
+    # stem of it (gossiped residency); member 2 is idle but cache-cold
+    r.update_residency("svc", 0, [prompt])
+    r.update_residency("svc", 1, [prompt[:16]])
+    info = {}
+    idx = r.pick(1.0, n_instances=3, group="g", members=(0, 1, 2),
+                 affinity_group="svc", queue_depths=[50.0, 1.0, 0.0],
+                 affinity_key=tuple(prompt), info=info)
+    assert idx == 1  # second-longest match beats the idle cold replica
+    assert info["affinity"] == "spill"
+
+
+def test_radix_residency_gossip_creates_first_contact_hits():
+    """A fresh router (no session memory) still routes a prompt to the
+    replica whose gossiped residency covers it — e.g. after a router
+    restart or a session spilling in from another entry point."""
+    r = make_router("radix_affinity", min_match=4)
+    r.update_residency("svc", 2, [[5, 6, 7, 8, 9, 10]])
+    info = {}
+    idx = r.pick(1.0, n_instances=3, group="g", members=(1, 2, 3),
+                 affinity_group="svc",
+                 affinity_key=(5, 6, 7, 8, 9, 10, 11), info=info)
+    assert (1, 2, 3)[idx] == 2
+    assert info["affinity"] == "hit"
+
+
+def test_radix_forget_member_rehomes_its_sessions():
+    r = make_router("radix_affinity", min_match=4)
+    key = r.signature({"prompt": [3] * 20})
+    home = r.pick(1.0, n_instances=2, group="g", members=(0, 1),
+                  affinity_group="svc", affinity_key=key)
+    r.forget_member("svc", (0, 1)[home])
+    info = {}
+    r.pick(1.0, n_instances=2, group="g", members=(0, 1),
+           affinity_group="svc", affinity_key=key, info=info)
+    assert info["affinity"] == "miss"  # no stale assignment survived
+
+
+def test_radix_unkeyed_and_hash_keys_fall_back_to_load():
+    r = make_router("radix_affinity")
+    info = {}
+    r.pick(1.0, n_instances=2, group="g", info=info)
+    assert "affinity" not in info
+    # an int key (e.g. from request_signature) is not a token prefix:
+    # route by load rather than misindexing it
+    assert r.pick(1.0, n_instances=2, group="g", affinity_key=12345) in (0, 1)
+
+
+def test_radix_equal_depth_matches_prefer_shallow_queue():
+    """Several replicas holding the same shared stem (branching agents):
+    equal-depth matches spread by live queue depth instead of piling onto
+    one stem holder."""
+    r = make_router("radix_affinity", min_match=4)
+    stem = [1, 2, 3, 4, 5, 6, 7, 8]
+    r.update_residency("svc", 0, [stem])
+    r.update_residency("svc", 1, [stem])
+    idx = r.pick(1.0, n_instances=2, group="g", members=(0, 1),
+                 affinity_group="svc", queue_depths=[3.0, 0.0],
+                 affinity_key=tuple(stem + [9]))
+    assert idx == 1

@@ -151,7 +151,114 @@ def test_prefix_reuse_can_be_disabled(small_lm):
     u2 = eng.submit([1, 2, 3, 4] + out1 + [5], max_new_tokens=3)
     eng.run()
     assert eng.stats.prefix_reuse_hits == 0
-    assert not eng._resident
+    assert len(eng._prefix_index) == 0
+    assert not eng._resident_len
+
+
+def test_partial_prefix_resume_matches_from_scratch(small_lm):
+    """A branching turn — shares a stem with a resident transcript but
+    diverges mid-sequence — rewinds to the divergence point and still
+    generates token-identically to a from-scratch prefill."""
+    cfg, api, params = small_lm
+    eng = InferenceEngine(cfg, params, max_num_seqs=4,
+                          max_num_batched_tokens=256, max_len=128,
+                          prefill_buckets=(16, 32, 64))
+    rng = np.random.RandomState(3)
+    p1 = list(rng.randint(0, 512, size=24))
+    u1 = eng.submit(p1, max_new_tokens=4)
+    eng.run()
+    # branch: keep the first 20 tokens of turn 1's prompt, diverge after
+    p2 = p1[:20] + list(rng.randint(0, 512, size=10))
+    assert p2[:20] == p1[:20] and p2[20] != p1[20]
+    u2 = eng.submit(p2, max_new_tokens=4)
+    out2 = eng.run()[u2].output
+    assert eng.stats.prefix_reuse_hits == 1
+    assert eng.stats.prefix_partial_hits == 1
+    assert eng.stats.prefix_cached_tokens == 20  # rewound to the divergence
+    assert out2 == _ref_generate(api, params, cfg, p2, 4)
+
+
+def test_partial_resume_prompt_inside_resident_sequence(small_lm):
+    """A prompt that is a strict PREFIX of a resident transcript resumes
+    too: rewind to len(prompt) - 1, no suffix feeds, identical output."""
+    cfg, api, params = small_lm
+    eng = InferenceEngine(cfg, params, max_num_seqs=2,
+                          max_num_batched_tokens=256, max_len=128,
+                          prefill_buckets=(16, 32, 64))
+    rng = np.random.RandomState(4)
+    p1 = list(rng.randint(0, 512, size=30))
+    eng.submit(p1, max_new_tokens=4)
+    eng.run()
+    p2 = p1[:22]  # rewound replay of a shorter turn
+    u2 = eng.submit(p2, max_new_tokens=4)
+    out2 = eng.run()[u2].output
+    assert eng.stats.prefix_reuse_hits == 1
+    # a replay never DIVERGES from the resident transcript: it must not
+    # count as a partial (divergence) hit
+    assert eng.stats.prefix_partial_hits == 0
+    assert eng.stats.prefix_cached_tokens == len(p2) - 1
+    assert out2 == _ref_generate(api, params, cfg, p2, 4)
+
+
+def test_deepest_resident_match_wins(small_lm):
+    """With several resident slots sharing a stem, admission resumes the
+    slot with the deepest usable common prefix (radix longest-match, not
+    first-fit)."""
+    cfg, api, params = small_lm
+    eng = InferenceEngine(cfg, params, max_num_seqs=4,
+                          max_num_batched_tokens=512, max_len=128,
+                          prefill_buckets=(16, 32, 64))
+    rng = np.random.RandomState(5)
+    stem = list(rng.randint(0, 512, size=16))
+    shallow = stem + list(rng.randint(0, 512, size=4))
+    deep = stem + list(rng.randint(0, 512, size=14))
+    for p in (shallow, deep):
+        eng.submit(p, max_new_tokens=3)
+        eng.run()
+    probe = deep + list(rng.randint(0, 512, size=4))
+    u = eng.submit(probe, max_new_tokens=3)
+    out = eng.run()[u].output
+    # cached >= len(deep) - 1 proves the deeper slot was chosen (the
+    # shallow one could cover at most len(shallow) + its output)
+    assert eng.stats.prefix_cached_tokens >= len(deep) - 1
+    assert out == _ref_generate(api, params, cfg, probe, 3)
+
+
+def test_allocator_prefers_blank_slots_over_resident(small_lm):
+    """Fresh admissions must not evict reusable resident KV while a
+    never-used blank slot is free."""
+    cfg, api, params = small_lm
+    eng = InferenceEngine(cfg, params, max_num_seqs=2,
+                          max_num_batched_tokens=256, max_len=128,
+                          prefill_buckets=(16, 32))
+    p1 = [1, 2, 3, 4, 5, 6, 7, 8]
+    u1 = eng.submit(p1, max_new_tokens=3)
+    out1 = eng.run()[u1].output  # slot 0 now resident
+    assert eng.pool.n_free_blank == 1
+    eng.submit([9] * 10, max_new_tokens=3)  # unrelated: takes the blank
+    eng.run()
+    assert len(eng._prefix_index) >= 1  # turn 1's residency survived
+    p3 = p1 + out1 + [6]
+    u3 = eng.submit(p3, max_new_tokens=3)
+    out3 = eng.run()[u3].output
+    assert eng.stats.prefix_reuse_hits == 1  # ... and was still resumable
+    assert out3 == _ref_generate(api, params, cfg, p3, 3)
+
+
+def test_cache_pool_allocate_blank_first(small_lm):
+    cfg, _, _ = small_lm
+    pool = CachePool(cfg, max_seqs=3, max_len=32)
+    a = pool.allocate()
+    pool.free(a, resident=True)
+    assert pool.n_free == 3 and pool.n_free_blank == 2
+    # blank slots pop first even though the resident one is older in FIFO
+    assert pool.allocate() != a
+    assert pool.allocate() != a
+    # only the resident slot left: allocate evicts it and clears the mark
+    assert pool.allocate() == a
+    assert pool.n_free == 0
+    pool.free(a)
+    assert pool.n_free_blank == 1
 
 
 def test_prefix_reuse_slot_contention(small_lm):
