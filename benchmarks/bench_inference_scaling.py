@@ -5,15 +5,27 @@ scaled to the host) with homogeneous prompts, measuring aggregate token
 throughput and engine utilization (the GPU-utilization analogue: fraction
 of decode-slot-steps occupied).  One service name, N replicas: clients all
 hit the same replica set and the shared router spreads them.
+
+``--autoscale`` switches to the admission-controlled autoscaling scenario
+(§III-C: services claim resources from the same partition ledger as
+tasks): a step load against a replica set governed by a pluggable
+autoscaler (``queue_depth`` | ``latency_slo``).  The ``step`` scenario
+checks the policy converges to a stable replica count that holds the p95
+SLO; the ``saturate`` scenario overloads past the partition's physical
+capacity and checks scale-up is *denied* (SCALE_DENIED event +
+``admission_denied`` stat) rather than overbooked, with
+``Rhapsody.utilization()`` showing the replicas' live claims.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import threading
 import time
 
 from repro.configs import get_config
-from repro.core import (ExecutionPolicy, ResourceDescription, Rhapsody,
-                        ServiceDescription)
+from repro.core import (ExecutionPolicy, ResourceDescription,
+                        ResourceRequirements, Rhapsody, ServiceDescription)
 from repro.serving.client import llm_service_factory
 
 from .common import Reporter
@@ -87,5 +99,172 @@ def main(rep: Reporter, *, configs=((1, 2), (2, 2), (4, 2))) -> dict:
     return {"configs": out}
 
 
+# ---------------------------------------------------------------------------
+# Autoscaling under a step load (admission-controlled by the ledger)
+# ---------------------------------------------------------------------------
+
+
+class TimedServicer:
+    """Synthetic serial replica: each request occupies it for a fixed
+    service time, so end-to-end latency is deterministic (queue wait +
+    service) and the autoscaler's control behavior — not engine noise —
+    is what the scenario measures."""
+
+    def __init__(self, service_time_s: float = 0.02):
+        self.service_time = service_time_s
+        self._q: list = []
+        self._uid = 0
+        self._cur = None
+        self._done_at = 0.0
+
+    def warmup(self):  # the autoscale scenarios run with warmup=True
+        time.sleep(self.service_time)
+
+    def submit(self, payload, **kw) -> int:
+        self._uid += 1
+        self._q.append(self._uid)
+        return self._uid
+
+    def step(self):
+        now = time.perf_counter()
+        out = []
+        if self._cur is not None and now >= self._done_at:
+            out.append((self._cur, {"ok": True}))
+            self._cur = None
+        if self._cur is None and self._q:
+            self._cur = self._q.pop(0)
+            self._done_at = now + self.service_time
+        return out
+
+
+def run_autoscale(autoscaler: str, scenario: str = "step", *,
+                  capacity: int = 4, service_time_s: float = 0.02,
+                  warm_s: float = 1.0, heavy_s: float = 5.0,
+                  stable_window_s: float = 1.0) -> dict:
+    """Step load against an autoscaled, admission-controlled replica set.
+
+    ``step``: demand fits the partition — the policy must converge to a
+    stable replica count (no membership change over the last
+    ``stable_window_s``, >= 3 sustain windows) that holds the SLO.
+    ``saturate``: demand exceeds the partition's ``capacity`` nodes — the
+    set must pin at capacity with scale-up denied via event + stat.
+    """
+    if scenario == "step":
+        clients, slo_ms, max_replicas = 8, 120.0, capacity
+    elif scenario == "saturate":
+        clients, slo_ms, max_replicas = 24, 60.0, 2 * capacity
+    else:
+        raise ValueError(f"unknown scenario {scenario!r}")
+    interval = 0.05
+    rh = Rhapsody(ResourceDescription(nodes=capacity, cores_per_node=1),
+                  policy=ExecutionPolicy(
+                      routing="least_loaded", autoscale=True,
+                      autoscaler=autoscaler,
+                      autoscale_min_replicas=1,
+                      autoscale_max_replicas=max_replicas,
+                      autoscale_high_depth=3.0, autoscale_low_depth=0.5,
+                      autoscale_interval_s=interval, autoscale_sustain=2,
+                      slo_p95_ms=slo_ms, slo_window_s=1.0,
+                      warmup=True),
+                  n_workers=2)
+    try:
+        rs = rh.add_service(ServiceDescription(
+            name="llm", replicas=1,
+            requirements=ResourceRequirements(ranks=1, cores_per_rank=1),
+            factory=lambda: TimedServicer(service_time_s)))
+        stop = threading.Event()
+        served = [0] * clients
+
+        def client(i):
+            while not stop.is_set():
+                try:
+                    rs.request({"prompt": [i] * 8}).result(30.0)
+                except (RuntimeError, TimeoutError):
+                    break  # shutdown race / stalled runner at scenario end
+                served[i] += 1
+
+        trace: list = []  # (perf_counter, n_replicas) samples
+
+        def sampler():
+            while not stop.is_set():
+                trace.append((time.perf_counter(), rs.n_replicas))
+                time.sleep(interval / 2)
+
+        threading.Thread(target=sampler, daemon=True).start()
+        # phase 1: light load (one client) — the set should stay small
+        light = threading.Thread(target=client, args=(0,), daemon=True)
+        light.start()
+        time.sleep(warm_s)
+        # phase 2: step to full load
+        heavy = [threading.Thread(target=client, args=(i,), daemon=True)
+                 for i in range(1, clients)]
+        for t in heavy:
+            t.start()
+        time.sleep(heavy_s)
+        # measure while the load is still applied — reading any of these
+        # after stop() would race the idle scale-down that follows
+        p95 = rs.latency_p95(window_s=stable_window_s)
+        util = rh.utilization()["default"]
+        stats = rs.stats()
+        final_replicas = rs.n_replicas
+        t_end = time.perf_counter()
+        stop.set()
+        for t in [light] + heavy:
+            t.join(timeout=30)
+        tail = [n for t, n in trace
+                if t_end - stable_window_s <= t <= t_end]
+        return {
+            "autoscaler": autoscaler,
+            "scenario": scenario,
+            "clients": clients,
+            "capacity": capacity,
+            "slo_p95_ms": slo_ms,
+            "p95_ms": None if p95 is None else p95 * 1e3,
+            "final_replicas": final_replicas,
+            "converged": bool(tail) and len(set(tail)) == 1,
+            "replica_trace": [n for _, n in trace],
+            "requests": sum(served),
+            "admission_denied": stats["admission_denied"],
+            "service_cores": util["service_cores"],
+            "service_replicas": util["service_replicas"],
+            "core_utilization": util["cores"],
+        }
+    finally:
+        rh.close()
+
+
+def autoscale_sweep(policies=("queue_depth", "latency_slo"),
+                    scenarios=("step", "saturate"), **kw) -> list:
+    return [run_autoscale(p, s, **kw) for p in policies for s in scenarios]
+
+
 if __name__ == "__main__":
-    main(Reporter())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--autoscale", action="store_true",
+                    help="run the autoscaling step-load scenarios instead "
+                         "of the fixed-replica throughput sweep")
+    ap.add_argument("--policies", nargs="*",
+                    default=["queue_depth", "latency_slo"])
+    ap.add_argument("--scenarios", nargs="*",
+                    default=["step", "saturate"])
+    ap.add_argument("--capacity", type=int, default=4)
+    ap.add_argument("--heavy-s", type=float, default=5.0)
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    if not args.autoscale:
+        main(Reporter())
+        raise SystemExit(0)
+    rows = autoscale_sweep(args.policies, args.scenarios,
+                           capacity=args.capacity, heavy_s=args.heavy_s)
+    if args.json:
+        print(json.dumps(rows, indent=2))
+    else:
+        for r in rows:
+            print(f"[autoscale] {r['autoscaler']:>12s}/{r['scenario']:<8s} "
+                  f"replicas={r['final_replicas']} "
+                  f"converged={r['converged']} "
+                  f"p95={r['p95_ms'] and round(r['p95_ms'], 1)}ms "
+                  f"(slo {r['slo_p95_ms']}ms) "
+                  f"denied={r['admission_denied']} "
+                  f"claims={r['service_cores']}c/"
+                  f"{r['service_replicas']}r")

@@ -1,15 +1,21 @@
 """RHAPSODY middleware core: tasks, services, resources, policies, coupling."""
+from .autoscale import (AUTOSCALERS, Autoscaler, LatencySLOAutoscaler,
+                        LatencyWindow, QueueDepthAutoscaler,
+                        autoscaler_from_policy)
 from .middleware import Rhapsody
 from .policy import ExecutionPolicy
-from .resources import Allocation, Placement, ResourceDescription, partition
+from .resources import (Allocation, Claim, Placement, ResourceDescription,
+                        partition)
 from .service import ReplicaSet, ServiceDescription, ServiceEndpoint
 from .task import (ResourceRequirements, Task, TaskDescription, TaskKind,
                    TaskState)
 
 __all__ = [
     "Rhapsody", "ExecutionPolicy", "ResourceDescription", "Allocation",
-    "Placement", "partition", "ReplicaSet", "ServiceDescription",
+    "Claim", "Placement", "partition", "ReplicaSet", "ServiceDescription",
     "ServiceEndpoint",
+    "AUTOSCALERS", "Autoscaler", "QueueDepthAutoscaler",
+    "LatencySLOAutoscaler", "LatencyWindow", "autoscaler_from_policy",
     "TaskDescription", "TaskKind", "TaskState", "Task",
     "ResourceRequirements",
 ]

@@ -1,0 +1,243 @@
+"""Pluggable replica autoscaling policies (§III-C: services and tasks
+co-scheduled inside one job allocation).
+
+The ``ServiceManager`` control loop no longer hard-codes queue-depth
+scaling: it asks an ``Autoscaler`` for each replica set's desired size and
+only then applies *admission control* — the target is bounded by what the
+set's partition ``Allocation`` can still physically claim
+(``Allocation.fits``), so "scale up" can be denied (event + stat, never an
+exception) but can never overbook the ledger shared with tasks.
+
+Two policies ship:
+
+  * ``QueueDepthAutoscaler`` — the original behavior: grow when mean
+    outstanding requests per live replica stays above
+    ``autoscale_high_depth`` for ``autoscale_sustain_up`` consecutive
+    ticks, shrink below ``autoscale_low_depth`` for
+    ``autoscale_sustain_down`` ticks.
+  * ``LatencySLOAutoscaler`` — targets a p95 end-to-end latency
+    (``slo_p95_ms``) computed from the per-endpoint latency windows the
+    replica set aggregates in ``stats()``.  Hysteresis is *asymmetric*:
+    scale-up triggers after ``autoscale_sustain_up`` (default 1 — a
+    violated SLO is acted on fast), scale-down needs the p95 to sit below
+    ``slo_down_factor * slo`` AND the queues to be shallow for
+    ``autoscale_sustain_down`` (default ``3 * autoscale_sustain``) ticks.
+    Only samples from requests *started after the last scaling action*
+    count, so latency accumulated under the old replica count cannot
+    trigger a second, oscillating correction.
+
+Both are bounded by ``[autoscale_min_replicas, autoscale_max_replicas]``
+and, through the manager, by ``Allocation.free_capacity()``.
+"""
+from __future__ import annotations
+
+import math
+import threading
+import time
+from collections import deque
+from typing import Optional, Sequence
+
+
+def percentile(samples: Sequence[float], q: float) -> Optional[float]:
+    """Nearest-rank percentile (q in [0, 1]); None on empty input."""
+    if not samples:
+        return None
+    xs = sorted(samples)
+    idx = min(len(xs) - 1, max(0, math.ceil(q * len(xs)) - 1))
+    return xs[idx]
+
+
+class LatencyWindow:
+    """Bounded sliding window of request latencies (one per endpoint).
+
+    Each observation is ``(completed_at, seconds)``; queries can restrict
+    to a recent wall-clock window and/or to samples whose request *started*
+    (``completed_at - seconds``) after a given instant — the SLO
+    autoscaler uses the latter to ignore latency incurred under a previous
+    replica count.  ``histogram()`` exposes log2-ms buckets for operators.
+    """
+
+    def __init__(self, maxlen: int = 512):
+        self._samples: deque = deque(maxlen=maxlen)
+        self._lock = threading.Lock()
+        self.count = 0  # lifetime observations (window-independent)
+
+    def observe(self, seconds: float, now: Optional[float] = None):
+        now = time.perf_counter() if now is None else now
+        with self._lock:
+            self._samples.append((now, float(seconds)))
+            self.count += 1
+
+    def samples(self, window_s: Optional[float] = None,
+                started_after: Optional[float] = None,
+                now: Optional[float] = None) -> list:
+        now = time.perf_counter() if now is None else now
+        with self._lock:
+            snap = list(self._samples)
+        out = []
+        for t, dt in snap:
+            if window_s is not None and now - t > window_s:
+                continue
+            if started_after is not None and t - dt < started_after:
+                continue
+            out.append(dt)
+        return out
+
+    def p95(self, window_s: Optional[float] = None,
+            started_after: Optional[float] = None) -> Optional[float]:
+        return percentile(self.samples(window_s, started_after), 0.95)
+
+    def histogram(self, window_s: Optional[float] = None,
+                  samples: Optional[list] = None) -> dict:
+        """Log2 millisecond buckets: {"<=1ms": n, "<=2ms": n, ...}.  Pass
+        ``samples`` (an earlier ``samples()`` result) to reuse a snapshot
+        instead of copying the deque again."""
+        out: dict = {}
+        for dt in (self.samples(window_s) if samples is None else samples):
+            ms = dt * 1e3
+            edge = 1 << max(0, math.ceil(math.log2(max(ms, 1e-3))))
+            out[f"<={edge}ms"] = out.get(f"<={edge}ms", 0) + 1
+        return out
+
+
+class Autoscaler:
+    """Base policy: per-service sustain counters + bounds bookkeeping.
+
+    Subclasses implement ``_direction(name, rs) -> int`` returning +1
+    (wants to grow), -1 (wants to shrink), or 0; the base class applies the
+    asymmetric sustain hysteresis and the [min, max] replica bounds.  The
+    manager applies capacity bounds on top (see ``ServiceManager``).
+    """
+
+    def __init__(self, policy):
+        self.policy = policy
+        self._hot: dict = {}
+        self._cold: dict = {}
+        self._last_action: dict = {}  # name -> perf_counter of last scale
+
+    # -- knobs ---------------------------------------------------------------
+    @property
+    def sustain_up(self) -> int:
+        v = getattr(self.policy, "autoscale_sustain_up", None)
+        return v if v and v > 0 else self._default_sustain_up()
+
+    @property
+    def sustain_down(self) -> int:
+        v = getattr(self.policy, "autoscale_sustain_down", None)
+        return v if v and v > 0 else self._default_sustain_down()
+
+    def _default_sustain_up(self) -> int:
+        return max(1, getattr(self.policy, "autoscale_sustain", 3))
+
+    def _default_sustain_down(self) -> int:
+        return max(1, getattr(self.policy, "autoscale_sustain", 3))
+
+    # -- manager surface -----------------------------------------------------
+    def prune(self, live_names):
+        """Drop counters for service names that no longer exist."""
+        for d in (self._hot, self._cold, self._last_action):
+            for k in [k for k in d if k not in live_names]:
+                del d[k]
+
+    def note_scaled(self, name: str):
+        """The manager issued a scaling action for ``name``: restart the
+        hysteresis and remember when, so signal predating the action is
+        discounted."""
+        self._hot[name] = 0
+        self._cold[name] = 0
+        self._last_action[name] = time.perf_counter()
+
+    def desired(self, name: str, rs) -> Optional[int]:
+        """Target replica count for one tick, or None for no change."""
+        pol = self.policy
+        live = rs.n_live
+        direction = self._direction(name, rs)
+        if direction > 0 and live < pol.autoscale_max_replicas:
+            self._hot[name] = self._hot.get(name, 0) + 1
+            self._cold[name] = 0
+            if self._hot[name] >= self.sustain_up:
+                self._hot[name] = 0
+                return rs.n_replicas + 1
+        elif direction < 0 and live > pol.autoscale_min_replicas:
+            self._cold[name] = self._cold.get(name, 0) + 1
+            self._hot[name] = 0
+            if self._cold[name] >= self.sustain_down:
+                self._cold[name] = 0
+                return rs.n_replicas - 1
+        else:
+            self._hot[name] = 0
+            self._cold[name] = 0
+        return None
+
+    # -- subclass hook -------------------------------------------------------
+    def _direction(self, name: str, rs) -> int:
+        raise NotImplementedError
+
+
+class QueueDepthAutoscaler(Autoscaler):
+    """Grow when the mean live queue depth per replica stays high, shrink
+    when it stays low — the original symmetric-sustain policy."""
+
+    def _direction(self, name, rs) -> int:
+        depth = rs.mean_depth()
+        if depth > self.policy.autoscale_high_depth:
+            return 1
+        if depth < self.policy.autoscale_low_depth:
+            return -1
+        return 0
+
+
+class LatencySLOAutoscaler(Autoscaler):
+    """Hold a p95 end-to-end latency target (``slo_p95_ms``).
+
+    Scale up fast when the windowed p95 of requests started since the last
+    scaling action breaches the SLO; scale down slowly — only when p95 is
+    comfortably under (``slo_down_factor``) AND queues are shallow, both
+    sustained.  No fresh signal (an idle service) counts toward shrink.
+    """
+
+    def _default_sustain_up(self) -> int:
+        return 1  # a breached SLO is acted on at the next tick
+
+    def _default_sustain_down(self) -> int:
+        return 3 * max(1, getattr(self.policy, "autoscale_sustain", 3))
+
+    def _direction(self, name, rs) -> int:
+        pol = self.policy
+        slo_s = getattr(pol, "slo_p95_ms", 250.0) / 1e3
+        window = getattr(pol, "slo_window_s", 5.0)
+        down = getattr(pol, "slo_down_factor", 0.5)
+        p95 = rs.latency_p95(window_s=window,
+                             started_after=self._last_action.get(name))
+        if p95 is None:
+            # distinguish the two no-fresh-signal cases (the loaded steady
+            # state paid a single latency_p95 above; this second, wider
+            # query only runs on the quiet paths):
+            if rs.latency_p95(window_s=window) is None:
+                # nothing completed recently at all: a genuinely idle set
+                # with shallow queues may cool down
+                return -1 if rs.mean_depth() < pol.autoscale_low_depth else 0
+            # recent traffic, but every sample predates the last scaling
+            # action: judging it would oscillate — wait for fresh signal
+            return 0
+        if p95 > slo_s:
+            return 1
+        if p95 < down * slo_s and rs.mean_depth() < pol.autoscale_low_depth:
+            return -1
+        return 0
+
+
+AUTOSCALERS = {
+    "queue_depth": QueueDepthAutoscaler,
+    "latency_slo": LatencySLOAutoscaler,
+}
+
+
+def autoscaler_from_policy(policy) -> Autoscaler:
+    kind = getattr(policy, "autoscaler", None) or "queue_depth"
+    try:
+        cls = AUTOSCALERS[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown autoscaler {kind!r}; one of {sorted(AUTOSCALERS)}")
+    return cls(policy)

@@ -39,10 +39,13 @@ class Rhapsody:
         self.policy = policy or ExecutionPolicy()
         self.events = EventLog()
         resources = resources or ResourceDescription(nodes=1, cores_per_node=8)
+        strategy = getattr(self.policy, "placement", "first_fit")
         if partitions:
-            self.allocations = partition(resources, partitions)
+            self.allocations = partition(resources, partitions,
+                                         strategy=strategy)
         else:
-            self.allocations = {"default": Allocation(resources)}
+            self.allocations = {"default": Allocation(resources,
+                                                      strategy=strategy)}
         self.backends: dict = backends or {
             "pool": PoolBackend(n_workers=n_workers)
         }
@@ -51,8 +54,11 @@ class Rhapsody:
             if hasattr(b, "on_start"):
                 b.on_start = self._backend_start
         self.router = router_from_policy(self.policy)
+        # services share the task allocations: every replica claims its
+        # ServiceDescription.requirements from its partition's ledger
         self.services = ServiceManager(self.policy, self.events,
-                                       router=self.router)
+                                       router=self.router,
+                                       allocations=self.allocations)
 
         self.tasks: dict[str, Task] = {}
         self.ready: deque[Task] = deque()
@@ -149,8 +155,20 @@ class Rhapsody:
     # Public API: lifecycle / introspection
     # ------------------------------------------------------------------
     def utilization(self) -> dict:
-        return {name: alloc.utilization()
-                for name, alloc in self.allocations.items()}
+        """Per-partition utilization of the SHARED ledger: the core/gpu
+        fractions cover tasks and service replicas alike (§III-C), and the
+        ``service_*`` keys break out what live replica claims hold."""
+        claimed = self.services.claimed()
+        out = {}
+        for name, alloc in self.allocations.items():
+            u = alloc.utilization()
+            svc = claimed.get(name, {})
+            u["service_cores"] = svc.get("cores", 0)
+            u["service_gpus"] = svc.get("gpus", 0)
+            u["service_replicas"] = svc.get("replicas", 0)
+            u["free"] = alloc.free_capacity()
+            out[name] = u
+        return out
 
     def close(self):
         self._alive = False

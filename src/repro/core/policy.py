@@ -14,6 +14,8 @@ class ExecutionPolicy:
     # placement
     default_partition: Optional[str] = None
     colocate_coupled: bool = True  # coupled pairs pinned to the same node
+    placement: str = "first_fit"  # | "best_fit": how task placements and
+    #                               service replica claims pack onto nodes
     # routing (inference)
     routing: str = "balanced"  # random | round_robin | balanced |
     #                            least_loaded | prefix_affinity |
@@ -37,13 +39,26 @@ class ExecutionPolicy:
     # services: replication + autoscaling
     replicas: int = 1  # default replica count when a ServiceDescription
     #                    leaves ``replicas`` unset
-    autoscale: bool = False  # grow/shrink replica sets from queue depth
+    autoscale: bool = False  # grow/shrink replica sets (see `autoscaler`)
+    autoscaler: str = "queue_depth"  # | "latency_slo" (repro.core.autoscale)
     autoscale_min_replicas: int = 1
     autoscale_max_replicas: int = 4
     autoscale_high_depth: float = 4.0  # mean outstanding reqs/replica to grow
     autoscale_low_depth: float = 0.5  # ... below which we shrink
     autoscale_interval_s: float = 0.05  # sampling period
     autoscale_sustain: int = 3  # consecutive hot/cold samples before acting
+    autoscale_sustain_up: Optional[int] = None  # override grow sustain
+    #                       (latency_slo defaults to 1: breached SLOs are
+    #                       acted on fast)
+    autoscale_sustain_down: Optional[int] = None  # override shrink sustain
+    #                       (latency_slo defaults to 3x autoscale_sustain:
+    #                       slow, deliberate cool-down)
+    slo_p95_ms: float = 250.0  # latency_slo: p95 end-to-end target
+    slo_window_s: float = 5.0  # latency_slo: latency sample window
+    slo_down_factor: float = 0.5  # latency_slo: shrink only when p95 is
+    #                               under factor * slo (and queues shallow)
+    warmup: bool = False  # prime new replicas (servicer.warmup(): compile
+    #                       + a token of decode) before the router sees them
     # fault tolerance
     max_retries: int = 1
     straggler_factor: float = 0.0  # >0: duplicate tasks slower than

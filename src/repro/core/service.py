@@ -27,6 +27,22 @@ prefix-aware spill in what each replica's KV cache actually holds.  A
 replica that exhausts its restart budget is declared dead, counted in
 ``stats()["dead_replicas"]``, and after ``dead_replica_grace_s`` folded
 out of the set with its stats merged into the aggregate.
+
+Resource claims (§III-C: one ledger for tasks AND services): when the
+manager is given the middleware's partition ``Allocation``s, every replica
+spawn first books ``ServiceDescription.requirements`` as a concrete
+``Claim`` (node/core/gpu ids) against the set's partition, held until the
+replica retires.  Scale-up is therefore *admission-controlled*: a full
+partition denies the claim and the set degrades gracefully — a
+``SCALE_DENIED`` event plus the ``stats()["admission_denied"]`` counter,
+never an exception — instead of scaling past physical capacity.  The same
+claims surface in ``Rhapsody.utilization()``, so services and tasks are
+finally visible on one ledger.  With ``ExecutionPolicy.warmup`` a new
+replica also completes a warm-up prime (``servicer.warmup()``: compile + a
+token of decode) before ``ready`` is set — the router never routes to a
+cold replica, so autoscale-up stops adding tail latency.  Autoscaling
+itself is pluggable (``repro.core.autoscale``): queue-depth (default) or
+p95-latency-SLO policies, both bounded by ``Allocation.free_capacity()``.
 """
 from __future__ import annotations
 
@@ -37,6 +53,7 @@ import threading
 import time
 from typing import Any, Callable, Optional
 
+from .autoscale import LatencyWindow, autoscaler_from_policy, percentile
 from .router import Router, default_cost, router_from_policy
 from .task import ResourceRequirements
 
@@ -46,10 +63,11 @@ class ServiceDescription:
     name: str
     factory: Callable[[], Any]  # builds one servicer (called per replica)
     requirements: ResourceRequirements = dataclasses.field(
-        default_factory=ResourceRequirements)
+        default_factory=ResourceRequirements)  # claimed PER REPLICA
     ready_timeout: float = 30.0
     partition: Optional[str] = None
     replicas: Optional[int] = None  # None -> ExecutionPolicy.replicas
+    warmup: Optional[bool] = None  # None -> ExecutionPolicy.warmup
 
 
 _STAT_KEYS = ("requests", "completed", "errors", "cost",
@@ -99,6 +117,10 @@ class ServiceEndpoint:
         self._stats_lock = threading.Lock()
         self.retired = False  # set when scaled away / replaced
         self.on_retired: Optional[Callable] = None  # drains my queue
+        self.claim = None  # resources.Claim held while this replica lives
+        #                    (None when the manager has no allocations)
+        self.latency = LatencyWindow()  # end-to-end request latencies —
+        #                    the SLO autoscaler's per-endpoint signal
 
     def bump(self, key: str, by: int = 1):
         # stats feed depth(), which drives routing and autoscaling — a
@@ -106,9 +128,15 @@ class ServiceEndpoint:
         with self._stats_lock:
             self.stats[key] += by
 
+    def observe_latency(self, seconds: float):
+        self.latency.observe(seconds)
+
     def request(self, payload, **meta) -> _Future:
         fut = _Future()
         self.bump("requests")
+        # stamp the submit time once: replays and reroutes carry meta
+        # through, so the latency window sees true end-to-end time
+        meta.setdefault("_t0", time.perf_counter())
         self.requests.put((payload, meta, fut))
         # closes the route()/retire race: if this endpoint was retired
         # between the route decision and the put, hand the queue (which
@@ -129,7 +157,8 @@ class ServiceInstance(threading.Thread):
     resolves."""
 
     def __init__(self, desc: ServiceDescription, endpoint: ServiceEndpoint,
-                 on_exit: Optional[Callable] = None):
+                 on_exit: Optional[Callable] = None, warmup: bool = False,
+                 residency_listener: Optional[Callable] = None):
         super().__init__(
             name=f"service-{desc.name}[{endpoint.replica_idx}]", daemon=True)
         self.desc = desc
@@ -140,14 +169,27 @@ class ServiceInstance(threading.Thread):
         self.servicer = None
         self._pending: dict = {}
         self._on_exit = on_exit
+        self._warmup = warmup
+        self._residency_listener = residency_listener
         self._drain = False
         self.error: Optional[BaseException] = None
 
     def run(self):
         try:
             self.servicer = self.desc.factory()
+            if self._residency_listener is not None and \
+                    hasattr(self.servicer, "set_residency_listener"):
+                # gossip push channel: the engine notifies on KV eviction
+                # so the router's residency view refreshes immediately
+                self.servicer.set_residency_listener(self._residency_listener)
             if hasattr(self.servicer, "setup"):
                 self.servicer.setup()
+            if self._warmup and hasattr(self.servicer, "warmup"):
+                # prime (compile + a token of decode) BEFORE ready: the
+                # router never sees a cold replica, so autoscale-up does
+                # not add first-request tail latency.  A warm-up crash is
+                # a factory crash: _await_ready bails out early on it.
+                self.servicer.warmup()
             self.endpoint.ready.set()
             self.ready_at = time.perf_counter()
             pumped = hasattr(self.servicer, "step")
@@ -231,16 +273,23 @@ class ServiceInstance(threading.Thread):
                 try:
                     fut.set_result(self.servicer.handle(payload, **kw))
                     self.endpoint.bump("completed")
+                    self._observe(meta)
                 except BaseException as e:  # noqa: BLE001
                     fut.set_error(e)
                     self.endpoint.bump("errors")
         return moved
+
+    def _observe(self, meta):
+        t0 = meta.get("_t0")
+        if t0 is not None:
+            self.endpoint.observe_latency(time.perf_counter() - t0)
 
     def _resolve(self, uid, result):
         entry = self._pending.pop(uid, None)
         if entry is not None:
             entry[0].set_result(result)
             self.endpoint.bump("completed")
+            self._observe(entry[2])
 
     def _drain_finished(self):
         if hasattr(self.servicer, "drain"):
@@ -280,6 +329,12 @@ class ReplicaSet:
     def __init__(self, desc: ServiceDescription, manager: "ServiceManager"):
         self.desc = desc
         self.manager = manager
+        # the partition ledger this set's replicas claim resources from
+        # (None when the manager was built without allocations: claims and
+        # admission control are skipped, the pre-claim behavior)
+        self.allocation = manager.allocation_for(desc)
+        self._warmup = (desc.warmup if desc.warmup is not None
+                        else bool(getattr(manager.policy, "warmup", False)))
         self.endpoints: list[ServiceEndpoint] = []
         self.instances: list[ServiceInstance] = []
         # endpoints retired by scale-down, kept live for stats() so
@@ -302,6 +357,9 @@ class ReplicaSet:
         #                     re-insert a reaped replica's residency
         self._dead_count = 0  # replicas declared dead (operator-visible)
         self._dead_pending: list = []  # (declared_at, endpoint) to fold
+        self._admission_denied = 0  # replica spawns denied by the ledger
+        self._denied_episode = False  # one SCALE_DENIED event per episode
+        #                               (cleared when capacity frees up)
         self._closed = False
         self._successor: Optional["ReplicaSet"] = None  # set on re-launch
         self._lock = threading.RLock()
@@ -413,10 +471,20 @@ class ReplicaSet:
         self.reap_dead()
         self._sync_residency()
         with self._lock:
-            per = [dict(ep.stats) for ep in self.endpoints]
+            eps = list(self.endpoints)
+            per = [dict(ep.stats) for ep in eps]
             retired = [dict(ep.stats) for ep in self._retired]
             folded = dict(self._retired_agg)
             dead = self._dead_count
+            denied = self._admission_denied
+        all_samples: list = []
+        for ep, p in zip(eps, per):
+            samples = ep.latency.samples()
+            p95 = percentile(samples, 0.95)
+            p["latency_p95_ms"] = None if p95 is None else p95 * 1e3
+            p["latency_histogram"] = ep.latency.histogram(samples=samples)
+            if not ep.retired:
+                all_samples.extend(samples)
         agg = {k: folded[k] + sum(p[k] for p in per)
                + sum(p[k] for p in retired)
                for k in _STAT_KEYS}
@@ -424,8 +492,63 @@ class ReplicaSet:
         agg["dead_replicas"] = dead  # lifetime count of replicas that
         #                              exhausted their restart budget (or
         #                              crashed with restarts disabled)
+        agg["admission_denied"] = denied  # replica admissions the ledger
+        #                                   refused: every denied spawn,
+        #                                   plus one per sustained
+        #                                   autoscaler denial episode
+        p95 = percentile(all_samples, 0.95)
+        agg["latency_p95_ms"] = None if p95 is None else p95 * 1e3
         agg["per_replica"] = per
         return agg
+
+    def latency_p95(self, window_s: Optional[float] = None,
+                    started_after: Optional[float] = None
+                    ) -> Optional[float]:
+        """p95 end-to-end latency (seconds) across live replicas, the SLO
+        autoscaler's signal; optionally windowed and restricted to requests
+        *started* after a given perf_counter instant."""
+        with self._lock:
+            eps = [ep for ep in self.endpoints if not ep.retired]
+        samples: list = []
+        for ep in eps:
+            samples.extend(ep.latency.samples(window_s, started_after))
+        return percentile(samples, 0.95)
+
+    def claimed(self) -> dict:
+        """Live resources this set's replicas hold on the shared ledger."""
+        with self._lock:
+            claims = [ep.claim for ep in self.endpoints
+                      if ep.claim is not None]
+        return {"cores": sum(c.n_cores for c in claims),
+                "gpus": sum(c.n_gpus for c in claims),
+                "replicas": sum(1 for c in claims if not c.released)}
+
+    def capacity_headroom(self) -> Optional[int]:
+        """How many MORE replicas of this shape the partition can admit
+        right now; None when the set has no allocation (unbounded)."""
+        if self.allocation is None:
+            return None
+        req = self.desc.requirements
+        return self.allocation.fits(req.ranks, req.cores_per_rank,
+                                    req.gpus_per_rank)
+
+    def _note_admission_denied(self, where: str = "spawn",
+                               once_per_episode: bool = False):
+        """Record a denied replica admission: bump the operator counter
+        and emit SCALE_DENIED once per denial episode (re-armed when a
+        claim succeeds or capacity is released back).  The autoscaler tick
+        passes ``once_per_episode=True`` — it re-evaluates every interval,
+        and counting each tick would inflate one sustained denial into
+        thousands; spawn-level denials always count."""
+        with self._lock:
+            first = not self._denied_episode
+            if once_per_episode and not first:
+                return
+            self._admission_denied += 1
+            self._denied_episode = True
+        if first and self.manager.events:
+            self.manager.events.emit(self.name, "SCALE_DENIED", "service",
+                                     f"partition_full:{where}")
 
     def _sync_residency_async(self):
         """Run one residency gossip pull off the routing path; coalesces
@@ -489,32 +612,102 @@ class ReplicaSet:
     # -- lifecycle (driven by the manager) ----------------------------------
     def _spawn(self) -> Optional[ServiceInstance]:
         """Create + start one replica; caller waits for readiness.
-        Returns None if the set was closed (shutdown raced a grow).
+        Returns None if the set was closed (shutdown raced a grow) OR the
+        partition allocation denied the replica's resource claim
+        (admission control: the set degrades, with a SCALE_DENIED event
+        and the ``admission_denied`` stat, instead of overbooking).
         Replica indices are monotonic so identities stay unambiguous
         even after a middle replica is shrunk away."""
         with self._lock:
             if self._closed:
                 return None
+        claim = None
+        if self.allocation is not None:
+            claim = self.allocation.claim(
+                self.desc.requirements,
+                owner=f"service:{self.desc.name}")
+            if claim is None:
+                self._note_admission_denied()
+                return None
+        with self._lock:
+            if self._closed:  # closed while we were claiming
+                if claim is not None:
+                    claim.release()
+                return None
+            self._denied_episode = False  # capacity exists again
             ep = ServiceEndpoint(self.desc.name, self._next_idx)
+            ep.claim = claim
             self._next_idx += 1
             inst = ServiceInstance(self.desc, ep,
-                                   on_exit=self.manager._handle_exit)
+                                   on_exit=self.manager._handle_exit,
+                                   warmup=self._warmup,
+                                   residency_listener=self._on_engine_evict)
             self.endpoints.append(ep)
             self.instances.append(inst)
             self._gen += 1
         inst.start()
         return inst
 
+    def _on_engine_evict(self):
+        """Residency gossip PUSH: an engine dropped resident KV — refresh
+        the router's view now (async, coalesced) instead of leaving a
+        staleness window until the next pull tick."""
+        if getattr(self.manager.router, "uses_residency", False):
+            self._sync_residency_async()
+
+    def _release_claim(self, ep: ServiceEndpoint):
+        """Return a retired replica's resources to the ledger (idempotent:
+        retire paths may race)."""
+        claim = getattr(ep, "claim", None)
+        if claim is not None and claim.release():
+            with self._lock:
+                self._denied_episode = False  # capacity freed: re-arm the
+                #                               SCALE_DENIED episode event
+
+    def _reclaim(self):
+        """Best-effort re-book claims for live replicas.  Used when a
+        blue/green relaunch released this set's claims to admit a
+        successor that then FAILED: the old replicas keep serving, so
+        their cores must go back on the ledger.  A claim that no longer
+        fits (a task grabbed the cores meanwhile) stays unbooked — the
+        replica serves under-accounted rather than being killed."""
+        if self.allocation is None:
+            return
+        with self._lock:
+            eps = [ep for ep in self.endpoints if not ep.retired]
+        for ep in eps:
+            claim = getattr(ep, "claim", None)
+            if claim is not None and not claim.released:
+                continue
+            fresh = self.allocation.claim(
+                self.desc.requirements, owner=f"service:{self.desc.name}")
+            if fresh is None:
+                continue
+            # a concurrent retire (autoscale shrink, reap, stop) may have
+            # removed this endpoint between the snapshot and here; a claim
+            # attached now would never be released again.  Membership is
+            # mutated under the lock, so re-check before attaching.
+            with self._lock:
+                attach = ep in self.endpoints and not ep.retired
+                if attach:
+                    ep.claim = fresh
+            if not attach:
+                fresh.release()
+
     def _relaunch(self, dead: ServiceInstance):
         """Restart ONE crashed replica on its existing endpoint (whose queue
-        holds the replayed in-flight requests) without disturbing siblings."""
+        holds the replayed in-flight requests) without disturbing siblings.
+        The replica's resource claim survives the relaunch — same replica,
+        same booked cores."""
         with self._lock:
             try:
                 idx = self.instances.index(dead)
             except ValueError:  # already replaced or scaled away
                 return
             inst = ServiceInstance(self.desc, dead.endpoint,
-                                   on_exit=self.manager._handle_exit)
+                                   on_exit=self.manager._handle_exit,
+                                   warmup=self._warmup,
+                                   residency_listener=self._on_engine_evict)
             self.instances[idx] = inst
             self._gen += 1  # recovered replica starts with fresh history
         inst.start()
@@ -596,6 +789,7 @@ class ReplicaSet:
                     inst.endpoint.retired = True
                     inst.stop()
                     self._reroute(inst.endpoint)
+                    self._release_claim(inst.endpoint)
                 # not popped: the replica crashed and _relaunch already
                 # replaced it on the same endpoint — leave that recovery
                 # alone (do NOT retire the endpoint out from under it)
@@ -695,7 +889,11 @@ class ReplicaSet:
     def _fold_retired(self, endpoints):
         """Track retired endpoints for stats(), folding the oldest (whose
         drains have long finished) into a flat aggregate so churn stays
-        bounded."""
+        bounded.  Retired replicas also hand their resource claims back to
+        the partition ledger here (idempotent; dead replicas already
+        released at declare time)."""
+        for ep in endpoints:
+            self._release_claim(ep)
         with self._lock:
             self._retired.extend(endpoints)
             for ep in endpoints:  # replica_idx is never reused: drop its
@@ -724,6 +922,10 @@ class ReplicaSet:
         ep.on_retired = self._fail_queue
         ep.retired = True
         self._fail_queue(ep)
+        # a permanently dead replica serves nothing: free its claim NOW so
+        # a replacement scale-up can be admitted (n_live already excludes
+        # it from the autoscaler's configured-capacity bound)
+        self._release_claim(ep)
         grace = getattr(self.manager.policy, "dead_replica_grace_s", 2.0)
         with self._lock:
             if self._closed:
@@ -803,14 +1005,54 @@ class ServiceManager:
     """Launch / discover / monitor / restart / scale replicated services."""
 
     def __init__(self, policy=None, event_log=None,
-                 router: Optional[Router] = None):
+                 router: Optional[Router] = None,
+                 allocations: Optional[dict] = None):
         self.policy = policy
         self.events = event_log
         self.replica_sets: dict[str, ReplicaSet] = {}
         self.router = router or router_from_policy(policy)
+        # named partition Allocations (the middleware's ledger).  When
+        # given, every replica spawn claims its ServiceDescription
+        # requirements here — admission-controlled scaling; when absent
+        # (standalone manager), claims are skipped entirely.
+        self.allocations: dict = allocations or {}
+        self.autoscaler = (autoscaler_from_policy(policy)
+                           if policy is not None else None)
         self._lock = threading.Lock()
-        self._autoscaler: Optional[threading.Thread] = None
+        self._autoscale_thread: Optional[threading.Thread] = None
         self._autoscale_stop = threading.Event()
+
+    def allocation_for(self, desc: ServiceDescription):
+        """Partition ledger a service's replicas claim from (same
+        resolution order as task dispatch): its pinned partition, the
+        policy default, else the first allocation.  None when the manager
+        has no allocations."""
+        if not self.allocations:
+            return None
+        part = desc.partition or getattr(self.policy, "default_partition",
+                                         None)
+        if part and part in self.allocations:
+            return self.allocations[part]
+        return next(iter(self.allocations.values()))
+
+    def claimed(self) -> dict:
+        """Per-partition resources currently claimed by service replicas:
+        {partition: {"cores", "gpus", "replicas", "services": {name: ...}}}
+        — the services half of the shared ledger that
+        ``Rhapsody.utilization()`` reports."""
+        out: dict = {}
+        for name, rs in list(self.replica_sets.items()):
+            if rs.allocation is None:
+                continue
+            c = rs.claimed()
+            agg = out.setdefault(rs.allocation.name,
+                                 {"cores": 0, "gpus": 0, "replicas": 0,
+                                  "services": {}})
+            agg["cores"] += c["cores"]
+            agg["gpus"] += c["gpus"]
+            agg["replicas"] += c["replicas"]
+            agg["services"][name] = c
+        return out
 
     # -- back-compat views --------------------------------------------------
     @property
@@ -832,25 +1074,50 @@ class ServiceManager:
     def launch(self, desc: ServiceDescription) -> ReplicaSet:
         n = max(1, desc.replicas or getattr(self.policy, "replicas", 1)
                 or 1)  # same clamp as scale_to: a set always has >=1
+        with self._lock:
+            predecessor = self.replica_sets.get(desc.name)
+        if predecessor is not None:
+            # blue/green relaunch of a live name: the predecessor hands its
+            # claims back NOW so the successor can be admitted on the same
+            # capacity (otherwise a full partition would deny every spawn
+            # and a partial one would silently downsize the service).  The
+            # old replicas keep serving claim-less only for the bounded
+            # window until _drain_into below retires them.
+            for ep in list(predecessor.endpoints):
+                predecessor._release_claim(ep)
         rs = ReplicaSet(desc, self)
         deadline = time.perf_counter() + desc.ready_timeout
         try:
             # spawn all replicas first so factories initialize in parallel
             # (each is its own thread); THEN wait — the shared deadline is
-            # per set, not per serially-started replica
+            # per set, not per serially-started replica.  A spawn denied by
+            # the partition ledger comes back None: the launch degrades to
+            # the admitted count (event already emitted) as long as at
+            # least one replica fits.
             insts = [rs._spawn() for _ in range(n)]
-            for i, inst in enumerate(insts):
+            spawned = [inst for inst in insts if inst is not None]
+            if not spawned:
+                raise RuntimeError(
+                    f"service {desc.name}: no replica admitted — "
+                    f"partition "
+                    f"{rs.allocation.name if rs.allocation else '?'} "
+                    f"cannot fit {desc.requirements}")
+            for inst in spawned:
                 remaining = deadline - time.perf_counter()
-                if inst is None or not _await_ready(inst,
-                                                    max(0.0, remaining)):
-                    err = inst.error if inst is not None else None
+                if not _await_ready(inst, max(0.0, remaining)):
+                    err = inst.error
                     raise TimeoutError(
-                        f"service {desc.name} replica {i} not ready"
+                        f"service {desc.name} replica "
+                        f"{inst.endpoint.replica_idx} not ready"
                         + (f" (factory failed: {err!r})" if err else ""))
         except BaseException:
             # the set was never registered, so nothing could have routed
             # to it — tear it down; a live old set keeps serving untouched
+            # (and gets the claims it lent the failed successor re-booked,
+            # or admission control would silently lapse for its cores)
             rs._stop_all()
+            if predecessor is not None:
+                predecessor._reclaim()
             raise
         # register only once fully ready: during the spawn window the old
         # set (if any) keeps serving, and dispatch never sees a set whose
@@ -911,8 +1178,8 @@ class ServiceManager:
     def stop_all(self):
         self._autoscale_stop.set()
         with self._lock:
-            scaler = self._autoscaler
-            self._autoscaler = None  # a later launch() may start a new one
+            scaler = self._autoscale_thread
+            self._autoscale_thread = None  # a later launch() may start a new one
         if scaler is not None:
             scaler.join(timeout=2.0)
         for name in list(self.replica_sets):
@@ -960,25 +1227,26 @@ class ServiceManager:
         if pol is None or not getattr(pol, "autoscale", False):
             return
         with self._lock:
-            if self._autoscaler is not None:
+            if self._autoscale_thread is not None:
                 return
             self._autoscale_stop.clear()
-            self._autoscaler = threading.Thread(
+            self._autoscale_thread = threading.Thread(
                 target=self._autoscale_loop, name="service-autoscaler",
                 daemon=True)
-            self._autoscaler.start()
+            self._autoscale_thread.start()
 
     def _autoscale_loop(self):
-        """Grow a replica set whose per-replica queue depth stays above the
-        high-water mark for ``autoscale_sustain`` consecutive intervals;
-        shrink when it stays below the low-water mark.  Bounded by
-        [autoscale_min_replicas, autoscale_max_replicas]."""
+        """Pluggable-policy control loop (``repro.core.autoscale``): each
+        tick asks the configured ``Autoscaler`` for every set's desired
+        size, bounds scale-up by the partition ledger
+        (``Allocation.fits``), and applies the change asynchronously.
+        Bounded by [autoscale_min_replicas, autoscale_max_replicas] inside
+        the policy, and by physical free capacity here."""
         pol = self.policy
-        hot: dict[str, int] = {}
-        cold: dict[str, int] = {}
+        scaler = self.autoscaler
         while not self._autoscale_stop.wait(pol.autoscale_interval_s):
             try:
-                self._autoscale_tick(pol, hot, cold)
+                self._autoscale_tick(scaler)
             except Exception as e:
                 # one bad tick (e.g. a scale racing shutdown) must not
                 # kill autoscaling for the rest of the process — but a
@@ -987,51 +1255,64 @@ class ServiceManager:
                     self.events.emit("autoscaler", "FAILED", "service",
                                      f"tick_error={e!r}")
 
-    def _autoscale_tick(self, pol, hot, cold):
-        for d in (hot, cold):  # drop counters for stopped service names
-            for k in list(d):
-                if k not in self.replica_sets:
-                    del d[k]
+    def _autoscale_tick(self, scaler):
+        scaler.prune(set(self.replica_sets))
         for name, rs in list(self.replica_sets.items()):
             if rs._scaling:  # previous grow/shrink still in flight
                 continue
             n = rs.n_replicas
-            live = rs.n_live  # bounds use LIVE capacity: replicas dead in
-            #                   place must not block replacement scale-ups
-            depth = rs.mean_depth()
-            if depth > pol.autoscale_high_depth and \
-                    live < pol.autoscale_max_replicas:
-                hot[name] = hot.get(name, 0) + 1
-                cold[name] = 0
-                if hot[name] >= pol.autoscale_sustain:
-                    hot[name] = 0
-                    self._scale_async(name, rs, n, n + 1, "SCALE_UP")
-            elif depth < pol.autoscale_low_depth and \
-                    live > pol.autoscale_min_replicas:
-                cold[name] = cold.get(name, 0) + 1
-                hot[name] = 0
-                if cold[name] >= pol.autoscale_sustain:
-                    cold[name] = 0
-                    self._scale_async(name, rs, n, n - 1, "SCALE_DOWN")
-            else:
-                hot[name] = 0
-                cold[name] = 0
+            target = scaler.desired(name, rs)
+            if target is None:
+                continue
+            target = max(1, target)
+            if target > n:
+                # admission control: never target more replicas than the
+                # partition can physically claim.  A fully clamped grow is
+                # a DENIAL (event + stat on the set), not an exception.
+                headroom = rs.capacity_headroom()
+                if headroom is not None:
+                    target = min(target, n + headroom)
+                if target <= n:
+                    rs._note_admission_denied("autoscale",
+                                              once_per_episode=True)
+                    continue
+                self._scale_async(name, rs, n, target, "SCALE_UP")
+            elif target < n:
+                self._scale_async(name, rs, n, target, "SCALE_DOWN")
 
     def _scale_async(self, name, rs, n_before, n_target, tag):
         """Run one scaling action off the control loop: a slow replica
-        factory must not stall sampling for every other service."""
+        factory must not stall sampling for every other service.  The
+        in-flight flag is cleared on EVERY exit path (including a scale_to
+        error or a thread that never started), so a denied or failed grow
+        can never wedge autoscaling for this set."""
         rs._scaling = True
 
         def work():
             try:
                 rs.scale_to(n_target)
                 # emit what actually happened: a grow can degrade if the
-                # new replica misses its ready timeout
+                # new replica misses its ready timeout or is denied
+                # admission by the partition ledger
                 if self.events and rs.n_replicas != n_before:
                     self.events.emit(name, tag, "service",
                                      f"replicas={rs.n_replicas}")
+            except Exception as e:
+                if self.events:
+                    self.events.emit(name, "FAILED", "service",
+                                     f"scale_error={e!r}")
             finally:
+                # stamp the action COMPLETION (not initiation): a slow grow
+                # (factory + warm-up) must not let latency served under the
+                # old replica count pass the SLO scaler's post-action
+                # filter and trigger an oscillating second correction
+                if self.autoscaler is not None:
+                    self.autoscaler.note_scaled(name)
                 rs._scaling = False
 
-        threading.Thread(target=work, name=f"scale-{name}",
-                         daemon=True).start()
+        t = threading.Thread(target=work, name=f"scale-{name}", daemon=True)
+        try:
+            t.start()
+        except BaseException:
+            rs._scaling = False
+            raise

@@ -9,9 +9,13 @@ prefix stick to one replica (``--affinity-prefix-len`` tokens hashed into
 the session key, spilling to the least-loaded replica past
 ``--affinity-spill-factor``), and the engines skip prefill for resident
 prefixes; per-replica ``prefix_hits``/``prefix_misses`` are reported.
-Reports aggregate + per-replica throughput, latency, and utilization — the
-runnable end of the inference-at-scale path the dry-run lowers at
-production shapes.
+Replicas claim cores from the middleware's resource ledger
+(admission-controlled), ``--warmup`` primes each replica before it becomes
+routable, and ``--autoscale`` turns on the pluggable autoscaler
+(``--autoscaler queue_depth|latency_slo``, ``--slo-p95-ms`` target) bounded
+by the partition's free capacity.  Reports aggregate + per-replica
+throughput, latency, and utilization — the runnable end of the
+inference-at-scale path the dry-run lowers at production shapes.
 """
 from __future__ import annotations
 
@@ -47,6 +51,16 @@ def main():
     ap.add_argument("--affinity-spill-factor", type=float, default=2.0,
                     help="sticky replica sheds load when its queue exceeds "
                          "factor * (min depth + 1); <=0 never spills")
+    ap.add_argument("--warmup", action="store_true",
+                    help="prime each replica (compile + a token of decode) "
+                         "before the router may route to it")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="let the autoscaler grow/shrink the replica set "
+                         "within the partition's free capacity")
+    ap.add_argument("--autoscaler", default="queue_depth",
+                    choices=("queue_depth", "latency_slo"))
+    ap.add_argument("--slo-p95-ms", type=float, default=250.0,
+                    help="latency_slo autoscaler: p95 end-to-end target")
     args = ap.parse_args()
 
     cfg = (get_smoke_config(args.arch)
@@ -57,7 +71,12 @@ def main():
                   policy=ExecutionPolicy(
                       routing=args.routing,
                       affinity_prefix_len=args.affinity_prefix_len,
-                      affinity_spill_factor=args.affinity_spill_factor),
+                      affinity_spill_factor=args.affinity_spill_factor,
+                      warmup=args.warmup,
+                      autoscale=args.autoscale,
+                      autoscaler=args.autoscaler,
+                      autoscale_max_replicas=max(4, args.replicas),
+                      slo_p95_ms=args.slo_p95_ms),
                   n_workers=2)
     try:
         replica_set = rh.add_service(ServiceDescription(
@@ -99,6 +118,13 @@ def main():
               f"mean slot-utilization {np.mean(utils):.2f}")
         print("[serve] per-replica requests:",
               [p["requests"] for p in stats["per_replica"]])
+        ledger = rh.utilization()
+        print("[serve] shared ledger:",
+              {k: {"cores": round(v["cores"], 2),
+                   "service_cores": v["service_cores"],
+                   "service_replicas": v["service_replicas"]}
+               for k, v in ledger.items()},
+              f"admission_denied={stats['admission_denied']}")
         if args.routing == "prefix_affinity":
             hits, misses = stats["prefix_hits"], stats["prefix_misses"]
             reuse = [inst.servicer.stats.prefix_cached_tokens

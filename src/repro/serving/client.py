@@ -56,6 +56,19 @@ class LLMServicer:
         router's match fidelity (``affinity_max_prefix``)."""
         return self.engine.residency_summary(max_len=max_len)
 
+    def set_residency_listener(self, cb):
+        """Gossip push: the replica set's callback fires on KV eviction so
+        the router's residency view refreshes without waiting for the next
+        pull tick."""
+        self.engine.on_residency_drop = cb
+
+    def warmup(self):
+        """Prime the replica before it becomes routable: run one tiny
+        request end-to-end so prefill/decode are compiled and the first
+        real request pays no compilation tail (autoscale warm-up)."""
+        self.engine.submit([1, 2, 3, 4], max_new_tokens=1)
+        self.engine.run(max_steps=64)
+
     @property
     def stats(self):
         return self.engine.stats

@@ -130,6 +130,11 @@ class InferenceEngine:
         # fast path is gated off for them below.
         self._prefix_index = RadixIndex()
         self._resident_len: dict[int, int] = {}  # slot -> covered seq len
+        # residency gossip PUSH channel: called (no args) whenever resident
+        # KV is dropped (evicted or reclaimed), so the replica set can
+        # refresh the router's residency view immediately instead of
+        # leaving a staleness window until the next pull tick
+        self.on_residency_drop: Optional[Callable[[], None]] = None
         self.stats = EngineStats()
         self._uid = itertools.count()
         self._key = jax.random.PRNGKey(seed)
@@ -271,12 +276,22 @@ class InferenceEngine:
             self.running[slot] = req
             self._check_done(req)
 
-    def _drop_residency(self, slot: Optional[int]):
+    def _drop_residency(self, slot: Optional[int], notify: bool = True):
         """Forget a slot's resident sequence (its cache is being replaced
-        or re-claimed)."""
-        if slot is not None:
-            self._prefix_index.remove_value(slot)
-            self._resident_len.pop(slot, None)
+        or re-claimed), notifying the push listener when coverage the
+        router may rely on actually disappeared.  The prefix-reuse resume
+        path passes ``notify=False``: a take-for-resume is a HIT (the
+        consuming request is already routed here), and pushing on every
+        hit would re-arm a near-continuous gossip loop on the hot path."""
+        if slot is None:
+            return
+        had = self._resident_len.pop(slot, None) is not None
+        self._prefix_index.remove_value(slot)
+        if notify and had and self.on_residency_drop is not None:
+            try:
+                self.on_residency_drop()
+            except Exception:
+                pass  # gossip is best-effort; serving must not care
 
     def residency_summary(self, max_entries: Optional[int] = None,
                           max_len: int = 128) -> list:
@@ -324,7 +339,8 @@ class InferenceEngine:
         for covered, slot, L, d in candidates:
             if not self.pool.take(slot):
                 continue  # defensively skip a slot that is no longer free
-            self._drop_residency(slot)
+            self._drop_residency(slot, notify=False)  # resume hit, not an
+            #                                           eviction
             self.pool.set_len(slot, covered)
             self._last_tokens = self._last_tokens.at[slot].set(
                 req.prompt[covered])

@@ -1,0 +1,688 @@
+"""Resource-claimed replica placement + SLO-driven, capacity-bounded
+autoscaling: the claim API, admission control, pluggable autoscaler
+policies, latency windows, replica warm-up, partition() hardening, and the
+residency gossip push channel."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (Allocation, ExecutionPolicy, LatencySLOAutoscaler,
+                        LatencyWindow, QueueDepthAutoscaler,
+                        ResourceDescription, ResourceRequirements, Rhapsody,
+                        ServiceDescription, partition)
+from repro.core.autoscale import autoscaler_from_policy, percentile
+
+
+class Echo:
+    def handle(self, payload):
+        time.sleep(0.001)
+        return ("ok", payload)
+
+
+def tiny_rh(cores=2, nodes=1, **policy_kw):
+    """2-core default: capacity-pressure scenarios fit in one test."""
+    return Rhapsody(ResourceDescription(nodes=nodes, cores_per_node=cores),
+                    policy=ExecutionPolicy(**policy_kw), n_workers=1)
+
+
+def events_with(rh, state):
+    return [e for e in rh.events.events if e[2] == state]
+
+
+# ---------------------------------------------------------------------------
+# Claim API: book / release / free_capacity / fits / packing strategies
+# ---------------------------------------------------------------------------
+
+
+def test_claim_books_and_release_is_idempotent():
+    alloc = Allocation(ResourceDescription(nodes=1, cores_per_node=4))
+    c = alloc.claim(ResourceRequirements(ranks=1, cores_per_rank=3),
+                    owner="svc")
+    assert c is not None and c.n_cores == 3
+    assert alloc.used_cores == 3
+    assert alloc.free_capacity()["cores"] == 1
+    denied = alloc.claim(ResourceRequirements(ranks=1, cores_per_rank=2))
+    assert denied is None
+    assert alloc.used_cores == 3  # failed claim rolled back fully
+    assert c.release() is True
+    assert c.release() is False  # second release is a no-op
+    assert alloc.used_cores == 0
+    assert c.n_cores == 0  # released claims report no held resources
+
+
+def test_fits_counts_additional_placements():
+    alloc = Allocation(ResourceDescription(nodes=2, cores_per_node=4))
+    assert alloc.fits(1, 1, 0) == 8
+    assert alloc.fits(1, 3, 0) == 2  # node-local: one 3-core rank per node
+    assert alloc.fits(2, 2, 0) == 2
+    assert alloc.fits(1, 5, 0) == 0  # no node has 5 cores
+    c = alloc.claim(ResourceRequirements(ranks=1, cores_per_rank=3))
+    assert alloc.fits(1, 3, 0) == 1
+    c.release()
+    assert alloc.fits(1, 3, 0) == 2
+
+
+def test_best_fit_preserves_whole_nodes_where_first_fit_fragments():
+    def seeded(strategy):
+        alloc = Allocation(ResourceDescription(nodes=2, cores_per_node=4),
+                           strategy=strategy)
+        big = alloc.try_map(1, 4, 0)  # fills node 0
+        alloc.try_map(1, 2, 0)  # node 1 -> 2 free
+        alloc.release(big)  # node 0 whole again: free = {n0: 4, n1: 2}
+        return alloc
+
+    ff = seeded("first_fit")
+    ff.try_map(1, 2, 0)  # lands on node 0, fragmenting the whole node
+    assert ff.try_map(1, 4, 0) is None
+
+    bf = seeded("best_fit")
+    bf.try_map(1, 2, 0)  # tightest fit: node 1, leaving node 0 whole
+    assert bf.try_map(1, 4, 0) is not None
+
+
+def test_gpu_only_and_zero_footprint_claims_conserve_ledger():
+    """Regression: cores_per_rank=0 used to slice [-0:] and silently book
+    a node's ENTIRE free-core list while accounting 0."""
+    alloc = Allocation(ResourceDescription(nodes=1, cores_per_node=4,
+                                           gpus_per_node=2))
+    c = alloc.claim(ResourceRequirements(ranks=1, cores_per_rank=0,
+                                         gpus_per_rank=1))
+    assert c is not None and c.n_cores == 0 and c.n_gpus == 1
+    free = alloc.free_capacity()
+    assert free["cores"] == 4  # cores untouched by a gpu-only claim
+    assert free["gpus"] == 1
+    assert alloc.fits(1, 0, 1) == 1  # fits agrees with claimability
+    c.release()
+    assert alloc.free_capacity()["gpus"] == 2
+    # zero-footprint shape: claimable, and never bounds admission
+    z = alloc.claim(ResourceRequirements(ranks=1, cores_per_rank=0,
+                                         gpus_per_rank=0))
+    assert z is not None and z.n_cores == 0
+    assert alloc.fits(1, 0, 0) > 1_000_000
+    assert alloc.free_capacity()["cores"] == 4
+
+
+def test_unknown_strategy_rejected():
+    with pytest.raises(ValueError):
+        Allocation(ResourceDescription(), strategy="worst_fit")
+
+
+# ---------------------------------------------------------------------------
+# partition(): duplicates, overlap, explicit ids, "*" remainder
+# ---------------------------------------------------------------------------
+
+
+def test_partition_star_absorbs_leftover_nodes():
+    parts = partition(ResourceDescription(nodes=8, cores_per_node=2),
+                      {"mpi": 5, "*": None})
+    assert sorted(parts["mpi"].nodes) == [0, 1, 2, 3, 4]
+    assert sorted(parts["*"].nodes) == [5, 6, 7]  # nothing stranded
+
+
+def test_partition_rejects_duplicate_names():
+    with pytest.raises(ValueError, match="duplicate"):
+        partition(ResourceDescription(nodes=4),
+                  [("a", 1), ("a", 2)])
+
+
+def test_partition_rejects_overlapping_explicit_ids():
+    with pytest.raises(ValueError, match="overlap"):
+        partition(ResourceDescription(nodes=4),
+                  {"a": [0, 1], "b": [1, 2]})
+
+
+def test_partition_rejects_out_of_range_and_repeated_ids():
+    with pytest.raises(ValueError, match="outside"):
+        partition(ResourceDescription(nodes=2), {"a": [0, 5]})
+    with pytest.raises(ValueError, match="repeats"):
+        partition(ResourceDescription(nodes=4), {"a": [1, 1]})
+
+
+def test_partition_explicit_ids_and_counts_mix():
+    parts = partition(ResourceDescription(nodes=6), {"pin": [4, 5],
+                                                     "bulk": 3, "*": None})
+    assert sorted(parts["pin"].nodes) == [4, 5]
+    assert sorted(parts["bulk"].nodes) == [0, 1, 2]
+    assert sorted(parts["*"].nodes) == [3]
+
+
+def test_partition_empty_star_raises():
+    with pytest.raises(ValueError, match="empty"):
+        partition(ResourceDescription(nodes=2), {"a": 2, "*": None})
+
+
+def test_partition_oversubscription_raises():
+    with pytest.raises(ValueError, match="remain"):
+        partition(ResourceDescription(nodes=4), {"a": 3, "b": 2})
+
+
+# ---------------------------------------------------------------------------
+# LatencyWindow
+# ---------------------------------------------------------------------------
+
+
+def test_latency_window_percentiles_and_filters():
+    w = LatencyWindow()
+    now = 1000.0
+    for i, dt in enumerate([0.010, 0.020, 0.030, 0.500]):
+        w.observe(dt, now=now + i)
+    assert percentile(w.samples(now=now + 10), 0.95) == 0.500
+    # wall-clock window: only the last two observations are recent
+    recent = w.samples(window_s=2.5, now=now + 4)
+    assert recent == [0.030, 0.500]
+    # started_after: the 0.5s sample completed at t=1003 but STARTED at
+    # 1002.5, so a cutoff of 1002.8 excludes it
+    fresh = w.samples(started_after=now + 2.8, now=now + 10)
+    assert fresh == []
+    hist = w.histogram()
+    assert sum(hist.values()) == 4
+    assert w.count == 4
+
+
+def test_percentile_nearest_rank():
+    assert percentile([], 0.95) is None
+    assert percentile([1.0], 0.95) == 1.0
+    xs = list(range(1, 101))
+    assert percentile(xs, 0.95) == 95
+    assert percentile(xs, 0.50) == 50
+
+
+# ---------------------------------------------------------------------------
+# Autoscaler policies (unit, against a fake replica set)
+# ---------------------------------------------------------------------------
+
+
+class FakeRS:
+    def __init__(self, n=1, depth=0.0, p95_all=None, p95_fresh=None):
+        self.n_replicas = n
+        self.depth = depth
+        self.p95_all = p95_all  # windowed p95, any sample
+        self.p95_fresh = p95_fresh  # p95 of post-action samples
+
+    @property
+    def n_live(self):
+        return self.n_replicas
+
+    def mean_depth(self):
+        return self.depth
+
+    def latency_p95(self, window_s=None, started_after=None):
+        return self.p95_all if started_after is None else self.p95_fresh
+
+
+def test_queue_depth_autoscaler_sustain_and_bounds():
+    pol = ExecutionPolicy(autoscale_high_depth=4.0, autoscale_low_depth=0.5,
+                          autoscale_sustain=2, autoscale_max_replicas=3)
+    a = QueueDepthAutoscaler(pol)
+    hot = FakeRS(n=1, depth=10.0)
+    assert a.desired("s", hot) is None  # 1st hot tick: sustain not met
+    assert a.desired("s", hot) == 2  # 2nd: grow
+    hot.n_replicas = 3
+    assert a.desired("s", hot) is None  # bounded by max_replicas
+    assert a.desired("s", hot) is None
+    cold = FakeRS(n=2, depth=0.0)
+    assert a.desired("c", cold) is None
+    assert a.desired("c", cold) == 1
+    # a neutral tick resets the sustain counters
+    a2 = QueueDepthAutoscaler(pol)
+    assert a2.desired("s", hot := FakeRS(n=1, depth=10.0)) is None
+    hot.depth = 1.0  # back in band
+    assert a2.desired("s", hot) is None
+    hot.depth = 10.0
+    assert a2.desired("s", hot) is None  # counter restarted
+
+
+def test_latency_slo_autoscaler_fast_up_slow_down():
+    pol = ExecutionPolicy(autoscaler="latency_slo", slo_p95_ms=100.0,
+                          autoscale_sustain=2, autoscale_max_replicas=4,
+                          autoscale_low_depth=1.0)
+    a = autoscaler_from_policy(pol)
+    assert isinstance(a, LatencySLOAutoscaler)
+    # breach scales up on the FIRST tick (sustain_up defaults to 1)
+    rs = FakeRS(n=1, depth=5.0, p95_all=0.3, p95_fresh=0.3)
+    assert a.desired("s", rs) == 2
+    a.note_scaled("s")
+    # stale signal only (no samples started since the action): hold
+    rs.p95_fresh = None
+    assert a.desired("s", rs) is None
+    # comfortable p95 + shallow queues: shrink only after 3x sustain ticks
+    rs = FakeRS(n=2, depth=0.1, p95_all=0.02, p95_fresh=0.02)
+    for _ in range(5):
+        assert a.desired("d", rs) is None
+    assert a.desired("d", rs) == 1  # 6th tick (3 * autoscale_sustain)
+    # fully idle set (nothing completed recently) also cools down
+    idle = FakeRS(n=3, depth=0.0, p95_all=None, p95_fresh=None)
+    for _ in range(5):
+        assert a.desired("i", idle) is None
+    assert a.desired("i", idle) == 2
+
+
+def test_autoscaler_from_policy_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown autoscaler"):
+        autoscaler_from_policy(ExecutionPolicy(autoscaler="vibes"))
+
+
+# ---------------------------------------------------------------------------
+# Admission control: replicas claim from the shared ledger
+# ---------------------------------------------------------------------------
+
+
+def test_scale_past_capacity_denied_with_event_not_exception():
+    rh = tiny_rh(cores=2)
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=Echo,
+                                               replicas=1))
+        assert rs.allocation is rh.allocations["default"]
+        rs.scale_to(5)  # only 2 one-core replicas physically fit
+        assert rs.n_replicas == 2
+        stats = rs.stats()
+        assert stats["admission_denied"] >= 3
+        assert events_with(rh, "SCALE_DENIED"), "denial must be evented"
+        assert rs.allocation.free_capacity()["cores"] == 0
+        # the degraded set still serves
+        assert rs.request("x").result(10.0) == ("ok", "x")
+    finally:
+        rh.close()
+
+
+def test_utilization_reflects_live_service_claims():
+    rh = tiny_rh(cores=4)
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=Echo,
+                                               replicas=3))
+        util = rh.utilization()["default"]
+        assert util["service_cores"] == 3
+        assert util["service_replicas"] == 3
+        assert util["cores"] == 3 / 4
+        assert util["free"]["cores"] == 1
+        rs.scale_to(1)  # shrink hands claims back
+        util = rh.utilization()["default"]
+        assert util["service_cores"] == 1
+        assert util["service_replicas"] == 1
+        assert rh.allocations["default"].used_cores == 1
+        rh.services.stop("svc")  # stop releases the last claim
+        assert rh.allocations["default"].used_cores == 0
+        assert rh.utilization()["default"]["service_replicas"] == 0
+    finally:
+        rh.close()
+
+
+def test_launch_degrades_to_admitted_replicas():
+    rh = tiny_rh(cores=2)
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=Echo,
+                                               replicas=4))
+        assert rs.n_replicas == 2  # admitted what fits, evented the rest
+        assert rs.stats()["admission_denied"] == 2
+    finally:
+        rh.close()
+
+
+def test_launch_with_no_admissible_replica_raises():
+    rh = tiny_rh(cores=2)
+    try:
+        with pytest.raises(RuntimeError, match="no replica admitted"):
+            rh.add_service(ServiceDescription(
+                name="fat", factory=Echo,
+                requirements=ResourceRequirements(ranks=1, cores_per_rank=8)))
+        assert rh.allocations["default"].used_cores == 0
+    finally:
+        rh.close()
+
+
+def test_tasks_and_services_share_one_ledger():
+    """A service's claims reduce what tasks can map, and vice versa —
+    the §III-C co-scheduling premise."""
+    rh = tiny_rh(cores=3)
+    try:
+        rh.add_service(ServiceDescription(name="svc", factory=Echo,
+                                          replicas=2))
+        alloc = rh.allocations["default"]
+        assert alloc.used_cores == 2
+        p = alloc.try_map(1, 1, 0)  # a task takes the last core
+        assert p is not None
+        # now even a 1-core replica is denied
+        rs = rh.get_service("svc")
+        rs.scale_to(3)
+        assert rs.n_replicas == 2
+        assert rs.stats()["admission_denied"] >= 1
+        alloc.release(p)  # task finishes -> the replica fits again
+        rs.scale_to(3)
+        assert rs.n_replicas == 3
+    finally:
+        rh.close()
+
+
+def test_dead_replica_releases_its_claim_for_replacement():
+    class BoomOnDemand:
+        def submit(self, payload):
+            if payload == "boom":
+                raise SystemError("persistent fault")
+            return 1
+
+        def step(self):
+            return [(1, "ok")]
+
+    rh = tiny_rh(cores=2, restart_failed_services=True,
+                 restart_backoff_s=0.01, restart_backoff_max_s=0.02,
+                 restart_max_attempts=1, dead_replica_grace_s=0.1)
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc",
+                                               factory=BoomOnDemand,
+                                               replicas=2))
+        assert rh.allocations["default"].used_cores == 2
+        with pytest.raises((SystemError, RuntimeError)):
+            rs.request("boom").result(10.0)
+        deadline = time.perf_counter() + 10
+        while time.perf_counter() < deadline and \
+                rh.allocations["default"].used_cores > 1:
+            time.sleep(0.02)
+        # the dead replica's cores are back on the ledger (released at
+        # declare time, before the grace-period fold even runs)
+        assert rh.allocations["default"].used_cores == 1
+        while time.perf_counter() < deadline and rs.n_replicas > 1:
+            time.sleep(0.02)
+        assert rs.n_replicas == 1
+        rs.scale_to(2)  # the freed core admits a substitute
+        assert rs.n_replicas == 2
+    finally:
+        rh.close()
+
+
+def test_autoscaler_bounded_by_free_capacity():
+    """Sustained pressure with a full partition: the autoscaler denies the
+    grow (event + stat) instead of raising or overbooking."""
+
+    class Slow:
+        def handle(self, payload):
+            time.sleep(0.01)
+            return "z"
+
+    rh = tiny_rh(cores=2, routing="least_loaded", autoscale=True,
+                 autoscale_min_replicas=1, autoscale_max_replicas=6,
+                 autoscale_high_depth=1.0, autoscale_low_depth=0.2,
+                 autoscale_interval_s=0.02, autoscale_sustain=2)
+    try:
+        rs = rh.add_service(ServiceDescription(name="slow", factory=Slow,
+                                               replicas=1))
+        futs = [rs.request(i) for i in range(200)]
+        deadline = time.perf_counter() + 15
+        while time.perf_counter() < deadline:
+            if rs.stats()["admission_denied"] > 0 and rs.n_replicas == 2:
+                break
+            time.sleep(0.02)
+        assert rs.n_replicas == 2, "should grow to physical capacity"
+        assert rs.stats()["admission_denied"] > 0
+        assert events_with(rh, "SCALE_DENIED")
+        assert rh.allocations["default"].used_cores == 2
+        for f in futs:
+            f.result(30.0)
+    finally:
+        rh.close()
+
+
+def test_relaunch_live_name_on_full_partition_succeeds():
+    """Regression: a blue/green re-launch of a live service name must not
+    be denied by the predecessor's own claims — the old set hands its
+    claims back so the successor is admitted on the same capacity."""
+    rh = tiny_rh(cores=2)
+    try:
+        old = rh.add_service(ServiceDescription(name="svc", factory=Echo,
+                                                replicas=2))
+        assert rh.allocations["default"].used_cores == 2
+        new = rh.add_service(ServiceDescription(name="svc", factory=Echo,
+                                                replicas=2))
+        assert new is not old
+        assert new.n_replicas == 2, "relaunch silently downsized"
+        assert new.request("x").result(10.0) == ("ok", "x")
+        # once the old set drains, the ledger books exactly the new claims
+        deadline = time.perf_counter() + 10
+        while time.perf_counter() < deadline and \
+                rh.allocations["default"].used_cores != 2:
+            time.sleep(0.02)
+        assert rh.allocations["default"].used_cores == 2
+        assert rh.utilization()["default"]["service_replicas"] == 2
+    finally:
+        rh.close()
+
+
+def test_failed_relaunch_rebooks_the_predecessors_claims():
+    """Regression: the claims lent to a failed blue/green successor must
+    return to the still-serving predecessor, or admission control lapses
+    for its cores."""
+
+    class Broken:
+        def __init__(self):
+            raise SystemError("bad build")
+
+    rh = tiny_rh(cores=2)
+    try:
+        old = rh.add_service(ServiceDescription(name="svc", factory=Echo,
+                                                replicas=2))
+        with pytest.raises(TimeoutError):
+            rh.add_service(ServiceDescription(name="svc", factory=Broken,
+                                              replicas=2,
+                                              ready_timeout=1.0))
+        assert rh.get_service("svc") is old  # predecessor still serving
+        assert old.request("x").result(10.0) == ("ok", "x")
+        assert rh.allocations["default"].used_cores == 2, \
+            "predecessor left claim-less after failed relaunch"
+        assert rh.utilization()["default"]["service_replicas"] == 2
+    finally:
+        rh.close()
+
+
+# ---------------------------------------------------------------------------
+# Regression: denied grow racing a scale-down must not wedge the set
+# ---------------------------------------------------------------------------
+
+
+def test_denied_grow_racing_scale_down_leaves_consistent_state():
+    rh = tiny_rh(cores=2)
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=Echo,
+                                               replicas=2))
+        for _ in range(5):
+            # manager-path grow (sets _scaling) targeting past capacity,
+            # racing a client scale-down
+            rh.services._scale_async("svc", rs, rs.n_replicas, 4,
+                                     "SCALE_UP")
+            rs.scale_to(1)
+            deadline = time.perf_counter() + 10
+            while time.perf_counter() < deadline and rs._scaling:
+                time.sleep(0.005)
+            assert rs._scaling is False, "_scaling wedged after denial"
+            rs.scale_to(2)
+        # conserved ledger: booked cores == live replicas, nothing leaked
+        assert rh.allocations["default"].used_cores == rs.n_replicas
+        # no retired endpoint strands queued work in the drain list
+        deadline = time.perf_counter() + 5
+        while time.perf_counter() < deadline and \
+                any(ep.depth() > 0 for ep in rs._retired):
+            time.sleep(0.02)
+        assert all(ep.depth() == 0 for ep in rs._retired)
+        assert rs.request("after").result(10.0) == ("ok", "after")
+    finally:
+        rh.close()
+
+
+# ---------------------------------------------------------------------------
+# Warm-up: a new replica primes before the router may see it
+# ---------------------------------------------------------------------------
+
+
+def test_warmup_completes_before_replica_becomes_routable():
+    order = []
+    gate = threading.Event()
+
+    class Warm:
+        def __init__(self):
+            order.append("init")
+
+        def warmup(self):
+            order.append("warmup")
+            gate.wait(10.0)
+
+        def handle(self, payload):
+            order.append("handle")
+            return "ok"
+
+    rh = tiny_rh(cores=4, warmup=True)
+    try:
+        out = []
+        t = threading.Thread(
+            target=lambda: out.append(rh.add_service(
+                ServiceDescription(name="svc", factory=Warm))),
+            daemon=True)
+        t.start()
+        deadline = time.perf_counter() + 5
+        while time.perf_counter() < deadline and "warmup" not in order:
+            time.sleep(0.01)
+        assert order == ["init", "warmup"]
+        # still warming: the service is not registered, nothing can route
+        assert "svc" not in rh.services.replica_sets
+        gate.set()
+        t.join(timeout=10)
+        rs = out[0]
+        assert rs.request("x").result(10.0) == "ok"
+        assert order[:2] == ["init", "warmup"] and "handle" in order
+    finally:
+        gate.set()
+        rh.close()
+
+
+def test_warmup_runs_per_scaled_up_replica_and_is_opt_in():
+    warmed = {"n": 0}
+
+    class Warm:
+        def warmup(self):
+            warmed["n"] += 1
+
+        def handle(self, payload):
+            return "ok"
+
+    rh = tiny_rh(cores=4, warmup=True)
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=Warm))
+        assert warmed["n"] == 1
+        rs.scale_to(3)
+        assert warmed["n"] == 3
+    finally:
+        rh.close()
+    warmed["n"] = 0
+    rh = tiny_rh(cores=4)  # warmup defaults off
+    try:
+        rh.add_service(ServiceDescription(name="svc", factory=Warm))
+        assert warmed["n"] == 0
+    finally:
+        rh.close()
+
+
+# ---------------------------------------------------------------------------
+# Latency accounting feeds stats()
+# ---------------------------------------------------------------------------
+
+
+def test_stats_carry_latency_percentiles_and_histograms():
+    rh = tiny_rh(cores=4)
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=Echo,
+                                               replicas=2))
+        futs = [rs.request(i) for i in range(10)]
+        for f in futs:
+            f.result(10.0)
+        stats = rs.stats()
+        assert stats["latency_p95_ms"] is not None
+        assert stats["latency_p95_ms"] > 0
+        assert all(p["latency_p95_ms"] is not None
+                   for p in stats["per_replica"]
+                   if p["completed"])
+        hist = stats["per_replica"][0]["latency_histogram"]
+        assert sum(hist.values()) == stats["per_replica"][0]["completed"]
+        assert rs.latency_p95() is not None
+    finally:
+        rh.close()
+
+
+# ---------------------------------------------------------------------------
+# Residency gossip push: eviction refreshes the router immediately
+# ---------------------------------------------------------------------------
+
+
+class GossipServicer:
+    """Sync servicer faking an engine's residency surface."""
+
+    def __init__(self):
+        self.seqs = [tuple(range(100, 120))]
+        self.listener = None
+
+    def set_residency_listener(self, cb):
+        self.listener = cb
+
+    def residency_summary(self, max_len=128):
+        return [s[:max_len] for s in self.seqs]
+
+    def handle(self, payload):
+        return "ok"
+
+
+def test_eviction_push_refreshes_router_between_pull_ticks():
+    rh = tiny_rh(cores=2, routing="radix_affinity",
+                 residency_sync_every=0)  # periodic pull disabled
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc",
+                                               factory=GossipServicer))
+        servicer = rs.instances[0].servicer
+        assert servicer.listener is not None, "listener must be wired"
+        rs.stats()  # one explicit pull seeds the router's residency view
+        router = rh.router
+        group = (rs.name, rs._uid)
+
+        def resident_members():
+            astate = router._affinity.get(group)
+            if astate is None:
+                return {}
+            return astate["residency"].match_lengths(tuple(range(100, 120)))
+
+        deadline = time.perf_counter() + 5
+        while time.perf_counter() < deadline and not resident_members():
+            time.sleep(0.01)
+        assert resident_members(), "pull should have seeded residency"
+        # the engine evicts: push channel must refresh the router without
+        # any stats()/route() tick happening
+        servicer.seqs = []
+        servicer.listener()
+        deadline = time.perf_counter() + 5
+        while time.perf_counter() < deadline and resident_members():
+            time.sleep(0.01)
+        assert not resident_members(), \
+            "eviction push did not reach Router.update_residency"
+    finally:
+        rh.close()
+
+
+def test_engine_drop_residency_fires_listener_only_on_real_drop():
+    jax = pytest.importorskip("jax")  # noqa: F841
+    from repro.configs import get_config
+    from repro.serving.engine import make_engine_from_scratch
+
+    cfg = get_config("rhapsody-demo").scaled(
+        n_layers=1, d_model=32, n_heads=2, n_kv_heads=1, head_dim=16,
+        d_ff=64, vocab=128)
+    eng = make_engine_from_scratch(cfg, max_num_seqs=2, max_len=32,
+                                   prefill_buckets=(16,))
+    fired = []
+    eng.on_residency_drop = lambda: fired.append(1)
+    eng._prefix_index.insert((1, 2, 3), 0)
+    eng._resident_len[0] = 3
+    eng._drop_residency(0)
+    assert fired == [1]
+    eng._drop_residency(1)  # nothing resident on slot 1: no push
+    assert fired == [1]
+    # a take-for-resume (prefix-reuse HIT) must not push either: the
+    # consuming request is already routed to this replica
+    eng._prefix_index.insert((5, 6, 7), 1)
+    eng._resident_len[1] = 3
+    eng._drop_residency(1, notify=False)
+    assert fired == [1]

@@ -58,6 +58,105 @@ def test_mapper_never_oversubscribes(nodes, cores, reqs):
 
 
 # ---------------------------------------------------------------------------
+# Claim API: conservation under claim/release/drain interleavings, for
+# both packing strategies — no core/gpu double-booked or leaked, failed
+# mappings roll back fully
+# ---------------------------------------------------------------------------
+
+
+_claim_ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("claim"), st.integers(1, 3), st.integers(1, 4),
+                  st.integers(0, 2)),
+        st.tuples(st.just("release"), st.integers(0, 63)),
+        st.tuples(st.just("drain"), st.integers(0, 7)),
+    ),
+    min_size=1, max_size=40)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    nodes=st.integers(1, 5),
+    cores=st.integers(1, 8),
+    gpus=st.integers(0, 2),
+    strategy=st.sampled_from(["first_fit", "best_fit"]),
+    ops=_claim_ops,
+)
+def test_claim_release_drain_conservation(nodes, cores, gpus, strategy, ops):
+    from repro.core.task import ResourceRequirements
+
+    desc = ResourceDescription(nodes=nodes, cores_per_node=cores,
+                               gpus_per_node=gpus)
+    alloc = Allocation(desc, strategy=strategy)
+    active = []
+
+    def check():
+        # booked == sum of live claims; free + used == total (no leak)
+        assert alloc.used_cores == sum(c.placement.n_cores for c in active)
+        assert alloc.used_gpus == sum(c.placement.n_gpus for c in active)
+        free = alloc.free_capacity()
+        assert free["cores"] + alloc.used_cores == alloc.total_cores
+        assert free["gpus"] + alloc.used_gpus == alloc.total_gpus
+        # no (node, core/gpu) double-booked across live claims
+        booked = set()
+        for c in active:
+            for nid, cs, gs in c.placement.ranks:
+                for core in cs:
+                    assert ("c", nid, core) not in booked, "double-booked"
+                    booked.add(("c", nid, core))
+                for g in gs:
+                    assert ("g", nid, g) not in booked, "double-booked"
+                    booked.add(("g", nid, g))
+
+    for op in ops:
+        if op[0] == "claim":
+            _, ranks, cpr, gpr = op
+            before = (alloc.used_cores, alloc.used_gpus)
+            c = alloc.claim(ResourceRequirements(
+                ranks=ranks, cores_per_rank=cpr, gpus_per_rank=gpr))
+            if c is None:  # denied: the partial binding rolled back fully
+                assert (alloc.used_cores, alloc.used_gpus) == before
+            else:
+                active.append(c)
+        elif op[0] == "release":
+            if active:
+                c = active.pop(op[1] % len(active))
+                assert c.release() is True
+                assert c.release() is False  # idempotent
+        else:  # drain: only succeeds on a fully idle node
+            alloc.drain_node(op[1])
+        check()
+    for c in active:
+        assert c.release() is True
+    assert alloc.used_cores == 0 and alloc.used_gpus == 0
+    assert alloc.free_capacity()["cores"] == alloc.total_cores
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    nodes=st.integers(1, 4),
+    cores=st.integers(1, 8),
+    reqs=st.lists(st.tuples(st.integers(1, 3), st.integers(1, 6)),
+                  min_size=1, max_size=20),
+)
+def test_fits_agrees_with_actual_claiming(nodes, cores, reqs):
+    """``fits(shape)`` must equal the number of identical claims that can
+    actually be booked back-to-back (the autoscaler's admission bound)."""
+    from repro.core.task import ResourceRequirements
+
+    desc = ResourceDescription(nodes=nodes, cores_per_node=cores)
+    for ranks, cpr in reqs:
+        alloc = Allocation(desc)
+        predicted = alloc.fits(ranks, cpr, 0)
+        booked = 0
+        while alloc.claim(ResourceRequirements(
+                ranks=ranks, cores_per_rank=cpr)) is not None:
+            booked += 1
+            assert booked <= nodes * cores  # safety bound
+        assert booked == predicted
+
+
+# ---------------------------------------------------------------------------
 # Routers: cover every request exactly once; balanced beats random on spread
 # ---------------------------------------------------------------------------
 
