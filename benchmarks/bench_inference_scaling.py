@@ -15,6 +15,14 @@ SLO; the ``saturate`` scenario overloads past the partition's physical
 capacity and checks scale-up is *denied* (SCALE_DENIED event +
 ``admission_denied`` stat) rather than overbooked, with
 ``Rhapsody.utilization()`` showing the replicas' live claims.
+
+``--multi-model`` runs TWO model groups behind one service name under the
+``weighted_capacity`` autoscaler: load shifts from one model to the other
+inside a fully-occupied partition, and the scenario validates that the
+SLO-violating group gains a replica by RETIRING one from the idle group
+(capacity-neutral rebalance on the shared ledger), that per-group claims
+sum to the ledger total, and that no request was served by a wrong-model
+replica.
 """
 from __future__ import annotations
 
@@ -24,7 +32,7 @@ import threading
 import time
 
 from repro.configs import get_config
-from repro.core import (ExecutionPolicy, ResourceDescription,
+from repro.core import (ExecutionPolicy, ModelGroup, ResourceDescription,
                         ResourceRequirements, Rhapsody, ServiceDescription)
 from repro.serving.client import llm_service_factory
 
@@ -108,10 +116,13 @@ class TimedServicer:
     """Synthetic serial replica: each request occupies it for a fixed
     service time, so end-to-end latency is deterministic (queue wait +
     service) and the autoscaler's control behavior — not engine noise —
-    is what the scenario measures."""
+    is what the scenario measures.  ``tag`` marks results with the model
+    group that served them, so the multi-model scenario can PROVE no
+    request landed on a wrong-model replica."""
 
-    def __init__(self, service_time_s: float = 0.02):
+    def __init__(self, service_time_s: float = 0.02, tag: str = ""):
         self.service_time = service_time_s
+        self.tag = tag
         self._q: list = []
         self._uid = 0
         self._cur = None
@@ -129,7 +140,7 @@ class TimedServicer:
         now = time.perf_counter()
         out = []
         if self._cur is not None and now >= self._done_at:
-            out.append((self._cur, {"ok": True}))
+            out.append((self._cur, {"ok": True, "served_by": self.tag}))
             self._cur = None
         if self._cur is None and self._q:
             self._cur = self._q.pop(0)
@@ -238,19 +249,159 @@ def autoscale_sweep(policies=("queue_depth", "latency_slo"),
     return [run_autoscale(p, s, **kw) for p in policies for s in scenarios]
 
 
+# ---------------------------------------------------------------------------
+# Multi-model replica set under shifting load (weighted_capacity rebalance)
+# ---------------------------------------------------------------------------
+
+
+def run_multi_model(*, capacity: int = 4, service_time_s: float = 0.02,
+                    warm_s: float = 1.0, shift_s: float = 5.0,
+                    stable_window_s: float = 1.0) -> list:
+    """TWO model groups behind ONE service name, inside a partition the
+    set fully occupies, governed by the ``weighted_capacity`` autoscaler.
+
+    Phase 1: light, even load on both models.  Phase 2: the load SHIFTS —
+    ``beta`` takes a heavy client burst while ``alpha`` goes idle.  With
+    no free headroom, holding beta's SLO requires a REBALANCE: the scaler
+    retires an alpha replica and admits a beta one on the freed claim.
+    Emits one JSON row per model group; validation
+    (``benchmarks/check_bench_json.py multimodel``) checks both models
+    were served from the one set, per-group claims sum to the ledger's
+    ``service_cores``, zero wrong-model routes (every TimedServicer tags
+    the group that served it), and the rebalance is observable in
+    ``stats()["per_group"]``.
+    """
+    interval = 0.05
+    slo_ms = 60.0
+    rh = Rhapsody(ResourceDescription(nodes=capacity, cores_per_node=1),
+                  policy=ExecutionPolicy(
+                      routing="least_loaded", autoscale=True,
+                      autoscaler="weighted_capacity",
+                      autoscale_min_replicas=1,
+                      autoscale_max_replicas=capacity,
+                      autoscale_low_depth=0.5,
+                      autoscale_interval_s=interval, autoscale_sustain=2,
+                      slo_p95_ms=slo_ms, slo_window_s=1.0,
+                      warmup=True),
+                  n_workers=2)
+    try:
+        rs = rh.add_service(ServiceDescription(
+            name="llm", replicas=capacity,
+            requirements=ResourceRequirements(ranks=1, cores_per_rank=1),
+            models=[
+                ModelGroup(name="alpha", weight=1.0,
+                           factory=lambda: TimedServicer(service_time_s,
+                                                         tag="alpha")),
+                ModelGroup(name="beta", weight=1.0,
+                           factory=lambda: TimedServicer(service_time_s,
+                                                         tag="beta")),
+            ]))
+        start = rs.group_counts()
+        stop = threading.Event()
+        served = {"alpha": [0, 0], "beta": [0, 0]}  # [ok, wrong_route]
+        lock = threading.Lock()
+
+        def client(model, alive: threading.Event):
+            while not stop.is_set() and alive.is_set():
+                try:
+                    r = rs.request({"prompt": [1] * 8, "model": model}
+                                   ).result(30.0)
+                except (RuntimeError, TimeoutError):
+                    break  # shutdown race at scenario end
+                with lock:
+                    served[model][0] += 1
+                    if r.get("served_by") != model:
+                        served[model][1] += 1
+
+        # phase 1: one light client per model
+        alpha_alive = threading.Event()
+        alpha_alive.set()
+        both_alive = threading.Event()
+        both_alive.set()
+        threads = [threading.Thread(target=client, args=("alpha",
+                                                         alpha_alive),
+                                    daemon=True),
+                   threading.Thread(target=client, args=("beta",
+                                                         both_alive),
+                                    daemon=True)]
+        for t in threads:
+            t.start()
+        time.sleep(warm_s)
+        # phase 2: load shifts — beta goes heavy, alpha goes idle
+        alpha_alive.clear()
+        heavy = [threading.Thread(target=client, args=("beta", both_alive),
+                                  daemon=True) for _ in range(6)]
+        for t in heavy:
+            t.start()
+        time.sleep(shift_s)
+        # measure while the shifted load is still applied
+        stats = rs.stats()
+        util = rh.utilization()["default"]
+        final = rs.group_counts()
+        p95 = {g: rs.latency_p95(window_s=stable_window_s, group=g)
+               for g in ("alpha", "beta")}
+        stop.set()
+        for t in threads + heavy:
+            t.join(timeout=30)
+        ledger_cores = util["service_cores"]
+        rows = []
+        for g in ("alpha", "beta"):
+            gs = stats["per_group"][g]
+            rows.append({
+                "scenario": "multi_model",
+                "group": g,
+                "weight": gs["weight"],
+                "hot": g == "beta",  # the group the load shifted ONTO
+                "capacity": capacity,
+                "requests": served[g][0],
+                "wrong_route": served[g][1],
+                "replicas_start": start[g],
+                "replicas_final": gs["replicas"],
+                "p95_ms": None if p95[g] is None else p95[g] * 1e3,
+                "slo_p95_ms": gs["slo_p95_ms"],
+                "service_cores": gs["cores"],
+                "ledger_service_cores": ledger_cores,
+                "ledger_models": util["service_models"],
+                "admission_denied": stats["admission_denied"],
+            })
+        return rows
+    finally:
+        rh.close()
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--autoscale", action="store_true",
                     help="run the autoscaling step-load scenarios instead "
                          "of the fixed-replica throughput sweep")
+    ap.add_argument("--multi-model", action="store_true",
+                    help="run the two-model shifting-load rebalance "
+                         "scenario (weighted_capacity autoscaler)")
     ap.add_argument("--policies", nargs="*",
                     default=["queue_depth", "latency_slo"])
     ap.add_argument("--scenarios", nargs="*",
                     default=["step", "saturate"])
     ap.add_argument("--capacity", type=int, default=4)
     ap.add_argument("--heavy-s", type=float, default=5.0)
+    ap.add_argument("--shift-s", type=float, default=5.0)
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
+    if args.multi_model:
+        rows = run_multi_model(capacity=args.capacity, shift_s=args.shift_s)
+        if args.json:
+            print(json.dumps(rows, indent=2))
+        else:
+            for r in rows:
+                print(f"[multi-model] {r['group']:>6s} "
+                      f"w={r['weight']} {'HOT ' if r['hot'] else 'idle'} "
+                      f"replicas {r['replicas_start']}->"
+                      f"{r['replicas_final']} "
+                      f"p95={r['p95_ms'] and round(r['p95_ms'], 1)}ms "
+                      f"(slo {r['slo_p95_ms']}ms) "
+                      f"reqs={r['requests']} wrong={r['wrong_route']} "
+                      f"cores={r['service_cores']}/"
+                      f"{r['ledger_service_cores']}")
+        raise SystemExit(0)
     if not args.autoscale:
         main(Reporter())
         raise SystemExit(0)

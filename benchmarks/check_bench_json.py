@@ -1,0 +1,154 @@
+"""Validate the JSON a CI bench smoke emitted: structural and invariant
+checks, NOT perf thresholds (throughput is too noisy for CI; invariants —
+conservation, admission control, rebalance direction, zero wrong-model
+routes — are not).
+
+Usage::
+
+    python benchmarks/check_bench_json.py affinity   /tmp/affinity.json
+    python benchmarks/check_bench_json.py autoscale  /tmp/autoscale.json
+    python benchmarks/check_bench_json.py multimodel /tmp/multimodel.json
+
+Each checker takes the decoded rows and raises ``CheckFailed`` with a
+pointed message on the first violated invariant — these used to live as
+heredoc assert blocks inside ``ci.yml``, where nothing could unit-test
+them; now ``tests/test_check_bench_json.py`` feeds them canned good/bad
+rows.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+class CheckFailed(AssertionError):
+    """A bench JSON violated an invariant the smoke is meant to gate on."""
+
+
+def _require(cond, msg, ctx=None):
+    if not cond:
+        raise CheckFailed(f"{msg}" + (f": {ctx!r}" if ctx is not None
+                                      else ""))
+
+
+def check_affinity(rows: list) -> None:
+    """bench_routing --affinity: all 3 policies x 3 streams present, every
+    row well-formed, sticky policies actually exercise the affinity path
+    on session-shaped streams."""
+    _require(bool(rows), "affinity sweep emitted no rows")
+    streams = {r.get("stream") for r in rows}
+    _require({"sessioned", "branching", "uniform"} <= streams,
+             "missing streams", streams)
+    policies = {r.get("policy") for r in rows}
+    _require({"least_loaded", "prefix_affinity", "radix_affinity"}
+             <= policies, "missing policies", policies)
+    for r in rows:
+        _require({"policy", "replicas", "requests", "req_per_s",
+                  "hit_rate"} <= set(r), "row missing keys", r)
+        _require(r["requests"] > 0 and r["req_per_s"] > 0,
+                 "empty or zero-throughput row", r)
+        # sanity (not perf): sticky policies must see hits on streams
+        # that repeat prefixes
+        if r["policy"] != "least_loaded" and \
+                r["stream"] in ("sessioned", "branching"):
+            _require(r["hit_rate"] > 0, "sticky policy never hit", r)
+
+
+def check_autoscale(rows: list) -> None:
+    """bench_inference_scaling --autoscale: both policies x both
+    scenarios, claims on the shared ledger match live replicas, step
+    converges undenied, saturate pins at capacity WITH denials, and the
+    SLO policy holds its target under the step load."""
+    cells = {(r.get("autoscaler"), r.get("scenario")): r for r in rows}
+    _require(set(cells) == {("queue_depth", "step"),
+                            ("queue_depth", "saturate"),
+                            ("latency_slo", "step"),
+                            ("latency_slo", "saturate")},
+             "wrong scenario matrix", sorted(cells))
+    for r in rows:
+        # services live on the shared ledger: utilization() must reflect
+        # every live replica's claim
+        _require(r["service_replicas"] == r["final_replicas"],
+                 "ledger replicas != live replicas", r)
+        _require(r["service_cores"] == r["final_replicas"],
+                 "ledger cores != live replicas", r)
+        _require(r["requests"] > 0, "scenario served nothing", r)
+    for (pol, sc), r in cells.items():
+        if sc == "step":  # demand fits: stable count, nothing denied
+            _require(r["converged"], "step scenario did not converge", r)
+            _require(r["admission_denied"] == 0,
+                     "step scenario saw denials", r)
+        else:  # demand exceeds the partition: capped + denied
+            _require(r["final_replicas"] == r["capacity"],
+                     "saturate did not pin at capacity", r)
+            _require(r["admission_denied"] > 0,
+                     "saturate scenario was never denied", r)
+    slo = cells[("latency_slo", "step")]
+    _require(slo["p95_ms"] is not None, "SLO step has no p95", slo)
+    _require(slo["p95_ms"] <= 1.5 * slo["slo_p95_ms"],
+             "SLO step p95 blew the target", slo)
+
+
+def check_multimodel(rows: list) -> None:
+    """bench_inference_scaling --multi-model: both models served from ONE
+    set, per-group claims sum to the ledger's claimed total, no request
+    was served by a wrong-model replica, and the shifting load produced a
+    rebalance — the SLO-violating (hot) group gained a replica while the
+    idle group shrank."""
+    _require(len(rows) == 2, "expected one row per model group", rows)
+    groups = {r.get("group") for r in rows}
+    _require(len(groups) == 2, "rows must cover two distinct groups",
+             groups)
+    ledger = {r["ledger_service_cores"] for r in rows}
+    _require(len(ledger) == 1, "rows disagree on the ledger total", rows)
+    _require(sum(r["service_cores"] for r in rows) == ledger.pop(),
+             "per-group cores do not sum to the ledger's claimed total",
+             rows)
+    hot = [r for r in rows if r.get("hot")]
+    idle = [r for r in rows if not r.get("hot")]
+    _require(len(hot) == 1 and len(idle) == 1,
+             "exactly one group must be the shifted-load target", rows)
+    for r in rows:
+        _require(r["requests"] > 0,
+                 "a model group served nothing — not multi-model", r)
+        _require(r["wrong_route"] == 0,
+                 "request served by a wrong-model replica", r)
+        _require(r["replicas_final"] >= 1,
+                 "a model group lost its last replica", r)
+    _require(hot[0]["replicas_final"] > hot[0]["replicas_start"],
+             "SLO-violating group did not gain a replica", hot[0])
+    _require(idle[0]["replicas_final"] < idle[0]["replicas_start"],
+             "idle group did not shrink", idle[0])
+    # the rebalance was capacity-neutral: nothing scaled past the
+    # partition
+    _require(sum(r["replicas_final"] for r in rows) <= rows[0]["capacity"],
+             "groups exceed the partition capacity", rows)
+
+
+CHECKS = {
+    "affinity": check_affinity,
+    "autoscale": check_autoscale,
+    "multimodel": check_multimodel,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("kind", choices=sorted(CHECKS))
+    ap.add_argument("path", help="bench smoke JSON output")
+    args = ap.parse_args(argv)
+    with open(args.path) as f:
+        rows = json.load(f)
+    try:
+        CHECKS[args.kind](rows)
+    except CheckFailed as e:
+        print(f"[check-bench-json] {args.kind}: FAIL — {e}",
+              file=sys.stderr)
+        return 1
+    print(f"[check-bench-json] {args.kind}: ok ({len(rows)} rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

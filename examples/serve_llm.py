@@ -32,7 +32,16 @@ after ``restart_max_attempts`` consecutive crashes so a broken replica
 degrades the set instead of hot-looping; in-flight requests replay on the
 restarted replica.
 
+Multi-model serving (``--multi-model``): ONE replica set serves a "chat"
+model and a smaller "draft" model — each replica is tagged with its model
+group, each request addresses a model by payload tag
+(``{"model": "draft", ...}``), and the router only considers that group's
+replicas, so a request can never land on a wrong-model engine.  Per-group
+request counts, latency, and ledger claims land in
+``ReplicaSet.stats()["per_group"]``.
+
 Run: PYTHONPATH=src python examples/serve_llm.py [--requests 24] [--replicas 2]
+     PYTHONPATH=src python examples/serve_llm.py --multi-model --replicas 3
 """
 import argparse
 import time
@@ -43,7 +52,7 @@ from repro.configs import get_config
 from repro.core import (ExecutionPolicy, ResourceDescription, Rhapsody,
                         ServiceDescription, TaskDescription, TaskKind)
 from repro.core.router import ROUTERS
-from repro.serving.client import llm_service_factory
+from repro.serving.client import llm_model_group, llm_service_factory
 
 
 def main():
@@ -52,21 +61,41 @@ def main():
     ap.add_argument("--replicas", "--services", dest="replicas", type=int,
                     default=2)
     ap.add_argument("--routing", default="balanced", choices=tuple(ROUTERS))
+    ap.add_argument("--multi-model", action="store_true",
+                    help="serve a chat + draft model pair from ONE "
+                         "replica set (weights 2:1), requests addressed "
+                         "per model")
     args = ap.parse_args()
 
     cfg = get_config("rhapsody-demo")
-    rh = Rhapsody(ResourceDescription(nodes=args.replicas,
+    rh = Rhapsody(ResourceDescription(nodes=max(2, args.replicas),
                                       cores_per_node=16),
                   policy=ExecutionPolicy(routing=args.routing),
                   n_workers=2)
+    model_names = []
     try:
-        replica_set = rh.add_service(ServiceDescription(
-            name="llm", replicas=args.replicas,
-            factory=llm_service_factory(
-                cfg, max_num_seqs=4, max_len=256,
-                prefill_buckets=(32, 64, 128))))
-        print(f"launched llm service x{args.replicas} replicas:",
-              rh.services.list())
+        engine_kw = dict(max_num_seqs=4, max_len=256,
+                         prefill_buckets=(32, 64, 128))
+        if args.multi_model:
+            # two model configs, one service: the draft model is the same
+            # family scaled down (a speculative-decoding-style sidecar)
+            draft_cfg = cfg.scaled(n_layers=2, d_model=64, n_heads=4,
+                                   n_kv_heads=2, head_dim=16, d_ff=128)
+            model_names = ["chat", "draft"]
+            replica_set = rh.add_service(ServiceDescription(
+                name="llm", replicas=max(2, args.replicas),
+                models=[llm_model_group("chat", cfg, weight=2.0,
+                                        **engine_kw),
+                        llm_model_group("draft", draft_cfg, weight=1.0,
+                                        **engine_kw)]))
+            print(f"launched multi-model llm service "
+                  f"{replica_set.group_counts()}:", rh.services.list())
+        else:
+            replica_set = rh.add_service(ServiceDescription(
+                name="llm", replicas=args.replicas,
+                factory=llm_service_factory(cfg, **engine_kw)))
+            print(f"launched llm service x{args.replicas} replicas:",
+                  rh.services.list())
 
         # heterogeneous prompt lengths -> token-aware routing matters
         rng = np.random.RandomState(0)
@@ -74,10 +103,17 @@ def main():
                        120).astype(int)
         prompts = [list(rng.randint(0, cfg.vocab, size=int(L)))
                    for L in lens]
+
+        def payload(i, p):
+            out = {"prompt": p, "max_new_tokens": 16}
+            if model_names:
+                out["model"] = model_names[i % len(model_names)]
+            return out
+
         descs = [TaskDescription(kind=TaskKind.INFERENCE, service="llm",
-                                 payload={"prompt": p, "max_new_tokens": 16},
+                                 payload=payload(i, p),
                                  task_type="inference")
-                 for p in prompts]
+                 for i, p in enumerate(prompts)]
         t0 = time.perf_counter()
         uids = rh.submit(descs)
         if not rh.wait(uids, timeout=600):
@@ -92,6 +128,12 @@ def main():
         print(f"mean TTFT {np.mean(ttfts) * 1e3:.0f} ms; "
               f"p95 latency {np.percentile([r['latency_s'] for r in results], 95):.2f}s; "
               f"per-replica requests {per}")
+        if model_names:
+            per_group = replica_set.stats()["per_group"]
+            print("per-model groups:",
+                  {g: {"replicas": s["replicas"],
+                       "requests": s["requests"], "cores": s["cores"]}
+                   for g, s in per_group.items()})
         if args.routing == "prefix_affinity":
             stats = replica_set.stats()
             hits, misses = stats["prefix_hits"], stats["prefix_misses"]

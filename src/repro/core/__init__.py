@@ -1,21 +1,23 @@
 """RHAPSODY middleware core: tasks, services, resources, policies, coupling."""
 from .autoscale import (AUTOSCALERS, Autoscaler, LatencySLOAutoscaler,
                         LatencyWindow, QueueDepthAutoscaler,
-                        autoscaler_from_policy)
+                        WeightedCapacityAutoscaler, autoscaler_from_policy)
 from .middleware import Rhapsody
 from .policy import ExecutionPolicy
 from .resources import (Allocation, Claim, Placement, ResourceDescription,
                         partition)
-from .service import ReplicaSet, ServiceDescription, ServiceEndpoint
+from .service import (ModelGroup, ReplicaSet, ServiceDescription,
+                      ServiceEndpoint, weighted_split)
 from .task import (ResourceRequirements, Task, TaskDescription, TaskKind,
                    TaskState)
 
 __all__ = [
     "Rhapsody", "ExecutionPolicy", "ResourceDescription", "Allocation",
     "Claim", "Placement", "partition", "ReplicaSet", "ServiceDescription",
-    "ServiceEndpoint",
+    "ServiceEndpoint", "ModelGroup", "weighted_split",
     "AUTOSCALERS", "Autoscaler", "QueueDepthAutoscaler",
-    "LatencySLOAutoscaler", "LatencyWindow", "autoscaler_from_policy",
+    "LatencySLOAutoscaler", "WeightedCapacityAutoscaler", "LatencyWindow",
+    "autoscaler_from_policy",
     "TaskDescription", "TaskKind", "TaskState", "Task",
     "ResourceRequirements",
 ]

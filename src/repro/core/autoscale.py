@@ -8,7 +8,7 @@ set's partition ``Allocation`` can still physically claim
 (``Allocation.fits``), so "scale up" can be denied (event + stat, never an
 exception) but can never overbook the ledger shared with tasks.
 
-Two policies ship:
+Three policies ship:
 
   * ``QueueDepthAutoscaler`` — the original behavior: grow when mean
     outstanding requests per live replica stays above
@@ -25,8 +25,15 @@ Two policies ship:
     Only samples from requests *started after the last scaling action*
     count, so latency accumulated under the old replica count cannot
     trigger a second, oscillating correction.
+  * ``WeightedCapacityAutoscaler`` — multi-model replica sets: runs the
+    SLO logic per model group (each against its own ``slo_p95_ms``),
+    anchors each group's share of the partition to ``ModelGroup.weight``,
+    and when a violating group cannot grow (set at max, or no ledger
+    headroom) *rebalances* — retires a replica from the most
+    over-entitled non-violating group to admit one for the violator,
+    capacity-neutral under the single shared ``Allocation``.
 
-Both are bounded by ``[autoscale_min_replicas, autoscale_max_replicas]``
+All are bounded by ``[autoscale_min_replicas, autoscale_max_replicas]``
 and, through the manager, by ``Allocation.free_capacity()``.
 """
 from __future__ import annotations
@@ -227,9 +234,153 @@ class LatencySLOAutoscaler(Autoscaler):
         return 0
 
 
+class WeightedCapacityAutoscaler(LatencySLOAutoscaler):
+    """Per-model-group SLO autoscaling with weighted entitlements and
+    capacity-neutral rebalancing (multi-model replica sets).
+
+    Each model group runs the ``LatencySLOAutoscaler`` control logic
+    against ITS OWN latency windows and SLO target
+    (``ModelGroup.slo_p95_ms``, falling back to ``policy.slo_p95_ms``),
+    with per-group sustain counters.  A group's share of the partition is
+    anchored to its ``weight``: when a violating group wants a replica but
+    the set is at ``autoscale_max_replicas`` or the partition has no free
+    headroom for its shape, the scaler *rebalances* — it retires one
+    replica from a donor group (not itself violating, holding more than
+    one replica, preferring the group furthest ABOVE its weighted share,
+    then the coldest) so the violating group can be admitted on the freed
+    capacity.  Every group always keeps >= 1 replica (a model with no
+    replica cannot serve), and plain grows/shrinks remain bounded by
+    ``autoscale_max_replicas`` (total across groups) and the ledger.
+
+    The manager consumes this policy through ``desired_groups(name, rs)``
+    — one dict of per-group targets per tick, applied shrink-first so a
+    rebalance inside a full partition never needs transient headroom.
+    Single-group sets degenerate to plain per-set SLO scaling.
+    """
+
+    def prune(self, live_names):
+        # counters are keyed (service, group): prune on the service half
+        for d in (self._hot, self._cold, self._last_action):
+            for k in [k for k in d
+                      if (k[0] if isinstance(k, tuple) else k)
+                      not in live_names]:
+                del d[k]
+
+    def note_scaled(self, name: str):
+        # one scaling ACTION restarts every group's hysteresis for the
+        # service: the applied targets changed the whole set's signal
+        for d in (self._hot, self._cold):
+            for k in list(d):
+                if (k[0] if isinstance(k, tuple) else k) == name:
+                    d[k] = 0
+        self._last_action[name] = time.perf_counter()
+
+    def _group_direction(self, name: str, rs, group: str) -> int:
+        """The LatencySLOAutoscaler direction logic, per model group."""
+        pol = self.policy
+        slo_s = rs.group_slo_ms(group) / 1e3
+        window = getattr(pol, "slo_window_s", 5.0)
+        down = getattr(pol, "slo_down_factor", 0.5)
+        p95 = rs.latency_p95(window_s=window,
+                             started_after=self._last_action.get(name),
+                             group=group)
+        if p95 is None:
+            if rs.latency_p95(window_s=window, group=group) is None:
+                # genuinely idle group with shallow queues may cool down
+                return (-1 if rs.mean_depth(group=group)
+                        < pol.autoscale_low_depth else 0)
+            return 0  # only stale (pre-action) samples: wait, don't judge
+        if p95 > slo_s:
+            return 1
+        if p95 < down * slo_s and \
+                rs.mean_depth(group=group) < pol.autoscale_low_depth:
+            return -1
+        return 0
+
+    def _pick_donor(self, grower: str, targets: dict, dirs: dict,
+                    weights: dict, growers) -> Optional[str]:
+        """Group to retire a replica from so ``grower`` can be admitted:
+        not itself wanting to grow, above one replica, preferring the
+        largest surplus over its weighted share and then the coldest
+        direction.  None when nobody can donate."""
+        total = sum(targets.values())
+        total_w = sum(weights.values()) or float(len(weights))
+        best = None
+        for g, n in targets.items():
+            if g == grower or g in growers or n <= 1:
+                continue
+            if dirs.get(g, 0) > 0:
+                continue  # donating from a violating group helps nobody
+            surplus = n - total * weights[g] / total_w
+            key = (surplus, -dirs.get(g, 0))
+            if best is None or key > best[0]:
+                best = (key, g)
+        return best[1] if best else None
+
+    def desired_groups(self, name: str, rs) -> Optional[dict]:
+        """Per-group replica targets for one tick, or None for no change.
+        ``rs`` is a ``ReplicaSet`` (or anything exposing the group surface:
+        ``group_counts``/``group_weight``/``group_slo_ms``/
+        ``latency_p95``/``mean_depth``/``capacity_headroom``)."""
+        pol = self.policy
+        counts = rs.group_counts()
+        if not counts:
+            return None
+        dirs = {}
+        for g in counts:
+            d = self._group_direction(name, rs, g)
+            key = (name, g)
+            if d > 0:
+                self._hot[key] = self._hot.get(key, 0) + 1
+                self._cold[key] = 0
+            elif d < 0:
+                self._cold[key] = self._cold.get(key, 0) + 1
+                self._hot[key] = 0
+            else:
+                self._hot[key] = 0
+                self._cold[key] = 0
+            dirs[g] = d
+        growers = [g for g in counts if dirs[g] > 0
+                   and self._hot.get((name, g), 0) >= self.sustain_up]
+        shrinkers = [g for g in counts if dirs[g] < 0
+                     and self._cold.get((name, g), 0) >= self.sustain_down]
+        targets = dict(counts)
+        weights = {g: max(0.0, rs.group_weight(g)) for g in counts}
+        for g in growers:
+            donor = None
+            headroom = rs.capacity_headroom(group=g)
+            at_max = sum(targets.values()) >= pol.autoscale_max_replicas
+            if at_max or (headroom is not None and headroom < 1):
+                donor = self._pick_donor(g, targets, dirs, weights, growers)
+                if donor is None:
+                    # nothing to retire and nothing free: a sustained
+                    # denial episode, visible on the set's stats
+                    if hasattr(rs, "_note_admission_denied"):
+                        rs._note_admission_denied("rebalance",
+                                                  once_per_episode=True)
+                    continue
+                targets[donor] -= 1
+                self._cold[(name, donor)] = 0
+            targets[g] += 1
+            self._hot[(name, g)] = 0
+        min_total = max(1, getattr(pol, "autoscale_min_replicas", 1))
+        for g in shrinkers:
+            if targets[g] != counts[g]:
+                continue  # already donated (or grew) this tick
+            if targets[g] <= 1:
+                continue  # every model keeps at least one replica
+            if sum(targets.values()) <= min_total:
+                continue  # the SET total honors autoscale_min_replicas,
+                #           same floor the per-set policies enforce
+            targets[g] -= 1
+            self._cold[(name, g)] = 0
+        return targets if targets != counts else None
+
+
 AUTOSCALERS = {
     "queue_depth": QueueDepthAutoscaler,
     "latency_slo": LatencySLOAutoscaler,
+    "weighted_capacity": WeightedCapacityAutoscaler,
 }
 
 

@@ -20,7 +20,7 @@ from typing import Any, Iterable, Optional, Sequence, Union
 from .events import EventLog
 from .policy import ExecutionPolicy
 from .resources import Allocation, ResourceDescription, partition
-from .router import default_cost, router_from_policy
+from .router import default_cost, request_model, router_from_policy
 from .service import ServiceDescription, ServiceManager
 from .task import Task, TaskDescription, TaskKind, TaskState
 
@@ -156,8 +156,11 @@ class Rhapsody:
     # ------------------------------------------------------------------
     def utilization(self) -> dict:
         """Per-partition utilization of the SHARED ledger: the core/gpu
-        fractions cover tasks and service replicas alike (§III-C), and the
-        ``service_*`` keys break out what live replica claims hold."""
+        fractions cover tasks and service replicas alike (§III-C), the
+        ``service_*`` keys break out what live replica claims hold, and
+        ``service_models`` slices those claims per model group — so a
+        multi-model set's per-model footprint is first-class on the one
+        ledger, next to the tasks it coexists with."""
         claimed = self.services.claimed()
         out = {}
         for name, alloc in self.allocations.items():
@@ -166,6 +169,7 @@ class Rhapsody:
             u["service_cores"] = svc.get("cores", 0)
             u["service_gpus"] = svc.get("gpus", 0)
             u["service_replicas"] = svc.get("replicas", 0)
+            u["service_models"] = svc.get("models", {})
             u["free"] = alloc.free_capacity()
             out[name] = u
         return out
@@ -218,6 +222,17 @@ class Rhapsody:
             while self.ready and window > 0:
                 task = self.ready.popleft()
                 window -= 1
+                if task.desc.kind == TaskKind.INFERENCE:
+                    # zero-footprint: the request's compute is charged to
+                    # the SERVICE replica's claim on the same ledger —
+                    # booking a core here would throttle the very
+                    # partition the task is merely waiting on (a full
+                    # partition of replicas used to starve its own
+                    # clients)
+                    task.state = TaskState.SCHEDULED
+                    self._start_task(task)
+                    n += 1
+                    continue
                 req = task.desc.requirements
                 alloc = self._allocation_for(task)
                 placement = alloc.try_map(req.ranks, req.cores_per_rank,
@@ -254,10 +269,14 @@ class Rhapsody:
             # replica through the policy router (token-cost + queue-depth
             # aware), not a fixed endpoint; under prefix_affinity routing
             # the payload's prompt-prefix signature makes same-session
-            # requests stick to their cache-warm replica
+            # requests stick to their cache-warm replica.  A payload
+            # carrying {"model": ...} is routed only among that model
+            # group's replicas (multi-model services); an unknown tag
+            # fails the task like an unknown service would.
             endpoint = replica_set.route(
                 default_cost(desc.payload), self.router,
-                affinity_key=self.router.signature(desc.payload))
+                affinity_key=self.router.signature(desc.payload),
+                model=request_model(desc.payload))
         except KeyError as e:
             self._complete(task, None, e)
             return

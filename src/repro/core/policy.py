@@ -40,7 +40,10 @@ class ExecutionPolicy:
     replicas: int = 1  # default replica count when a ServiceDescription
     #                    leaves ``replicas`` unset
     autoscale: bool = False  # grow/shrink replica sets (see `autoscaler`)
-    autoscaler: str = "queue_depth"  # | "latency_slo" (repro.core.autoscale)
+    autoscaler: str = "queue_depth"  # | "latency_slo" |
+    #                  "weighted_capacity" (repro.core.autoscale; the last
+    #                  one drives multi-model sets: per-group SLO control
+    #                  with weight-anchored, capacity-neutral rebalancing)
     autoscale_min_replicas: int = 1
     autoscale_max_replicas: int = 4
     autoscale_high_depth: float = 4.0  # mean outstanding reqs/replica to grow

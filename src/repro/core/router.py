@@ -67,6 +67,18 @@ def default_cost(request) -> float:
     return 1.0
 
 
+def request_model(request) -> Optional[str]:
+    """Model tag of one request: multi-model services route a payload only
+    among the replicas of its model group.  Dict payloads are tagged by
+    ``payload["model"]``; anything else is untagged (None) and routes to
+    the service's default group."""
+    if isinstance(request, dict):
+        model = request.get("model")
+        if model is not None:
+            return str(model)
+    return None
+
+
 def request_signature(request, prefix_len: int = 32) -> Optional[int]:
     """Affinity key for one request: a stable hash of its bounded prompt
     prefix.  Requests sharing the first ``prefix_len`` prompt tokens (or

@@ -28,6 +28,20 @@ replica that exhausts its restart budget is declared dead, counted in
 ``stats()["dead_replicas"]``, and after ``dead_replica_grace_s`` folded
 out of the set with its stats merged into the aggregate.
 
+Multi-model services (§III, Fig 5: heterogeneous AI workloads in ONE job
+allocation): a ``ServiceDescription`` may declare several ``ModelGroup``s
+— one replica set then serves several model configs.  Each replica is
+tagged with its group, a request's ``model`` tag (payload ``{"model":
+...}``) narrows routing to that group's replicas BEFORE any
+affinity/least-loaded logic runs (sticky state is keyed per group, so
+per-model affinity falls out), ``stats()["per_group"]`` breaks out
+requests/hits/latency/claims per model, and ``scale_to(n, group=)`` /
+``scale_groups(targets)`` scale one group at a time — ``scale_groups``
+applies shrinks first, so the ``weighted_capacity`` autoscaler's
+rebalances (retire a replica from an over-provisioned group to admit one
+for an SLO-violating group) stay capacity-neutral inside a full
+partition.
+
 Resource claims (§III-C: one ledger for tasks AND services): when the
 manager is given the middleware's partition ``Allocation``s, every replica
 spawn first books ``ServiceDescription.requirements`` as a concrete
@@ -54,20 +68,77 @@ import time
 from typing import Any, Callable, Optional
 
 from .autoscale import LatencyWindow, autoscaler_from_policy, percentile
-from .router import Router, default_cost, router_from_policy
+from .router import (Router, default_cost, request_model,
+                     router_from_policy)
 from .task import ResourceRequirements
+
+
+@dataclasses.dataclass
+class ModelGroup:
+    """One model config served inside a multi-model replica set.
+
+    A ``ServiceDescription`` may declare several of these (``models=[...]``)
+    behind ONE service name: each replica is tagged with the group it hosts,
+    requests carry a ``model`` tag (payload ``{"model": ...}`` or
+    ``request(..., model=...)``) and are routed only among that group's
+    replicas, and capacity is shared — every group's replicas claim from the
+    same partition ledger, with ``weight`` naming the group's entitlement to
+    it (initial replica split, and who donates first when the
+    ``weighted_capacity`` autoscaler rebalances).
+    """
+
+    name: str
+    factory: Optional[Callable[[], Any]] = None  # None -> desc.factory
+    weight: float = 1.0  # share of the set's capacity this group is
+    #                      entitled to, relative to its siblings
+    replicas: Optional[int] = None  # initial count; None -> weighted share
+    #                                 of ServiceDescription.replicas
+    slo_p95_ms: Optional[float] = None  # per-group SLO target; None ->
+    #                                     ExecutionPolicy.slo_p95_ms
+    requirements: Optional[ResourceRequirements] = None  # per-replica
+    #                                 claim shape; None -> desc.requirements
 
 
 @dataclasses.dataclass
 class ServiceDescription:
     name: str
-    factory: Callable[[], Any]  # builds one servicer (called per replica)
+    factory: Optional[Callable[[], Any]] = None  # builds one servicer
+    #   (called per replica); optional when every ModelGroup in ``models``
+    #   brings its own factory
     requirements: ResourceRequirements = dataclasses.field(
         default_factory=ResourceRequirements)  # claimed PER REPLICA
     ready_timeout: float = 30.0
     partition: Optional[str] = None
     replicas: Optional[int] = None  # None -> ExecutionPolicy.replicas
     warmup: Optional[bool] = None  # None -> ExecutionPolicy.warmup
+    models: Optional[list] = None  # [ModelGroup, ...]: serve several model
+    #                                configs from ONE replica set (None ->
+    #                                a single implicit "default" group)
+
+
+def weighted_split(total: int, weights: dict) -> dict:
+    """Split ``total`` replicas across groups proportionally to weight
+    (largest-remainder rounding), guaranteeing every group at least 1 —
+    a model with no replica cannot serve at all."""
+    names = list(weights)
+    w = {g: max(0.0, float(weights[g])) for g in names}
+    total_w = sum(w.values())
+    if total_w <= 0:
+        w = {g: 1.0 for g in names}
+        total_w = float(len(names))
+    out = {g: 1 for g in names}
+    rem = total - len(names)
+    if rem <= 0:
+        return out
+    exact = {g: rem * w[g] / total_w for g in names}
+    for g in names:
+        out[g] += int(exact[g])
+    left = rem - sum(int(exact[g]) for g in names)
+    # leftover replicas go to the largest fractional remainders, ties in
+    # declaration order (deterministic across runs)
+    for g in sorted(names, key=lambda g: -(exact[g] - int(exact[g])))[:left]:
+        out[g] += 1
+    return out
 
 
 _STAT_KEYS = ("requests", "completed", "errors", "cost",
@@ -104,9 +175,12 @@ class _Future:
 class ServiceEndpoint:
     """Client-visible handle for ONE replica; requests are async futures."""
 
-    def __init__(self, name: str, replica_idx: int = 0):
+    def __init__(self, name: str, replica_idx: int = 0,
+                 group: str = "default"):
         self.name = name
         self.replica_idx = replica_idx
+        self.group = group  # model group this replica hosts (multi-model
+        #                     sets route a request only within its group)
         self.requests: "queue.Queue" = queue.Queue()
         self.ready = threading.Event()
         self.stats = {"requests": 0, "completed": 0, "errors": 0,
@@ -158,11 +232,14 @@ class ServiceInstance(threading.Thread):
 
     def __init__(self, desc: ServiceDescription, endpoint: ServiceEndpoint,
                  on_exit: Optional[Callable] = None, warmup: bool = False,
-                 residency_listener: Optional[Callable] = None):
+                 residency_listener: Optional[Callable] = None,
+                 factory: Optional[Callable] = None):
         super().__init__(
             name=f"service-{desc.name}[{endpoint.replica_idx}]", daemon=True)
         self.desc = desc
         self.endpoint = endpoint
+        self.factory = factory or desc.factory  # a multi-model set passes
+        #                                         the replica's GROUP factory
         self.alive = True
         self.last_beat = time.perf_counter()
         self.ready_at: Optional[float] = None  # when this instance came up
@@ -176,7 +253,7 @@ class ServiceInstance(threading.Thread):
 
     def run(self):
         try:
-            self.servicer = self.desc.factory()
+            self.servicer = self.factory()
             if self._residency_listener is not None and \
                     hasattr(self.servicer, "set_residency_listener"):
                 # gossip push channel: the engine notifies on KV eviction
@@ -335,6 +412,29 @@ class ReplicaSet:
         self.allocation = manager.allocation_for(desc)
         self._warmup = (desc.warmup if desc.warmup is not None
                         else bool(getattr(manager.policy, "warmup", False)))
+        # model groups served by this ONE set (multi-model services): a
+        # plain single-model description gets one implicit "default" group,
+        # so every internal path is uniformly per-group
+        self.model_groups: dict = {}
+        if desc.models:
+            for mg in desc.models:
+                if mg.name in self.model_groups:
+                    raise ValueError(
+                        f"service {desc.name}: duplicate model group "
+                        f"{mg.name!r}")
+                if (mg.factory or desc.factory) is None:
+                    raise ValueError(
+                        f"service {desc.name}: model group {mg.name!r} "
+                        f"has no factory (and no service-level default)")
+                self.model_groups[mg.name] = mg
+        elif desc.factory is None:
+            raise ValueError(f"service {desc.name}: factory is required "
+                             f"when no model groups are declared")
+        else:
+            self.model_groups["default"] = ModelGroup(
+                name="default", factory=desc.factory,
+                replicas=desc.replicas, requirements=desc.requirements)
+        self._default_group = next(iter(self.model_groups))
         self.endpoints: list[ServiceEndpoint] = []
         self.instances: list[ServiceInstance] = []
         # endpoints retired by scale-down, kept live for stats() so
@@ -343,6 +443,8 @@ class ReplicaSet:
         # drains have long finished (autoscale oscillation must not leak)
         self._retired: list[ServiceEndpoint] = []
         self._retired_agg = {k: 0 for k in _STAT_KEYS}
+        self._retired_agg_groups: dict = {}  # group -> same shape, so the
+        #                                      per_group stats survive folds
         self._scaling = False  # an async autoscale grow/shrink in flight
         self._scale_lock = threading.Lock()  # serializes scale_to callers
         self._gen = 0  # bumped on every membership change so recurring
@@ -382,15 +484,92 @@ class ReplicaSet:
         with self._lock:
             return sum(1 for ep in self.endpoints if not ep.retired)
 
-    def request(self, payload, **meta) -> _Future:
+    # -- model groups -------------------------------------------------------
+    @property
+    def multi_model(self) -> bool:
+        return bool(self.desc.models)
+
+    def group_names(self) -> list:
+        return list(self.model_groups)
+
+    def group_weight(self, group: str) -> float:
+        return max(0.0, float(self.model_groups[group].weight))
+
+    def group_slo_ms(self, group: str) -> float:
+        """The group's p95 SLO target: its own, else the policy default."""
+        slo = self.model_groups[group].slo_p95_ms
+        if slo is None:
+            slo = getattr(self.manager.policy, "slo_p95_ms", 250.0)
+        return float(slo)
+
+    def _group_requirements(self, group: str) -> ResourceRequirements:
+        return self.model_groups[group].requirements or self.desc.requirements
+
+    def _group_factory(self, group: str) -> Callable:
+        return self.model_groups[group].factory or self.desc.factory
+
+    def _resolve_group(self, model: Optional[str]) -> str:
+        """Model tag -> group name; untagged requests go to the FIRST
+        declared group, unknown tags on a multi-model set are a routing
+        error.  Single-model sets IGNORE the tag: a payload carrying
+        {"model": "llama-7b"} routed fine before groups existed (the key
+        passed through to the servicer), and must keep doing so."""
+        if model is None or not self.multi_model:
+            return self._default_group
+        if model not in self.model_groups:
+            raise KeyError(
+                f"service {self.name} serves no model {model!r} "
+                f"(has {sorted(self.model_groups)})")
+        return model
+
+    def n_live_group(self, group: str) -> int:
+        with self._lock:
+            return sum(1 for ep in self.endpoints
+                       if ep.group == group and not ep.retired)
+
+    def group_counts(self) -> dict:
+        """Live replica count per model group (the rebalancer's view)."""
+        with self._lock:
+            out = {g: 0 for g in self.model_groups}
+            for ep in self.endpoints:
+                if not ep.retired:
+                    out[ep.group] = out.get(ep.group, 0) + 1
+        return out
+
+    def initial_group_counts(self) -> dict:
+        """Replicas to launch per group: explicit ``ModelGroup.replicas``
+        first, the rest split the remaining ``ServiceDescription.replicas``
+        (or the policy default) proportionally to weight, >= 1 each."""
+        pol_default = max(1, getattr(self.manager.policy, "replicas", 1) or 1)
+        total = max(1, self.desc.replicas or pol_default)
+        counts = {g: max(1, mg.replicas)
+                  for g, mg in self.model_groups.items()
+                  if mg.replicas is not None}
+        rest = [g for g in self.model_groups if g not in counts]
+        if rest:
+            budget = max(len(rest), total - sum(counts.values()))
+            counts.update(weighted_split(
+                budget, {g: self.model_groups[g].weight for g in rest}))
+        return {g: counts[g] for g in self.model_groups}  # declaration order
+
+    def request(self, payload, model: Optional[str] = None,
+                **meta) -> _Future:
         router = self.manager.router
+        if model is None:
+            model = request_model(payload)
         ep = self.route(default_cost(payload), router,
-                        affinity_key=router.signature(payload))
+                        affinity_key=router.signature(payload), model=model)
+        if model is not None:
+            # private meta (filtered from servicer kwargs) so a reroute
+            # after a retire re-routes within the SAME model group even
+            # when the payload itself carries no tag
+            meta.setdefault("_model", model)
         return ep.request(payload, **meta)
 
     def route(self, cost: float, router: Router,
               affinity_key: Optional[int] = None,
-              account_affinity: bool = True) -> ServiceEndpoint:
+              account_affinity: bool = True,
+              model: Optional[str] = None) -> ServiceEndpoint:
         """Pick the replica endpoint for one request of estimated cost.
 
         ``affinity_key`` (``router.signature(payload)``) makes sticky
@@ -400,11 +579,20 @@ class ReplicaSet:
         already counted this request's outcome, counting the second hop too
         would break hits+misses == keyed requests).
 
+        ``model`` (see ``request_model``) narrows the candidates to ONE
+        model group's replicas before any affinity/least-loaded logic runs
+        — multi-model sets never route a request to a wrong-model replica.
+        Untagged requests go to the first declared group; unknown tags
+        raise ``KeyError`` (a routing error, not a silent misroute).
+
         Only READY replicas are candidates: a freshly spawned replica is
         in ``endpoints`` before its factory finishes, and routing to it
         would queue work nothing admits yet."""
+        gsel = self._resolve_group(model)
         with self._lock:
-            pairs = list(zip(self.endpoints, self.instances))
+            pairs = [(ep, inst) for ep, inst
+                     in zip(self.endpoints, self.instances)
+                     if ep.group == gsel]
             eps = [ep for ep, _ in pairs
                    if ep.ready.is_set() and not ep.retired]
             self._route_count += 1  # under the lock: lost increments
@@ -424,8 +612,11 @@ class ReplicaSet:
             if successor is not None:  # name was re-launched; follow it
                 return successor.route(cost, router,
                                        affinity_key=affinity_key,
-                                       account_affinity=account_affinity)
-            raise KeyError(f"service {self.name} has no live replicas")
+                                       account_affinity=account_affinity,
+                                       model=model)
+            raise KeyError(f"service {self.name} has no live replicas"
+                           + (f" for model {gsel!r}" if self.multi_model
+                              else ""))
         # periodically gossip replica residency summaries to the router so
         # prefix-aware spill sees fresh caches (stats() also syncs); the
         # pull runs on a background thread — snapshotting every engine's
@@ -442,14 +633,17 @@ class ReplicaSet:
         # the stable (name, uid) affinity group with stable replica_idx
         # member identities, so session assignments survive membership
         # churn and only sessions homed on a departed replica re-home.
+        # Both keys also carry the MODEL GROUP, so each model balances and
+        # sticks independently — per-group affinity falls out of the keying
+        # (two models sharing a token prefix never share a session home).
         members = tuple(ep.replica_idx for ep in eps)
-        group = (self.name, self._uid, self._gen) + members
+        group = (self.name, self._uid, self._gen, gsel) + members
         info: dict = {}
         idx = router.pick(cost, n_instances=len(eps), group=group,
                           queue_depths=[ep.depth() for ep in eps],
                           affinity_key=affinity_key, info=info,
                           members=members,
-                          affinity_group=(self.name, self._uid))
+                          affinity_group=(self.name, self._uid, gsel))
         eps[idx].bump("cost", cost)
         if account_affinity:
             affinity = info.get("affinity")
@@ -473,14 +667,22 @@ class ReplicaSet:
         with self._lock:
             eps = list(self.endpoints)
             per = [dict(ep.stats) for ep in eps]
-            retired = [dict(ep.stats) for ep in self._retired]
+            retired_pairs = [(ep.group, dict(ep.stats))
+                             for ep in self._retired]
             folded = dict(self._retired_agg)
+            folded_groups = {g: dict(v)
+                             for g, v in self._retired_agg_groups.items()}
             dead = self._dead_count
             denied = self._admission_denied
+        retired = [p for _, p in retired_pairs]
         all_samples: list = []
+        ep_samples: dict = {}  # replica_idx -> latency snapshot (reused by
+        #                        the per-group aggregation below)
         for ep, p in zip(eps, per):
             samples = ep.latency.samples()
+            ep_samples[ep.replica_idx] = samples
             p95 = percentile(samples, 0.95)
+            p["group"] = ep.group
             p["latency_p95_ms"] = None if p95 is None else p95 * 1e3
             p["latency_histogram"] = ep.latency.histogram(samples=samples)
             if not ep.retired:
@@ -499,36 +701,72 @@ class ReplicaSet:
         p95 = percentile(all_samples, 0.95)
         agg["latency_p95_ms"] = None if p95 is None else p95 * 1e3
         agg["per_replica"] = per
+        # per-model-group view: endpoints, request/hit accounting, latency
+        # windows, and live ledger claims — the multi-model operator (and
+        # the weighted-capacity rebalancer's bench validation) reads THIS
+        per_group: dict = {}
+        for g in self.model_groups:
+            gl = [(ep, p) for ep, p in zip(eps, per) if ep.group == g]
+            gr = [p for gp, p in retired_pairs if gp == g]
+            gf = folded_groups.get(g, {k: 0 for k in _STAT_KEYS})
+            gs = {k: gf[k] + sum(p[k] for _, p in gl) + sum(p[k] for p in gr)
+                  for k in _STAT_KEYS}
+            live = [ep for ep, _ in gl if not ep.retired]
+            gs["replicas"] = len(live)
+            gs["endpoints"] = [ep.replica_idx for ep in live]
+            gs["weight"] = self.group_weight(g)
+            gs["slo_p95_ms"] = self.group_slo_ms(g)
+            gsamples: list = []
+            for ep in live:
+                gsamples.extend(ep_samples.get(ep.replica_idx, ()))
+            p95g = percentile(gsamples, 0.95)
+            gs["latency_p95_ms"] = None if p95g is None else p95g * 1e3
+            claims = [ep.claim for ep in live if ep.claim is not None]
+            gs["cores"] = sum(c.n_cores for c in claims)
+            gs["gpus"] = sum(c.n_gpus for c in claims)
+            per_group[g] = gs
+        agg["per_group"] = per_group
         return agg
 
     def latency_p95(self, window_s: Optional[float] = None,
-                    started_after: Optional[float] = None
-                    ) -> Optional[float]:
+                    started_after: Optional[float] = None,
+                    group: Optional[str] = None) -> Optional[float]:
         """p95 end-to-end latency (seconds) across live replicas, the SLO
-        autoscaler's signal; optionally windowed and restricted to requests
-        *started* after a given perf_counter instant."""
+        autoscaler's signal; optionally windowed, restricted to requests
+        *started* after a given perf_counter instant, and/or to one model
+        group's replicas (the per-group rebalancer's signal)."""
         with self._lock:
-            eps = [ep for ep in self.endpoints if not ep.retired]
+            eps = [ep for ep in self.endpoints if not ep.retired
+                   and (group is None or ep.group == group)]
         samples: list = []
         for ep in eps:
             samples.extend(ep.latency.samples(window_s, started_after))
         return percentile(samples, 0.95)
 
-    def claimed(self) -> dict:
-        """Live resources this set's replicas hold on the shared ledger."""
+    def claimed(self, group: Optional[str] = None) -> dict:
+        """Live resources this set's replicas hold on the shared ledger,
+        optionally for one model group only."""
         with self._lock:
             claims = [ep.claim for ep in self.endpoints
-                      if ep.claim is not None]
+                      if ep.claim is not None
+                      and (group is None or ep.group == group)]
         return {"cores": sum(c.n_cores for c in claims),
                 "gpus": sum(c.n_gpus for c in claims),
                 "replicas": sum(1 for c in claims if not c.released)}
 
-    def capacity_headroom(self) -> Optional[int]:
-        """How many MORE replicas of this shape the partition can admit
-        right now; None when the set has no allocation (unbounded)."""
+    def claimed_by_group(self) -> dict:
+        """Per-model-group slice of ``claimed()`` — what each model costs
+        on the shared ledger right now."""
+        return {g: self.claimed(group=g) for g in self.model_groups}
+
+    def capacity_headroom(self, group: Optional[str] = None) -> Optional[int]:
+        """How many MORE replicas of this shape (the named group's, else
+        the service default) the partition can admit right now; None when
+        the set has no allocation (unbounded)."""
         if self.allocation is None:
             return None
-        req = self.desc.requirements
+        req = (self._group_requirements(group) if group is not None
+               else self.desc.requirements)
         return self.allocation.fits(req.ranks, req.cores_per_rank,
                                     req.gpus_per_rank)
 
@@ -596,36 +834,41 @@ class ReplicaSet:
                         seqs = fn()
                 except Exception:
                     continue  # crashed mid-snapshot: next tick retries
-                router.update_residency((self.name, self._uid),
+                router.update_residency((self.name, self._uid, ep.group),
                                         ep.replica_idx, seqs)
 
-    def mean_depth(self) -> float:
+    def mean_depth(self, group: Optional[str] = None) -> float:
         with self._lock:
             # a replica declared dead (restart budget exhausted -> retired
             # in place) serves nothing: averaging in its empty queue would
             # dilute the autoscaler's scale-up signal
-            eps = [ep for ep in self.endpoints if not ep.retired]
+            eps = [ep for ep in self.endpoints if not ep.retired
+                   and (group is None or ep.group == group)]
         if not eps:
             return 0.0
         return sum(ep.depth() for ep in eps) / len(eps)
 
     # -- lifecycle (driven by the manager) ----------------------------------
-    def _spawn(self) -> Optional[ServiceInstance]:
-        """Create + start one replica; caller waits for readiness.
+    def _spawn(self, group: Optional[str] = None
+               ) -> Optional[ServiceInstance]:
+        """Create + start one replica of ``group`` (default: the first
+        declared model group); caller waits for readiness.
         Returns None if the set was closed (shutdown raced a grow) OR the
         partition allocation denied the replica's resource claim
         (admission control: the set degrades, with a SCALE_DENIED event
         and the ``admission_denied`` stat, instead of overbooking).
         Replica indices are monotonic so identities stay unambiguous
         even after a middle replica is shrunk away."""
+        gname = group if group is not None else self._default_group
         with self._lock:
             if self._closed:
                 return None
         claim = None
         if self.allocation is not None:
+            owner = (f"service:{self.desc.name}/{gname}" if self.multi_model
+                     else f"service:{self.desc.name}")
             claim = self.allocation.claim(
-                self.desc.requirements,
-                owner=f"service:{self.desc.name}")
+                self._group_requirements(gname), owner=owner)
             if claim is None:
                 self._note_admission_denied()
                 return None
@@ -635,13 +878,15 @@ class ReplicaSet:
                     claim.release()
                 return None
             self._denied_episode = False  # capacity exists again
-            ep = ServiceEndpoint(self.desc.name, self._next_idx)
+            ep = ServiceEndpoint(self.desc.name, self._next_idx,
+                                 group=gname)
             ep.claim = claim
             self._next_idx += 1
             inst = ServiceInstance(self.desc, ep,
                                    on_exit=self.manager._handle_exit,
                                    warmup=self._warmup,
-                                   residency_listener=self._on_engine_evict)
+                                   residency_listener=self._on_engine_evict,
+                                   factory=self._group_factory(gname))
             self.endpoints.append(ep)
             self.instances.append(inst)
             self._gen += 1
@@ -680,7 +925,8 @@ class ReplicaSet:
             if claim is not None and not claim.released:
                 continue
             fresh = self.allocation.claim(
-                self.desc.requirements, owner=f"service:{self.desc.name}")
+                self._group_requirements(ep.group),
+                owner=f"service:{self.desc.name}")
             if fresh is None:
                 continue
             # a concurrent retire (autoscale shrink, reap, stop) may have
@@ -707,7 +953,9 @@ class ReplicaSet:
             inst = ServiceInstance(self.desc, dead.endpoint,
                                    on_exit=self.manager._handle_exit,
                                    warmup=self._warmup,
-                                   residency_listener=self._on_engine_evict)
+                                   residency_listener=self._on_engine_evict,
+                                   factory=self._group_factory(
+                                       dead.endpoint.group))
             self.instances[idx] = inst
             self._gen += 1  # recovered replica starts with fresh history
         inst.start()
@@ -719,8 +967,9 @@ class ReplicaSet:
             # stay — the session must re-warm somewhere, and its home is
             # as good a place as any.
             with self._gossip_lock:
-                router.update_residency((self.name, self._uid),
-                                        dead.endpoint.replica_idx, [])
+                router.update_residency(
+                    (self.name, self._uid, dead.endpoint.group),
+                    dead.endpoint.replica_idx, [])
         _await_ready(inst, self.desc.ready_timeout)
 
     def _restart_backoff(self, inst: ServiceInstance) -> tuple[float, bool]:
@@ -753,20 +1002,70 @@ class ReplicaSet:
                 return 0.0, True
             return min(cap, base * 2 ** (hist["attempts"] - 1)), False
 
-    def scale_to(self, n: int, ready_timeout: Optional[float] = None):
-        """Grow or shrink to ``n`` replicas; shrink re-routes queued work."""
+    def scale_to(self, n: int, ready_timeout: Optional[float] = None,
+                 group: Optional[str] = None):
+        """Grow or shrink to ``n`` replicas; shrink re-routes queued work.
+        Multi-model sets scale ONE group at a time (``group=`` required —
+        a bare total is ambiguous across models); single-model sets keep
+        the original signature."""
+        if group is None:
+            if self.multi_model:
+                raise ValueError(
+                    f"service {self.name} is multi-model: scale_to needs "
+                    f"group= (one of {sorted(self.model_groups)})")
+            group = self._default_group
+        elif group not in self.model_groups:
+            raise KeyError(f"service {self.name} has no model group "
+                           f"{group!r}")
         with self._scale_lock:  # concurrent callers (user + autoscaler)
-            self._scale_to_locked(n, ready_timeout)
+            self._scale_group_locked(group, n, ready_timeout)
 
-    def _scale_to_locked(self, n: int, ready_timeout: Optional[float]):
+    def scale_groups(self, targets: dict,
+                     ready_timeout: Optional[float] = None):
+        """Apply per-group LIVE replica targets in ONE scaling action,
+        shrinks first: a rebalance inside a full partition retires the
+        donor group's replica (releasing its claim) before the growing
+        group claims — capacity-neutral moves need no free headroom.
+
+        Targets count live replicas (what ``group_counts()`` and the
+        ``weighted_capacity`` scaler see), so a replica declared dead but
+        still visible in the set during its grace window does not make a
+        replacement grow silently no-op; the membership-level target is
+        the live target plus any such corpses (which the shrink path
+        retires FIRST, being the least healthy)."""
+        for g in targets:
+            if g not in self.model_groups:
+                raise KeyError(f"service {self.name} has no model group "
+                               f"{g!r}")
+        with self._scale_lock:
+            raw = {g: 0 for g in targets}
+            live = {g: 0 for g in targets}
+            with self._lock:
+                for ep in self.endpoints:
+                    if ep.group in raw:
+                        raw[ep.group] += 1
+                        if not ep.retired:
+                            live[ep.group] += 1
+            adj = {g: targets[g] + (raw[g] - live[g]) for g in targets}
+            order = sorted(targets, key=lambda g: adj[g] >= raw[g])
+            for g in order:
+                self._scale_group_locked(g, adj[g], ready_timeout)
+
+    def _scale_group_locked(self, gname: str, n: int,
+                            ready_timeout: Optional[float]):
         n = max(1, n)
         timeout = (self.desc.ready_timeout if ready_timeout is None
                    else ready_timeout)
-        if self.n_replicas < n and not self._closed:
+
+        def group_size():
+            with self._lock:
+                return sum(1 for ep in self.endpoints if ep.group == gname)
+
+        if group_size() < n and not self._closed:
             # spawn all missing replicas first so factories initialize in
             # parallel (same pattern as launch()), then await readiness
             # against a shared deadline
-            spawned = [self._spawn() for _ in range(n - self.n_replicas)]
+            spawned = [self._spawn(gname) for _ in range(n - group_size())]
             deadline = time.perf_counter() + timeout
             for inst in spawned:
                 if inst is None:  # set closed while growing
@@ -795,11 +1094,15 @@ class ReplicaSet:
                 # alone (do NOT retire the endpoint out from under it)
         removed: list[tuple[ServiceInstance, ServiceEndpoint]] = []
         with self._lock:
-            while len(self.endpoints) > n:
-                # retire the least healthy replica first (crashed, then
-                # unready, then highest index) — shrinking must never take
-                # a healthy replica while leaving a dead one behind
-                idx = min(range(len(self.instances)),
+            while True:
+                gidx = [i for i, ep in enumerate(self.endpoints)
+                        if ep.group == gname]
+                if len(gidx) <= n:
+                    break
+                # retire the least healthy GROUP replica first (crashed,
+                # then unready, then highest index) — shrinking must never
+                # take a healthy replica while leaving a dead one behind
+                idx = min(gidx,
                           key=lambda i: (self.instances[i].error is None,
                                          self.endpoints[i].ready.is_set(),
                                          -i))
@@ -840,10 +1143,14 @@ class ReplicaSet:
             try:
                 # sticky keys still steer the reroute, but the affinity
                 # outcome is NOT re-counted: the original route() already
-                # accounted this request
+                # accounted this request.  The model tag (stashed in meta
+                # by request(), or carried by the payload) keeps the
+                # reroute inside the SAME model group.
                 target = self.route(default_cost(payload), router,
                                     affinity_key=router.signature(payload),
-                                    account_affinity=False)
+                                    account_affinity=False,
+                                    model=(meta.get("_model")
+                                           or request_model(payload)))
             except KeyError:
                 # keep the request accounted where it died so stats()
                 # still balances (requests = completed + errors + depth)
@@ -903,15 +1210,18 @@ class ReplicaSet:
                 if self._retired[0].depth() > 0:
                     break  # drain still landing completions; keep it live
                 old = self._retired.pop(0)
+                gagg = self._retired_agg_groups.setdefault(
+                    old.group, {k: 0 for k in _STAT_KEYS})
                 for k in self._retired_agg:
                     self._retired_agg[k] += old.stats[k]
+                    gagg[k] += old.stats[k]
         with self._gossip_lock:  # after any in-flight gossip pull, so a
             # pull that snapshotted these endpoints can't resurrect them
             for ep in endpoints:
                 # the replica is gone for good: sticky sessions homed on
                 # it must re-home, and its gossiped residency is stale
-                self.manager.router.forget_member((self.name, self._uid),
-                                                  ep.replica_idx)
+                self.manager.router.forget_member(
+                    (self.name, self._uid, ep.group), ep.replica_idx)
 
     def _declare_dead(self, inst: ServiceInstance):
         """Mark one replica permanently dead (restart budget exhausted, or
@@ -1037,20 +1347,29 @@ class ServiceManager:
 
     def claimed(self) -> dict:
         """Per-partition resources currently claimed by service replicas:
-        {partition: {"cores", "gpus", "replicas", "services": {name: ...}}}
-        — the services half of the shared ledger that
-        ``Rhapsody.utilization()`` reports."""
+        {partition: {"cores", "gpus", "replicas", "models": {...},
+        "services": {name: ...}}} — the services half of the shared ledger
+        that ``Rhapsody.utilization()`` reports.  Each service entry (and
+        the partition-level ``models`` rollup) breaks the claims out per
+        model group, so a multi-model set's ledger cost is visible per
+        model, not just per service."""
         out: dict = {}
         for name, rs in list(self.replica_sets.items()):
             if rs.allocation is None:
                 continue
             c = rs.claimed()
+            c["groups"] = rs.claimed_by_group()
             agg = out.setdefault(rs.allocation.name,
                                  {"cores": 0, "gpus": 0, "replicas": 0,
-                                  "services": {}})
+                                  "models": {}, "services": {}})
             agg["cores"] += c["cores"]
             agg["gpus"] += c["gpus"]
             agg["replicas"] += c["replicas"]
+            for g, gc in c["groups"].items():
+                m = agg["models"].setdefault(
+                    g, {"cores": 0, "gpus": 0, "replicas": 0})
+                for k in m:
+                    m[k] += gc[k]
             agg["services"][name] = c
         return out
 
@@ -1072,8 +1391,6 @@ class ServiceManager:
 
     # -- lifecycle ----------------------------------------------------------
     def launch(self, desc: ServiceDescription) -> ReplicaSet:
-        n = max(1, desc.replicas or getattr(self.policy, "replicas", 1)
-                or 1)  # same clamp as scale_to: a set always has >=1
         with self._lock:
             predecessor = self.replica_sets.get(desc.name)
         if predecessor is not None:
@@ -1093,8 +1410,11 @@ class ServiceManager:
             # per set, not per serially-started replica.  A spawn denied by
             # the partition ledger comes back None: the launch degrades to
             # the admitted count (event already emitted) as long as at
-            # least one replica fits.
-            insts = [rs._spawn() for _ in range(n)]
+            # least one replica fits.  Multi-model sets spawn each group's
+            # initial count (explicit or weight-proportional, >= 1 each).
+            insts = [rs._spawn(g)
+                     for g, c in rs.initial_group_counts().items()
+                     for _ in range(c)]
             spawned = [inst for inst in insts if inst is not None]
             if not spawned:
                 raise RuntimeError(
@@ -1260,6 +1580,17 @@ class ServiceManager:
         for name, rs in list(self.replica_sets.items()):
             if rs._scaling:  # previous grow/shrink still in flight
                 continue
+            group_fn = getattr(scaler, "desired_groups", None)
+            if group_fn is not None:
+                # per-group policy (weighted_capacity): one dict of group
+                # targets per tick, applied as a single rebalance action
+                targets = group_fn(name, rs)
+                if targets:
+                    self._scale_groups_async(name, rs, targets)
+                continue
+            if rs.multi_model:
+                continue  # a set-level target is ambiguous across model
+                #           groups; only per-group scalers may steer these
             n = rs.n_replicas
             target = scaler.desired(name, rs)
             if target is None:
@@ -1311,6 +1642,40 @@ class ServiceManager:
                 rs._scaling = False
 
         t = threading.Thread(target=work, name=f"scale-{name}", daemon=True)
+        try:
+            t.start()
+        except BaseException:
+            rs._scaling = False
+            raise
+
+    def _scale_groups_async(self, name, rs, targets: dict):
+        """Apply one per-group rebalance off the control loop (same
+        in-flight discipline as ``_scale_async``); emits SCALE_REBALANCE
+        with the counts that actually materialized — a grow half can still
+        degrade on a denied claim or a missed ready timeout."""
+        rs._scaling = True
+        before = rs.group_counts()
+
+        def work():
+            try:
+                rs.scale_groups(targets)
+                after = rs.group_counts()
+                if self.events and after != before:
+                    self.events.emit(
+                        name, "SCALE_REBALANCE", "service",
+                        "groups=" + ",".join(f"{g}:{c}"
+                                             for g, c in after.items()))
+            except Exception as e:
+                if self.events:
+                    self.events.emit(name, "FAILED", "service",
+                                     f"rebalance_error={e!r}")
+            finally:
+                if self.autoscaler is not None:
+                    self.autoscaler.note_scaled(name)
+                rs._scaling = False
+
+        t = threading.Thread(target=work, name=f"rebalance-{name}",
+                             daemon=True)
         try:
             t.start()
         except BaseException:

@@ -12,10 +12,22 @@ prefixes; per-replica ``prefix_hits``/``prefix_misses`` are reported.
 Replicas claim cores from the middleware's resource ledger
 (admission-controlled), ``--warmup`` primes each replica before it becomes
 routable, and ``--autoscale`` turns on the pluggable autoscaler
-(``--autoscaler queue_depth|latency_slo``, ``--slo-p95-ms`` target) bounded
-by the partition's free capacity.  Reports aggregate + per-replica
-throughput, latency, and utilization — the runnable end of the
-inference-at-scale path the dry-run lowers at production shapes.
+(``--autoscaler queue_depth|latency_slo|weighted_capacity``,
+``--slo-p95-ms`` target) bounded by the partition's free capacity.
+
+``--models NAME:WEIGHT [NAME:WEIGHT ...]`` launches a MULTI-MODEL set:
+several model groups behind the one service name, each replica tagged with
+its group, requests addressed by tagging the payload (``{"model": ...}``)
+so the router only considers that group's replicas.  ``--replicas`` then
+names the TOTAL, split across groups proportionally to weight; a two-model
+launch is just::
+
+    python -m repro.launch.serve --smoke --models chat:2 draft:1 \
+        --replicas 3 --requests 24
+
+Reports aggregate + per-replica (and per-group) throughput, latency, and
+utilization — the runnable end of the inference-at-scale path the dry-run
+lowers at production shapes.
 """
 from __future__ import annotations
 
@@ -28,7 +40,7 @@ from repro.configs import get_config, get_smoke_config, list_archs
 from repro.core import (ExecutionPolicy, ResourceDescription, Rhapsody,
                         ServiceDescription, TaskDescription, TaskKind)
 from repro.core.router import ROUTERS
-from repro.serving.client import llm_service_factory
+from repro.serving.client import llm_model_group, llm_service_factory
 
 
 def main():
@@ -58,9 +70,14 @@ def main():
                     help="let the autoscaler grow/shrink the replica set "
                          "within the partition's free capacity")
     ap.add_argument("--autoscaler", default="queue_depth",
-                    choices=("queue_depth", "latency_slo"))
+                    choices=("queue_depth", "latency_slo",
+                             "weighted_capacity"))
     ap.add_argument("--slo-p95-ms", type=float, default=250.0,
                     help="latency_slo autoscaler: p95 end-to-end target")
+    ap.add_argument("--models", nargs="*", metavar="NAME:WEIGHT",
+                    help="serve SEVERAL model groups from one replica set "
+                         "(e.g. --models chat:2 draft:1); --replicas "
+                         "becomes the total, split by weight")
     args = ap.parse_args()
 
     cfg = (get_smoke_config(args.arch)
@@ -78,28 +95,46 @@ def main():
                       autoscale_max_replicas=max(4, args.replicas),
                       slo_p95_ms=args.slo_p95_ms),
                   n_workers=2)
+    engine_kw = dict(max_num_seqs=args.max_num_seqs,
+                     max_num_batched_tokens=args.max_num_batched_tokens,
+                     max_len=args.max_len, prefill_buckets=(16, 32, 64))
+    model_names: list = []
     try:
-        replica_set = rh.add_service(ServiceDescription(
-            name="llm", replicas=args.replicas,
-            factory=llm_service_factory(
-                cfg, max_num_seqs=args.max_num_seqs,
-                max_num_batched_tokens=args.max_num_batched_tokens,
-                max_len=args.max_len,
-                prefill_buckets=(16, 32, 64))))
-        print(f"[serve] {cfg.name} x {args.replicas} replicas ready:",
-              rh.services.list())
+        if args.models:
+            groups = []
+            for spec in args.models:
+                name, _, w = spec.partition(":")
+                groups.append(llm_model_group(
+                    name, cfg, weight=float(w) if w else 1.0, **engine_kw))
+            model_names = [g.name for g in groups]
+            replica_set = rh.add_service(ServiceDescription(
+                name="llm", replicas=args.replicas, models=groups))
+            print(f"[serve] {cfg.name} x {args.replicas} replicas "
+                  f"across groups {replica_set.group_counts()} ready:",
+                  rh.services.list())
+        else:
+            replica_set = rh.add_service(ServiceDescription(
+                name="llm", replicas=args.replicas,
+                factory=llm_service_factory(cfg, **engine_kw)))
+            print(f"[serve] {cfg.name} x {args.replicas} replicas ready:",
+                  rh.services.list())
 
         rng = np.random.RandomState(0)
         lens = np.clip(np.exp(rng.normal(3.0, 0.7, args.requests)), 4,
                        args.max_len - args.max_new_tokens - 1).astype(int)
         prompts = [list(rng.randint(0, cfg.vocab, size=int(L)))
                    for L in lens]
+
+        def payload(i, p):
+            out = {"prompt": p, "max_new_tokens": args.max_new_tokens}
+            if model_names:  # address models round-robin across the stream
+                out["model"] = model_names[i % len(model_names)]
+            return out
+
         descs = [TaskDescription(kind=TaskKind.INFERENCE, service="llm",
-                                 payload={"prompt": p,
-                                          "max_new_tokens":
-                                              args.max_new_tokens},
+                                 payload=payload(i, p),
                                  task_type="inference")
-                 for p in prompts]
+                 for i, p in enumerate(prompts)]
         t0 = time.perf_counter()
         uids = rh.submit(descs)
         if not rh.wait(uids, timeout=1200):
@@ -118,6 +153,14 @@ def main():
               f"mean slot-utilization {np.mean(utils):.2f}")
         print("[serve] per-replica requests:",
               [p["requests"] for p in stats["per_replica"]])
+        if model_names:
+            print("[serve] per-model groups:",
+                  {g: {"replicas": s["replicas"],
+                       "requests": s["requests"],
+                       "cores": s["cores"],
+                       "p95_ms": s["latency_p95_ms"]
+                       and round(s["latency_p95_ms"], 1)}
+                   for g, s in stats["per_group"].items()})
         ledger = rh.utilization()
         print("[serve] shared ledger:",
               {k: {"cores": round(v["cores"], 2),

@@ -5,6 +5,7 @@ from __future__ import annotations
 import time
 from typing import Any, Optional
 
+from repro.core.service import ModelGroup
 from repro.models.config import ModelConfig
 from .engine import InferenceEngine, make_engine_from_scratch
 
@@ -81,3 +82,25 @@ def llm_service_factory(cfg: ModelConfig, params=None, **engine_kw):
         return LLMServicer(cfg, params, **engine_kw)
 
     return make
+
+
+def llm_model_group(name: str, cfg: ModelConfig, params=None, *,
+                    weight: float = 1.0, replicas: Optional[int] = None,
+                    slo_p95_ms: Optional[float] = None,
+                    requirements=None, **engine_kw):
+    """One model config of a multi-model service: a ``ModelGroup`` whose
+    factory builds an ``LLMServicer`` for ``cfg``.
+
+    Several of these behind ONE ``ServiceDescription(models=[...])`` share
+    a replica set, router, and partition ledger; clients address a model
+    by tagging the payload (``{"prompt": ..., "model": name}``) or passing
+    ``ReplicaSet.request(payload, model=name)`` — the router only
+    considers that group's replicas, so a request can never land on a
+    wrong-model engine.  ``weight`` anchors the group's share of the
+    set's capacity; ``slo_p95_ms`` gives it its own latency target under
+    the ``weighted_capacity`` autoscaler.
+    """
+    return ModelGroup(name=name,
+                      factory=llm_service_factory(cfg, params, **engine_kw),
+                      weight=weight, replicas=replicas,
+                      slo_p95_ms=slo_p95_ms, requirements=requirements)

@@ -7,6 +7,22 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax
 import pytest
 
+try:  # optional dev dependency (property tests importorskip it per-module)
+    from hypothesis import settings
+except ImportError:
+    pass
+else:
+    # CI runs the DERANDOMIZED profile (HYPOTHESIS_PROFILE=ci in the
+    # workflow): example generation is a pure function of the test, so a
+    # property-test failure in a workflow log reproduces locally with
+    #   HYPOTHESIS_PROFILE=ci pytest tests/test_... -k <name>
+    # (or by passing the seed printed by --hypothesis-seed).  The default
+    # "dev" profile keeps randomized exploration but always prints the
+    # reproduction blob.
+    settings.register_profile("ci", derandomize=True, print_blob=True)
+    settings.register_profile("dev", print_blob=True)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+
 
 @pytest.fixture(scope="session")
 def rng():

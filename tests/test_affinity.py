@@ -248,7 +248,7 @@ def test_relaunch_clears_stale_gossiped_residency():
                                                factory=CrashyResident,
                                                replicas=2))
         rs.stats()  # gossip tick: both replicas' residency lands
-        res = rh.router._affinity[("svc", rs._uid)]["residency"]
+        res = rh.router._affinity[("svc", rs._uid, "default")]["residency"]
         assert res.values() == {ep.replica_idx for ep in rs.endpoints}
         victim = rs.endpoints[0]
         with pytest.raises((SystemError, RuntimeError)):

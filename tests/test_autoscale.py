@@ -637,7 +637,9 @@ def test_eviction_push_refreshes_router_between_pull_ticks():
         assert servicer.listener is not None, "listener must be wired"
         rs.stats()  # one explicit pull seeds the router's residency view
         router = rh.router
-        group = (rs.name, rs._uid)
+        # sticky/residency state is keyed per (service, set uid, MODEL
+        # group) — single-model sets live under the implicit "default"
+        group = (rs.name, rs._uid, "default")
 
         def resident_members():
             astate = router._affinity.get(group)

@@ -1,0 +1,112 @@
+"""The CI bench-JSON validator (benchmarks/check_bench_json.py) is a
+committed, tested script — these feed it canned good/bad rows so the
+heredoc-era assertions can no longer rot silently inside ci.yml."""
+import copy
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+from benchmarks.check_bench_json import (CheckFailed, check_affinity,  # noqa: E402
+                                         check_autoscale, check_multimodel,
+                                         main)
+
+
+def affinity_rows():
+    rows = []
+    for pol in ("least_loaded", "prefix_affinity", "radix_affinity"):
+        for stream in ("sessioned", "branching", "uniform"):
+            rows.append({"policy": pol, "stream": stream, "replicas": 4,
+                         "requests": 32, "req_per_s": 100.0,
+                         "hit_rate": 0.0 if pol == "least_loaded" else 0.5})
+    return rows
+
+
+def autoscale_rows():
+    rows = []
+    for pol in ("queue_depth", "latency_slo"):
+        for sc in ("step", "saturate"):
+            rows.append({
+                "autoscaler": pol, "scenario": sc, "capacity": 4,
+                "final_replicas": 4 if sc == "saturate" else 3,
+                "service_replicas": 4 if sc == "saturate" else 3,
+                "service_cores": 4 if sc == "saturate" else 3,
+                "requests": 100, "converged": True,
+                "admission_denied": 5 if sc == "saturate" else 0,
+                "slo_p95_ms": 120.0, "p95_ms": 80.0,
+            })
+    return rows
+
+
+def multimodel_rows():
+    return [
+        {"scenario": "multi_model", "group": "alpha", "weight": 1.0,
+         "hot": False, "capacity": 4, "requests": 40, "wrong_route": 0,
+         "replicas_start": 2, "replicas_final": 1, "p95_ms": None,
+         "slo_p95_ms": 60.0, "service_cores": 1,
+         "ledger_service_cores": 4, "admission_denied": 0},
+        {"scenario": "multi_model", "group": "beta", "weight": 1.0,
+         "hot": True, "capacity": 4, "requests": 500, "wrong_route": 0,
+         "replicas_start": 2, "replicas_final": 3, "p95_ms": 80.0,
+         "slo_p95_ms": 60.0, "service_cores": 3,
+         "ledger_service_cores": 4, "admission_denied": 0},
+    ]
+
+
+def test_good_rows_pass():
+    check_affinity(affinity_rows())
+    check_autoscale(autoscale_rows())
+    check_multimodel(multimodel_rows())
+
+
+def test_affinity_catches_missing_policy_and_dead_hits():
+    rows = [r for r in affinity_rows() if r["policy"] != "radix_affinity"]
+    with pytest.raises(CheckFailed):
+        check_affinity(rows)
+    rows = affinity_rows()
+    for r in rows:
+        if r["policy"] == "prefix_affinity" and r["stream"] == "sessioned":
+            r["hit_rate"] = 0.0  # sticky policy that never sticks
+    with pytest.raises(CheckFailed):
+        check_affinity(rows)
+
+
+def test_autoscale_catches_ledger_drift_and_unpunished_saturate():
+    rows = autoscale_rows()
+    rows[0]["service_cores"] += 1  # claim not matching live replicas
+    with pytest.raises(CheckFailed):
+        check_autoscale(rows)
+    rows = autoscale_rows()
+    for r in rows:
+        if r["scenario"] == "saturate":
+            r["admission_denied"] = 0  # overload never denied: overbooked
+    with pytest.raises(CheckFailed):
+        check_autoscale(rows)
+
+
+def test_multimodel_catches_wrong_route_and_missing_rebalance():
+    rows = multimodel_rows()
+    rows[1]["wrong_route"] = 1  # a request hit a wrong-model replica
+    with pytest.raises(CheckFailed):
+        check_multimodel(rows)
+    rows = multimodel_rows()
+    rows[0]["replicas_final"] = rows[0]["replicas_start"]  # idle held on
+    with pytest.raises(CheckFailed):
+        check_multimodel(rows)
+    rows = multimodel_rows()
+    rows[1]["service_cores"] = 2  # groups no longer sum to the ledger
+    with pytest.raises(CheckFailed):
+        check_multimodel(rows)
+
+
+def test_main_exit_codes(tmp_path):
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(multimodel_rows()))
+    assert main(["multimodel", str(good)]) == 0
+    bad_rows = copy.deepcopy(multimodel_rows())
+    bad_rows[1]["wrong_route"] = 3
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(bad_rows))
+    assert main(["multimodel", str(bad)]) == 1

@@ -1,0 +1,524 @@
+"""Multi-model replica sets: per-model routing groups, weighted capacity,
+model-aware rebalancing (weighted_capacity autoscaler), per-group stats /
+claims on the shared ledger, and the zero-footprint INFERENCE-task fix.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import (ExecutionPolicy, ModelGroup, ResourceDescription,
+                        ResourceRequirements, Rhapsody, ServiceDescription,
+                        TaskDescription, TaskKind, WeightedCapacityAutoscaler,
+                        weighted_split)
+
+
+class Tagged:
+    """Sync RPC servicer that tags results with the model group serving
+    them — wrong-model routing becomes directly observable."""
+
+    def __init__(self, tag, delay_s: float = 0.0):
+        self.tag = tag
+        self.delay_s = delay_s
+
+    def handle(self, payload):
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        return {"served_by": self.tag}
+
+
+def tagged_factory(tag, delay_s: float = 0.0):
+    return lambda: Tagged(tag, delay_s)
+
+
+def two_model_rh(nodes=1, cores=8, replicas_a=2, replicas_b=2,
+                 weight_a=1.0, weight_b=1.0, **policy_kw):
+    rh = Rhapsody(ResourceDescription(nodes=nodes, cores_per_node=cores),
+                  policy=ExecutionPolicy(**policy_kw), n_workers=1)
+    rs = rh.add_service(ServiceDescription(
+        name="llm",
+        requirements=ResourceRequirements(ranks=1, cores_per_rank=1),
+        models=[ModelGroup(name="a", factory=tagged_factory("a"),
+                           weight=weight_a, replicas=replicas_a),
+                ModelGroup(name="b", factory=tagged_factory("b"),
+                           weight=weight_b, replicas=replicas_b)]))
+    return rh, rs
+
+
+# ---------------------------------------------------------------------------
+# Weighted initial split
+# ---------------------------------------------------------------------------
+
+
+def test_weighted_split_proportional_with_floor():
+    assert weighted_split(6, {"a": 2.0, "b": 1.0}) == {"a": 4, "b": 2}
+    assert weighted_split(4, {"a": 3.0, "b": 1.0}) == {"a": 3, "b": 1}
+    # never below one replica per group, even when total is too small
+    assert weighted_split(2, {"a": 1, "b": 1, "c": 1}) == \
+        {"a": 1, "b": 1, "c": 1}
+    # zero/negative weights degrade to an even split, not a crash
+    assert sum(weighted_split(4, {"a": 0.0, "b": 0.0}).values()) == 4
+
+
+def test_initial_group_counts_explicit_weighted_and_mixed():
+    rh = Rhapsody(ResourceDescription(nodes=1, cores_per_node=16),
+                  policy=ExecutionPolicy(), n_workers=1)
+    try:
+        # weights split the ServiceDescription total
+        rs = rh.add_service(ServiceDescription(
+            name="w", replicas=6,
+            requirements=ResourceRequirements(ranks=1, cores_per_rank=1),
+            models=[ModelGroup(name="a", factory=tagged_factory("a"),
+                               weight=2.0),
+                    ModelGroup(name="b", factory=tagged_factory("b"),
+                               weight=1.0)]))
+        assert rs.group_counts() == {"a": 4, "b": 2}
+        # explicit per-group replicas win; the rest split the remainder
+        rs2 = rh.add_service(ServiceDescription(
+            name="m", replicas=4,
+            requirements=ResourceRequirements(ranks=1, cores_per_rank=1),
+            models=[ModelGroup(name="a", factory=tagged_factory("a"),
+                               replicas=1),
+                    ModelGroup(name="b", factory=tagged_factory("b"))]))
+        assert rs2.group_counts() == {"a": 1, "b": 3}
+    finally:
+        rh.close()
+
+
+# ---------------------------------------------------------------------------
+# Model-addressed routing
+# ---------------------------------------------------------------------------
+
+
+def test_requests_route_only_within_their_model_group():
+    rh, rs = two_model_rh()
+    try:
+        for _ in range(6):
+            assert rs.request({"prompt": [1, 2, 3], "model": "a"}
+                              ).result(10.0)["served_by"] == "a"
+            assert rs.request({"prompt": [1, 2, 3]}, model="b"
+                              ).result(10.0)["served_by"] == "b"
+        stats = rs.stats()
+        per_group = stats["per_group"]
+        assert per_group["a"]["requests"] == 6
+        assert per_group["b"]["requests"] == 6
+        assert per_group["a"]["completed"] == 6
+        assert per_group["b"]["completed"] == 6
+        # replicas are tagged and disjoint across groups
+        assert set(per_group["a"]["endpoints"]).isdisjoint(
+            per_group["b"]["endpoints"])
+        assert all(p["group"] in ("a", "b") for p in stats["per_replica"])
+    finally:
+        rh.close()
+
+
+def test_untagged_requests_go_to_the_first_declared_group():
+    rh, rs = two_model_rh()
+    try:
+        assert rs.request("plain").result(10.0)["served_by"] == "a"
+        assert rs.stats()["per_group"]["a"]["requests"] == 1
+    finally:
+        rh.close()
+
+
+def test_unknown_model_raises_not_misroutes():
+    rh, rs = two_model_rh()
+    try:
+        with pytest.raises(KeyError):
+            rs.request({"prompt": [1], "model": "zzz"})
+    finally:
+        rh.close()
+
+
+def test_inference_task_payload_model_is_honored_and_unknown_fails():
+    rh, rs = two_model_rh()
+    try:
+        uids = rh.submit([
+            TaskDescription(kind=TaskKind.INFERENCE, service="llm",
+                            payload={"prompt": [1], "model": "b"},
+                            task_type="inference"),
+            TaskDescription(kind=TaskKind.INFERENCE, service="llm",
+                            payload={"prompt": [1], "model": "nope"},
+                            task_type="inference", max_retries=0),
+        ])
+        assert rh.wait(uids, timeout=30)
+        assert rh.result(uids[0])["served_by"] == "b"
+        with pytest.raises(KeyError):
+            rh.result(uids[1])
+    finally:
+        rh.close()
+
+
+def test_single_model_sets_ignore_payload_model_tags():
+    """Back-compat: a payload carrying {"model": "llama-7b"} routed fine
+    before model groups existed (the key just passed through) — a
+    single-model set must keep serving it, not KeyError."""
+    rh = Rhapsody(ResourceDescription(nodes=1, cores_per_node=8),
+                  policy=ExecutionPolicy(), n_workers=1)
+    try:
+        rs = rh.add_service(ServiceDescription(
+            name="svc", factory=tagged_factory("solo"), replicas=2))
+        assert rs.request({"prompt": [1], "model": "llama-7b"}
+                          ).result(10.0)["served_by"] == "solo"
+        uid = rh.submit(TaskDescription(
+            kind=TaskKind.INFERENCE, service="svc",
+            payload={"prompt": [1], "model": "llama-7b"},
+            task_type="inference"))
+        assert rh.wait(uid, timeout=30)
+        assert rh.result(uid[0])["served_by"] == "solo"
+    finally:
+        rh.close()
+
+
+def test_single_model_sets_keep_the_old_surface():
+    """A plain description gets one implicit 'default' group: request()
+    without a model, scale_to() without a group, per_group in stats."""
+    rh = Rhapsody(ResourceDescription(nodes=1, cores_per_node=8),
+                  policy=ExecutionPolicy(), n_workers=1)
+    try:
+        rs = rh.add_service(ServiceDescription(
+            name="svc", factory=tagged_factory("solo"), replicas=2))
+        assert not rs.multi_model
+        assert rs.request("x").result(10.0)["served_by"] == "solo"
+        rs.scale_to(3)
+        assert rs.n_replicas == 3
+        assert rs.stats()["per_group"]["default"]["replicas"] == 3
+    finally:
+        rh.close()
+
+
+def test_per_group_affinity_is_isolated_across_models():
+    """Two models sharing the SAME prompt prefix each stick within their
+    own group: sticky state is keyed per model, so affinity can never
+    cross a group boundary."""
+    rh, rs = two_model_rh(routing="prefix_affinity")
+    try:
+        for m in ("a", "b"):
+            for _ in range(4):
+                assert rs.request({"prompt": [7] * 40, "model": m}
+                                  ).result(10.0)["served_by"] == m
+        per_group = rs.stats()["per_group"]
+        for m in ("a", "b"):
+            assert per_group[m]["prefix_hits"] == 3  # first contact misses
+            assert per_group[m]["prefix_misses"] == 1
+    finally:
+        rh.close()
+
+
+# ---------------------------------------------------------------------------
+# Per-group scaling + claims on the shared ledger
+# ---------------------------------------------------------------------------
+
+
+def test_scale_to_requires_group_on_multi_model_sets():
+    rh, rs = two_model_rh()
+    try:
+        with pytest.raises(ValueError):
+            rs.scale_to(3)
+        with pytest.raises(KeyError):
+            rs.scale_to(3, group="zzz")
+        rs.scale_to(3, group="a")
+        assert rs.group_counts() == {"a": 3, "b": 2}
+        rs.scale_to(1, group="b")
+        assert rs.group_counts() == {"a": 3, "b": 1}
+    finally:
+        rh.close()
+
+
+def test_per_group_claims_sum_to_the_ledger_total():
+    rh, rs = two_model_rh(nodes=1, cores=8)
+    try:
+        util = rh.utilization()["default"]
+        assert util["service_cores"] == 4
+        by_group = rs.claimed_by_group()
+        assert by_group["a"]["cores"] + by_group["b"]["cores"] == 4
+        assert util["service_models"]["a"]["cores"] == 2
+        assert util["service_models"]["b"]["replicas"] == 2
+        per_group = rs.stats()["per_group"]
+        assert per_group["a"]["cores"] == 2 and per_group["b"]["cores"] == 2
+    finally:
+        rh.close()
+
+
+def test_scale_groups_rebalances_inside_a_full_partition():
+    """Shrink-before-grow: with ZERO free cores, moving a replica from one
+    group to another must succeed on the donor's freed claim."""
+    rh, rs = two_model_rh(nodes=3, cores=1, replicas_a=2, replicas_b=1)
+    try:
+        assert rh.utilization()["default"]["free"]["cores"] == 0
+        rs.scale_groups({"a": 1, "b": 2})
+        assert rs.group_counts() == {"a": 1, "b": 2}
+        util = rh.utilization()["default"]
+        assert util["service_cores"] == 3  # capacity-neutral move
+        assert util["service_models"]["b"]["cores"] == 2
+        # the moved-to group actually serves
+        assert rs.request({"model": "b"}).result(10.0)["served_by"] == "b"
+    finally:
+        rh.close()
+
+
+def test_scale_groups_targets_count_live_replicas_despite_a_corpse():
+    """A replica declared dead stays visible in the set through its grace
+    window (here: forever, grace < 0) — a live-count target must still
+    spawn its replacement instead of silently no-opping on the corpse."""
+
+    class CrashOnBoom:  # pumped servicer: a submit crash kills the thread
+        def __init__(self, tag):
+            self.tag = tag
+
+        def submit(self, payload):
+            if payload == "boom":
+                raise SystemError("dead")
+            return 1
+
+        def step(self):
+            return [(1, {"served_by": self.tag})]
+
+    rh = Rhapsody(ResourceDescription(nodes=1, cores_per_node=8),
+                  policy=ExecutionPolicy(restart_failed_services=False,
+                                         dead_replica_grace_s=-1.0),
+                  n_workers=1)
+    try:
+        rs = rh.add_service(ServiceDescription(
+            name="llm",
+            requirements=ResourceRequirements(ranks=1, cores_per_rank=1),
+            models=[ModelGroup(name="a",
+                               factory=lambda: CrashOnBoom("a"),
+                               replicas=2),
+                    ModelGroup(name="b",
+                               factory=lambda: CrashOnBoom("b"),
+                               replicas=1)]))
+        # untagged -> first declared group ("a"): kill one of its replicas
+        with pytest.raises((SystemError, RuntimeError)):
+            rs.request("boom").result(10.0)
+        deadline = time.perf_counter() + 10
+        while time.perf_counter() < deadline and rs.n_live_group("a") > 1:
+            time.sleep(0.01)
+        assert rs.n_live_group("a") == 1  # corpse retired in place
+        rs.scale_groups({"a": 2, "b": 1})  # live target, corpse present
+        assert rs.n_live_group("a") == 2, \
+            "replacement grow no-opped on the dead-in-place replica"
+        assert rs.request({"prompt": [1], "model": "a"}
+                          ).result(10.0)["served_by"] == "a"
+    finally:
+        rh.close()
+
+
+# ---------------------------------------------------------------------------
+# WeightedCapacityAutoscaler policy logic (unit, no threads)
+# ---------------------------------------------------------------------------
+
+
+class FakeGroupRS:
+    """Just the group surface desired_groups() consumes."""
+
+    multi_model = True
+
+    def __init__(self, counts, p95_s, depths, headroom=None, weights=None,
+                 slos=None):
+        self._counts = dict(counts)
+        self._p95 = dict(p95_s)  # group -> seconds or None
+        self._depths = dict(depths)
+        self._headroom = headroom
+        self._weights = weights or {g: 1.0 for g in counts}
+        self._slos = slos or {}
+        self.denied = 0
+
+    def group_counts(self):
+        return dict(self._counts)
+
+    def group_weight(self, g):
+        return self._weights[g]
+
+    def group_slo_ms(self, g):
+        return self._slos.get(g, 100.0)
+
+    def latency_p95(self, window_s=None, started_after=None, group=None):
+        return self._p95[group]
+
+    def mean_depth(self, group=None):
+        return self._depths[group]
+
+    def capacity_headroom(self, group=None):
+        return self._headroom
+
+    def _note_admission_denied(self, where, once_per_episode=False):
+        self.denied += 1
+
+
+def make_scaler(**kw):
+    kw.setdefault("autoscaler", "weighted_capacity")
+    kw.setdefault("autoscale_sustain_up", 1)
+    kw.setdefault("autoscale_sustain_down", 1)
+    kw.setdefault("autoscale_max_replicas", 4)
+    kw.setdefault("autoscale_low_depth", 0.5)
+    kw.setdefault("slo_p95_ms", 100.0)
+    return WeightedCapacityAutoscaler(ExecutionPolicy(**kw))
+
+
+def test_weighted_scaler_grows_violating_group_with_headroom():
+    a = make_scaler(autoscale_max_replicas=8)
+    # b violates its SLO; a is mid-band (no shrink signal)
+    rs = FakeGroupRS({"a": 2, "b": 2}, {"a": 0.06, "b": 0.2},
+                     {"a": 1.0, "b": 5.0}, headroom=2)
+    assert a.desired_groups("s", rs) == {"a": 2, "b": 3}
+
+
+def test_weighted_scaler_rebalances_at_capacity():
+    a = make_scaler()
+    # set at max (4) and no headroom: the idle group donates
+    rs = FakeGroupRS({"a": 2, "b": 2}, {"a": None, "b": 0.2},
+                     {"a": 0.0, "b": 5.0}, headroom=0)
+    assert a.desired_groups("s", rs) == {"a": 1, "b": 3}
+
+
+def test_weighted_scaler_donor_prefers_over_entitled_group():
+    a = make_scaler(autoscale_max_replicas=5)
+    # c violates; a and b both quiet, but a holds MORE than its weighted
+    # share (weight 1 vs b's 2) — a donates
+    rs = FakeGroupRS({"a": 2, "b": 2, "c": 1},
+                     {"a": 0.06, "b": 0.06, "c": 0.3},
+                     {"a": 1.0, "b": 1.0, "c": 6.0}, headroom=0,
+                     weights={"a": 1.0, "b": 2.0, "c": 1.0})
+    assert a.desired_groups("s", rs) == {"a": 1, "b": 2, "c": 2}
+
+
+def test_weighted_scaler_no_donor_notes_denial_and_holds():
+    a = make_scaler(autoscale_max_replicas=2)
+    # every other group is at its 1-replica floor: nothing can donate
+    rs = FakeGroupRS({"a": 1, "b": 1}, {"a": None, "b": 0.2},
+                     {"a": 0.0, "b": 5.0}, headroom=0)
+    assert a.desired_groups("s", rs) is None
+    assert rs.denied == 1
+
+
+def test_weighted_scaler_shrinks_idle_group_but_keeps_one_replica():
+    a = make_scaler()
+    rs = FakeGroupRS({"a": 2, "b": 1}, {"a": None, "b": 0.06},
+                     {"a": 0.0, "b": 1.0}, headroom=1)
+    assert a.desired_groups("s", rs) == {"a": 1, "b": 1}
+    rs2 = FakeGroupRS({"a": 1, "b": 1}, {"a": None, "b": 0.06},
+                      {"a": 0.0, "b": 1.0}, headroom=1)
+    assert a.desired_groups("s", rs2) is None  # floor: never to zero
+
+
+def test_weighted_scaler_honors_set_level_min_replicas():
+    """autoscale_min_replicas bounds the SET total, same as the per-set
+    policies: an idle multi-model set must not shrink below it."""
+    a = make_scaler(autoscale_min_replicas=3)
+    rs = FakeGroupRS({"a": 2, "b": 1}, {"a": None, "b": None},
+                     {"a": 0.0, "b": 0.0}, headroom=1)
+    assert a.desired_groups("s", rs) is None  # total 3 == floor: hold
+    rs2 = FakeGroupRS({"a": 3, "b": 1}, {"a": None, "b": None},
+                      {"a": 0.0, "b": 0.0}, headroom=1)
+    assert a.desired_groups("s", rs2) == {"a": 2, "b": 1}  # 4 -> 3 only
+
+
+def test_weighted_scaler_sustain_damps_single_tick_signal():
+    a = make_scaler(autoscale_sustain_up=2, autoscale_max_replicas=8)
+    rs = FakeGroupRS({"a": 2, "b": 2}, {"a": 0.06, "b": 0.2},
+                     {"a": 1.0, "b": 5.0}, headroom=2)
+    assert a.desired_groups("s", rs) is None  # 1st hot tick
+    assert a.desired_groups("s", rs) == {"a": 2, "b": 3}  # 2nd: sustained
+    a.note_scaled("s")
+    assert a.desired_groups("s", rs) is None  # hysteresis restarted
+
+
+# ---------------------------------------------------------------------------
+# Rebalancing e2e + concurrency stress (clients race the autoscaler)
+# ---------------------------------------------------------------------------
+
+
+def test_multimodel_stress_futures_exactly_once_no_cross_group():
+    """Clients on two model groups race a rebalancing weighted-capacity
+    autoscaler: every future resolves exactly once with a result served
+    by ITS model's replicas, and per-group stats stay conserved."""
+    rh = Rhapsody(ResourceDescription(nodes=4, cores_per_node=1),
+                  policy=ExecutionPolicy(
+                      routing="least_loaded", autoscale=True,
+                      autoscaler="weighted_capacity",
+                      autoscale_min_replicas=1, autoscale_max_replicas=4,
+                      autoscale_interval_s=0.02, autoscale_sustain=1,
+                      slo_p95_ms=20.0, slo_window_s=0.5,
+                      autoscale_low_depth=0.5),
+                  n_workers=1)
+    n_threads, per_thread = 4, 30
+    try:
+        rs = rh.add_service(ServiceDescription(
+            name="llm",
+            requirements=ResourceRequirements(ranks=1, cores_per_rank=1),
+            models=[ModelGroup(name="a",
+                               factory=tagged_factory("a", 0.004)),
+                    ModelGroup(name="b",
+                               factory=tagged_factory("b", 0.004))]))
+        errors: list = [None] * n_threads
+        results: list = [None] * n_threads
+
+        def client(tid):
+            model = "a" if tid % 2 == 0 else "b"
+            got = []
+            try:
+                futs = [rs.request({"prompt": [tid, i], "model": model})
+                        for i in range(per_thread)]
+                got = [(model, f.result(30.0)) for f in futs]
+            except BaseException as e:  # noqa: BLE001
+                errors[tid] = e
+            results[tid] = got
+
+        threads = [threading.Thread(target=client, args=(t,))
+                   for t in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        assert all(e is None for e in errors), errors
+        # exactly once, never cross-group
+        for got in results:
+            assert len(got) == per_thread
+            assert all(r["served_by"] == m for m, r in got)
+        stats = rs.stats()
+        per_group = stats["per_group"]
+        total = n_threads // 2 * per_thread
+        for g in ("a", "b"):
+            assert per_group[g]["requests"] == total, per_group
+            assert per_group[g]["completed"] + per_group[g]["errors"] == \
+                total, per_group
+        assert stats["requests"] == 2 * total
+        # the ledger never overbooked while the scaler bounced groups
+        util = rh.utilization()["default"]
+        assert util["service_cores"] <= 4
+    finally:
+        rh.close()
+
+
+# ---------------------------------------------------------------------------
+# INFERENCE tasks are zero-footprint (service-charged) on the ledger
+# ---------------------------------------------------------------------------
+
+
+def test_inference_tasks_dispatch_on_a_fully_claimed_partition():
+    """Regression (ROADMAP): replicas holding EVERY core used to starve
+    their own clients — each INFERENCE task mapped 1 core just to wait on
+    the service.  Inference is service-charged now: the replica's claim
+    already accounts for the compute, so the task maps nothing."""
+    rh = Rhapsody(ResourceDescription(nodes=1, cores_per_node=1),
+                  policy=ExecutionPolicy(routing="least_loaded"),
+                  n_workers=1)
+    try:
+        rh.add_service(ServiceDescription(
+            name="svc", factory=tagged_factory("solo"), replicas=1,
+            requirements=ResourceRequirements(ranks=1, cores_per_rank=1)))
+        assert rh.utilization()["default"]["free"]["cores"] == 0
+        uids = rh.submit([TaskDescription(
+            kind=TaskKind.INFERENCE, service="svc",
+            payload={"prompt": [1, 2]}, task_type="inference")
+            for _ in range(4)])
+        assert rh.wait(uids, timeout=30), \
+            "INFERENCE tasks starved by their own service's claims"
+        assert all(rh.result(u)["served_by"] == "solo" for u in uids)
+        # control: a FUNCTION task still needs a core and stays blocked —
+        # admission control for real compute is untouched
+        fuid = rh.submit(TaskDescription(fn=lambda: 1))
+        assert not rh.wait(fuid, timeout=0.3)
+    finally:
+        rh.close()
