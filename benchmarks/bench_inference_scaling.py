@@ -23,11 +23,19 @@ SLO-violating group gains a replica by RETIRING one from the idle group
 (capacity-neutral rebalance on the shared ledger), that per-group claims
 sum to the ledger total, and that no request was served by a wrong-model
 replica.
+
+``--paged`` runs the block-paged KV comparison: a branching-session load
+(one shared stem, many divergent suffixes) against a slot-pool engine and
+a block-paged engine at MEMORY PARITY (same KV cells).  Validation
+(``check_bench_json.py paged``) asserts exact greedy-token equivalence,
+concurrency above the slot pool's ``max_num_seqs`` ceiling, and measured
+physical-block sharing (copy-on-write reuse > 0).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import random
 import threading
 import time
 
@@ -35,6 +43,7 @@ from repro.configs import get_config
 from repro.core import (ExecutionPolicy, ModelGroup, ResourceDescription,
                         ResourceRequirements, Rhapsody, ServiceDescription)
 from repro.serving.client import llm_service_factory
+from repro.serving.engine import make_engine_from_scratch
 
 from .common import Reporter
 
@@ -369,6 +378,79 @@ def run_multi_model(*, capacity: int = 4, service_time_s: float = 0.02,
         rh.close()
 
 
+# ---------------------------------------------------------------------------
+# Block-paged vs slot-pool engine on a branching-session load
+# ---------------------------------------------------------------------------
+
+
+def _drive(eng, prompts, new_tokens: int):
+    """Submit all prompts at once and drain, tracking peak concurrency."""
+    uids = [eng.submit(p, max_new_tokens=new_tokens) for p in prompts]
+    done = {}
+    peak = 0
+    for _ in range(100000):
+        if not eng.has_work():
+            break
+        eng.step()
+        peak = max(peak, len(eng.running))
+        for r in eng.collect_finished():
+            done[r.uid] = r
+    return [done[u].output for u in uids], peak
+
+
+def run_paged_compare(*, max_num_seqs: int = 4, max_len: int = 64,
+                      block_size: int = 8, n_branches: int = 12,
+                      prompt_len: int = 12, new_tokens: int = 6) -> list:
+    """Branching-session load (one stem, many divergent suffixes) on a
+    slot-pool engine and a block-paged engine at MEMORY PARITY (the paged
+    pool defaults to the slot pool's KV cell count).  The stem runs first
+    so its KV is resident when the branch burst arrives: the slot pool can
+    resume ONE slot and must prefill the rest into its ``max_num_seqs``
+    slots, while the paged engine forks the stem's blocks into every
+    branch's table (refcount sharing) and admits the whole burst at once,
+    copy-on-write duplicating only the divergence-boundary block.  Greedy
+    outputs must match token-for-token."""
+    cfg = engine_cfg()
+    kw = dict(max_num_seqs=max_num_seqs, max_len=max_len,
+              prefill_buckets=(16, 32), seed=0)
+    rng = random.Random(0)
+    stem = [rng.randrange(1, cfg.vocab) for _ in range(prompt_len)]
+    branches = [stem + [rng.randrange(1, cfg.vocab) for _ in range(3)]
+                for _ in range(n_branches)]
+    outs = {}
+    rows = []
+    for name in ("monolithic", "paged"):
+        eng = make_engine_from_scratch(
+            cfg, **kw, **({"paged": True, "block_size": block_size}
+                          if name == "paged" else {}))
+        t0 = time.perf_counter()
+        stem_out, _ = _drive(eng, [stem], new_tokens)
+        branch_out, peak = _drive(eng, branches, new_tokens)
+        dt = time.perf_counter() - t0
+        outs[name] = stem_out + branch_out
+        st = eng.stats
+        rows.append({
+            "scenario": "paged_compare",
+            "engine": name,
+            "max_num_seqs": max_num_seqs,
+            "max_len": max_len,
+            "block_size": block_size if name == "paged" else None,
+            "num_blocks": eng.num_blocks if name == "paged" else None,
+            "requests": 1 + n_branches,
+            "seconds": dt,
+            "tokens_per_s": st.tokens_per_s,
+            "peak_concurrent": peak,
+            "prefix_reuse_hits": st.prefix_reuse_hits,
+            "prefix_cached_tokens": st.prefix_cached_tokens,
+            "shared_block_peak": st.shared_block_peak,
+            "cow_copies": st.cow_copies,
+        })
+    match = outs["monolithic"] == outs["paged"]
+    for r in rows:
+        r["tokens_match"] = match
+    return rows
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--autoscale", action="store_true",
@@ -377,6 +459,11 @@ if __name__ == "__main__":
     ap.add_argument("--multi-model", action="store_true",
                     help="run the two-model shifting-load rebalance "
                          "scenario (weighted_capacity autoscaler)")
+    ap.add_argument("--paged", action="store_true",
+                    help="run the block-paged vs slot-pool engine "
+                         "comparison on a branching-session load")
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--branches", type=int, default=12)
     ap.add_argument("--policies", nargs="*",
                     default=["queue_depth", "latency_slo"])
     ap.add_argument("--scenarios", nargs="*",
@@ -386,6 +473,22 @@ if __name__ == "__main__":
     ap.add_argument("--shift-s", type=float, default=5.0)
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
+    if args.paged:
+        rows = run_paged_compare(block_size=args.block_size,
+                                 n_branches=args.branches)
+        if args.json:
+            print(json.dumps(rows, indent=2))
+        else:
+            for r in rows:
+                print(f"[paged] {r['engine']:>10s} "
+                      f"peak={r['peak_concurrent']} "
+                      f"(slots {r['max_num_seqs']}) "
+                      f"shared={r['shared_block_peak']} "
+                      f"cow={r['cow_copies']} "
+                      f"hits={r['prefix_reuse_hits']} "
+                      f"match={r['tokens_match']} "
+                      f"{r['seconds']:.1f}s")
+        raise SystemExit(0)
     if args.multi_model:
         rows = run_multi_model(capacity=args.capacity, shift_s=args.shift_s)
         if args.json:

@@ -8,6 +8,7 @@ Usage::
     python benchmarks/check_bench_json.py affinity   /tmp/affinity.json
     python benchmarks/check_bench_json.py autoscale  /tmp/autoscale.json
     python benchmarks/check_bench_json.py multimodel /tmp/multimodel.json
+    python benchmarks/check_bench_json.py paged      /tmp/paged.json
 
 Each checker takes the decoded rows and raises ``CheckFailed`` with a
 pointed message on the first violated invariant — these used to live as
@@ -126,10 +127,34 @@ def check_multimodel(rows: list) -> None:
              "groups exceed the partition capacity", rows)
 
 
+def check_paged(rows: list) -> None:
+    """bench_inference_scaling --paged: one row per engine, identical
+    greedy tokens, and the paged engine must demonstrate what paging buys
+    at memory parity — concurrency above the slot pool's ``max_num_seqs``
+    ceiling, physical-block sharing (refcount > 1 somewhere at peak), and
+    at least one copy-on-write divergence."""
+    _require(len(rows) == 2, "expected one row per engine", rows)
+    by = {r.get("engine"): r for r in rows}
+    _require(set(by) == {"monolithic", "paged"},
+             "rows must cover both engines", sorted(by))
+    for r in rows:
+        _require(r.get("requests", 0) > 0, "engine served nothing", r)
+        _require(r.get("tokens_match") is True,
+                 "paged and slot-pool engines disagree on greedy tokens", r)
+    mono, paged = by["monolithic"], by["paged"]
+    _require(paged["peak_concurrent"] > mono["max_num_seqs"],
+             "paged engine never admitted past the slot ceiling", paged)
+    _require(paged.get("shared_block_peak", 0) > 0,
+             "no physical-block sharing observed", paged)
+    _require(paged.get("cow_copies", 0) > 0,
+             "no copy-on-write divergence observed", paged)
+
+
 CHECKS = {
     "affinity": check_affinity,
     "autoscale": check_autoscale,
     "multimodel": check_multimodel,
+    "paged": check_paged,
 }
 
 

@@ -7,6 +7,19 @@ ragged valid region of the cache; out-of-range blocks are predicated off.
 
 This is the memory-roofline kernel: per block it moves ``2 * bk * D`` cache
 bytes and does ``O(G * bk * D)`` MACs — arithmetic intensity ~G.
+
+Two variants share the online-softmax body:
+
+* ``decode_attention_grouped`` — contiguous caches ``[B, S, Hkv, D]``
+  (the slot-pool layout); the KV block index IS the grid index.
+* ``paged_decode_attention_grouped`` — block-paged stores
+  ``[num_blocks, block_size, Hkv, D]`` plus per-sequence block tables:
+  the tables and lengths ride in scalar-prefetch SMEM
+  (``PrefetchScalarGridSpec``) so each grid step's BlockSpec index map
+  dereferences ``table[b, ki]`` and the DMA engine fetches the right
+  *physical* block — the gather costs no extra copy.  Logical blocks at
+  or past a sequence's length are predicated off (their table entries
+  point at the null block 0).
 """
 from __future__ import annotations
 
@@ -90,3 +103,92 @@ def decode_attention_grouped(q, k_cache, v_cache, kv_length, *,
         ],
         interpret=interpret,
     )(kv_length, q, k_cache, v_cache)
+
+
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, block_size: int,
+                         max_blocks: int, sm_scale: float):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kv_len = len_ref[b]
+    needed = ki * block_size < kv_len
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [G, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # [block_size, D]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * sm_scale
+        pos = ki * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(pos < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ki == max_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_grouped(q, k_store, v_store, block_tables,
+                                   kv_length, *, interpret: bool = False):
+    """Paged flash-decode through block-table indirection.
+
+    q: [B, Hkv, G, D]; stores: [num_blocks, block_size, Hkv, D];
+    block_tables: [B, max_blocks] int32 physical block ids (entries at or
+    past ceil(kv_length/block_size) must point at a valid — conventionally
+    the null — block; they are compute-predicated off); kv_length: [B].
+    Returns [B, Hkv, G, D].
+
+    The tables/lengths are scalar-prefetched: the k/v BlockSpec index maps
+    receive them AFTER the grid indices and return
+    ``(table[b, ki], 0, h, 0)``, so the physical block is resolved at DMA
+    issue time — the paged gather is free relative to the contiguous
+    kernel, which is the point of paging on a machine that cannot
+    reallocate buffers dynamically.
+    """
+    B, Hkv, G, D = q.shape
+    _, block_size, _, _ = k_store.shape
+    max_blocks = block_tables.shape[1]
+    kernel = functools.partial(_paged_decode_kernel, block_size=block_size,
+                               max_blocks=max_blocks,
+                               sm_scale=1.0 / math.sqrt(D))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block_tables, kv_length
+        grid=(B, Hkv, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ki, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_size, 1, D),
+                         lambda b, h, ki, bt, ln: (bt[b, ki], 0, h, 0)),
+            pl.BlockSpec((1, block_size, 1, D),
+                         lambda b, h, ki, bt, ln: (bt[b, ki], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, ki, bt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), kv_length.astype(jnp.int32),
+      q, k_store, v_store)

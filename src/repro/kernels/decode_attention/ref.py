@@ -20,3 +20,22 @@ def decode_ref(q, k_cache, v_cache, kv_length):
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def gather_kv(store, block_tables):
+    """Materialize contiguous caches from a paged store (oracle gather).
+
+    store [num_blocks, block_size, Hkv, D]; block_tables [B, max_blocks]
+    -> [B, max_blocks * block_size, Hkv, D]."""
+    B, mb = block_tables.shape
+    _, bs, Hkv, D = store.shape
+    return store[block_tables].reshape(B, mb * bs, Hkv, D)
+
+
+def paged_decode_ref(q, k_store, v_store, block_tables, kv_length):
+    """Paged oracle: gather through the block tables, then ``decode_ref``.
+
+    q [B,Hkv,G,D]; stores [num_blocks, block_size, Hkv, D]; block_tables
+    [B, max_blocks]; kv_length [B] -> [B,Hkv,G,D]."""
+    return decode_ref(q, gather_kv(k_store, block_tables),
+                      gather_kv(v_store, block_tables), kv_length)

@@ -55,6 +55,15 @@ def main():
     ap.add_argument("--max-num-seqs", type=int, default=4)
     ap.add_argument("--max-num-batched-tokens", type=int, default=512)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--paged", action="store_true",
+                    help="block-paged KV cache: admission by free-block "
+                         "count, chunked prefill, copy-on-write prefix "
+                         "sharing (dense/moe archs only)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV positions per physical block (--paged)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="physical KV blocks; default matches the slot "
+                         "pool's memory budget (--paged)")
     ap.add_argument("--routing", default="balanced",
                     choices=tuple(ROUTERS))
     ap.add_argument("--affinity-prefix-len", type=int, default=32,
@@ -98,6 +107,9 @@ def main():
     engine_kw = dict(max_num_seqs=args.max_num_seqs,
                      max_num_batched_tokens=args.max_num_batched_tokens,
                      max_len=args.max_len, prefill_buckets=(16, 32, 64))
+    if args.paged:
+        engine_kw.update(paged=True, block_size=args.block_size,
+                         num_blocks=args.num_blocks)
     model_names: list = []
     try:
         if args.models:

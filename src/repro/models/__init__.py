@@ -21,6 +21,9 @@ class ModelApi:
     forward: Callable  # (params, batch, cfg, *, mesh=None) -> (logits, aux)
     prefill: Callable  # (params, batch, cfg, *, max_len, mesh=None) -> (cache, logits)
     decode: Callable  # (params, cache, tokens, cfg, *, mesh=None) -> (cache, logits)
+    # chunked cache extension (paged serving); None for state-carrying
+    # families whose recurrent state has no per-position KV to extend
+    extend: Optional[Callable] = None  # (params, cache, tokens [B,T], cfg, *, mesh=None) -> (cache, logits [B,T,V])
 
 
 def get_model(cfg: ModelConfig) -> ModelApi:
@@ -47,6 +50,7 @@ def get_model(cfg: ModelConfig) -> ModelApi:
         forward=tfm.forward,
         prefill=tfm.prefill,
         decode=tfm.decode_step,
+        extend=tfm.extend_step,
     )
 
 

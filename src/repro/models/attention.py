@@ -306,6 +306,46 @@ def attention_prefill(p, x, cfg: ModelConfig, *, positions=None, mesh=None):
     return nn.linear_apply(p["o"], out, cfg.cdtype), (k, v)
 
 
+def attention_extend(p, x, cache_k, cache_v, kv_length, cfg: ModelConfig):
+    """Multi-token cache extension (chunked prefill).
+
+    x: [B,T,d] new tokens appended at positions kv_length..kv_length+T-1;
+    cache_k/v: [B,Smax,Hkv,D]; kv_length: [B] valid entries *before* this
+    chunk.  Returns (out [B,T,d], new_k, new_v, new_len).
+
+    The T=chunk generalization of ``attention_decode``: the chunk's K/V
+    are scattered into the cache at their absolute positions, then each
+    chunk query attends to the cache prefix plus the chunk's own causal
+    triangle.  The score math mirrors ``full_attention`` (f32 einsum,
+    NEG_INF mask, softmax) so a prompt prefilled in chunks produces
+    bit-identical KV and logits to a single full-sequence prefill —
+    masked positions underflow to exactly 0.0 in the softmax, so the
+    extra (masked) cache columns never perturb the f32 sums.
+    """
+    B, T, _ = x.shape
+    Smax = cache_k.shape[1]
+    pos = kv_length[:, None] + jnp.arange(T)[None, :]  # [B,T] abs positions
+    q, k_new, v_new = _project_qkv(p, x, x, cfg, pos, pos,
+                                   rope=cfg.positions == "rope")
+    bidx = jnp.arange(B)[:, None]
+    cache_k = cache_k.at[bidx, pos].set(k_new)
+    cache_v = cache_v.at[bidx, pos].set(v_new)
+    new_len = kv_length + T
+    Hq = q.shape[2]
+    k = _repeat_kv(cache_k, Hq)
+    v = _repeat_kv(cache_v, Hq)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    # key j is valid for chunk query t iff j <= its absolute position
+    mask = jnp.arange(Smax)[None, None, :] <= pos[:, :, None]  # [B,T,Smax]
+    logits = jnp.where(mask[:, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    out = out.reshape(B, T, cfg.padded_heads * cfg.head_dim)
+    return nn.linear_apply(p["o"], out, cfg.cdtype), cache_k, cache_v, new_len
+
+
 def attention_decode(p, x, cache_k, cache_v, kv_length, cfg: ModelConfig):
     """Single-token decode step.
 

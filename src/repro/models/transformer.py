@@ -160,6 +160,29 @@ def block_decode(p, x, cache, cfg: ModelConfig, *, mesh=None):
     return y, cache
 
 
+def block_extend(p, x, cache, cfg: ModelConfig, *, mesh=None):
+    """Multi-token cache extension (chunked prefill): x [B,T,d] appended
+    at cache positions len..len+T-1.  Cross-attn reads precomputed cross
+    K/V, mirroring ``block_decode``."""
+    h = nn.rmsnorm_apply(p["ln_attn"], x, cfg.norm_eps)
+    h, ck, cv, clen = attn.attention_extend(
+        p["attn"], h, cache["k"], cache["v"], cache["len"], cfg)
+    cache = dict(cache, k=ck, v=cv, len=clen)
+    x = x + h
+    if "cross" in p and "cross_k" in cache:
+        h = nn.rmsnorm_apply(p["ln_cross"], x, cfg.norm_eps)
+        B, T, _ = x.shape
+        zero = jnp.zeros((B, T), jnp.int32)
+        q, _, _ = attn._project_qkv(p["cross"], h, h, cfg, zero, zero,
+                                    rope=False)
+        o = attn.full_attention(q, cache["cross_k"], cache["cross_v"],
+                                causal=False)
+        o = o.reshape(B, T, cfg.padded_heads * cfg.head_dim)
+        x = x + nn.linear_apply(p["cross"]["o"], o, cfg.cdtype)
+    y, _ = _ffn(p, x, cfg, mesh, decode=True)
+    return y, cache
+
+
 def _cross_prefill(p, x, enc_out, cfg):
     B, S, _ = x.shape
     q, k, v = attn._project_qkv(
@@ -429,6 +452,43 @@ def prefill(p, batch, cfg: ModelConfig, *, max_len: int, mesh=None,
     else:
         logits = _logits(p, x, cfg)
     return cache, logits
+
+
+def extend_step(p, cache, tokens, cfg: ModelConfig, *, mesh=None):
+    """Chunked cache extension; tokens [B, T] -> (cache, logits [B, T, vocab]).
+
+    The T-token generalization of ``decode_step``: the chunk is written
+    into the cache at positions len..len+T-1 and logits come back for
+    every chunk position (the engine reads the last *real* one).  Feeding
+    a prompt through successive extend calls produces the same cache and
+    final-position logits as one full prefill, which is what lets the
+    paged engine interleave long-prompt prefill with decode steps without
+    perturbing outputs."""
+    B, T = tokens.shape
+    x = nn.embedding_apply(p["embed"], tokens, cfg.cdtype, mesh=mesh)
+    if cfg.positions == "learned":
+        lens = cache["scan"]["len"]  # [L, B]
+        pos = lens[0][:, None] + jnp.arange(T)[None, :]  # [B, T]
+        tab = p["pos_embed"]["table"].astype(x.dtype)
+        x = x + jnp.take(tab, pos, axis=0)
+
+    new_pre = {}
+    for name in _pre_names(p):
+        x, c = block_extend(p["pre"][name], x, cache["pre"][name], cfg,
+                            mesh=mesh)
+        new_pre[name] = c
+
+    def scan_body(x, layer):
+        layer_params, layer_cache = layer
+        y, c = block_extend(layer_params, x, layer_cache, cfg, mesh=mesh)
+        return y, c
+
+    x, new_scan = jax.lax.scan(scan_body, x, (p["blocks"], cache["scan"]))
+    new_cache = {"scan": new_scan}
+    if new_pre:
+        new_cache["pre"] = new_pre
+    logits = _logits(p, x, cfg)
+    return new_cache, logits
 
 
 def decode_step(p, cache, tokens, cfg: ModelConfig, *, mesh=None):

@@ -1,6 +1,6 @@
 """Continuous-batching inference engine (the vLLM building block).
 
-The engine owns model params + a slot cache pool and exposes the two knobs
+The engine owns model params + a KV cache pool and exposes the two knobs
 the paper sweeps (Fig. 5c): ``max_num_seqs`` (decode slot count) and
 ``max_num_batched_tokens`` (prefill admission budget per step).  Each
 ``step()``:
@@ -25,6 +25,29 @@ exports ``residency_summary()``, which the replica set gossips to the
 router so spill decisions know which replica holds which prefix.  Hits,
 partial hits, and skipped tokens are tracked in ``EngineStats``.
 
+``paged=True`` switches to the block-paged pool (``PagedCachePool``):
+
+  * sequences hold *block tables* over a ``[num_blocks, block_size, ...]``
+    physical store, so concurrency is bounded by free BLOCKS, not by a
+    fixed slot count — short sequences no longer pin a whole
+    ``max_len`` slot and the engine admits well past ``max_num_seqs``;
+  * prompts prefill in CHUNKS (``api.extend``) interleaved with decode
+    steps — a long prompt no longer stalls the decode batch, and the
+    per-step chunk budget is ``max_num_batched_tokens``;
+  * a radix residency hit FORKS the resident blocks (refcount++) instead
+    of exclusively taking a slot: many live sequences share one physical
+    copy of a common prefix, and the first divergent write triggers
+    copy-on-write of just the boundary block;
+  * admission reserves ``ceil(len/block_size)`` blocks against
+    free + reclaimable-resident capacity, so a mid-flight sequence can
+    always grow (block-granular residency eviction, coldest first,
+    supplies the reserve).
+
+Both paths produce token-for-token identical greedy output: chunked
+extend is bit-exact versus one full prefill (masked softmax columns
+underflow to exact zeros), and the gathered block view is bit-identical
+to a contiguous slot cache.
+
 Telemetry (per-step active slots, tokens, queue depth) feeds the paper's
 utilization/throughput experiments.
 """
@@ -33,6 +56,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
+from collections import OrderedDict
 from typing import Any, Callable, Optional
 
 import jax
@@ -42,7 +66,8 @@ import numpy as np
 from repro.core.prefix import RadixIndex
 from repro.models import ModelApi, get_model
 from repro.models.config import ModelConfig
-from .kvcache import CachePool
+from .kvcache import (CachePool, PagedCachePool, gather_block_view,
+                      scatter_block_writes)
 from .sampling import sample
 
 
@@ -65,6 +90,12 @@ class Request:
     cached_prefix: int = 0  # prompt tokens whose prefill was skipped
     truncated: bool = False  # prompt exceeded max_len/bucket at prefill:
     #                          the cache does not cover the full prompt
+    # paged engine state
+    table: list = dataclasses.field(default_factory=list)  # physical blocks
+    pos: int = 0  # cache positions holding valid KV
+    pending_tokens: list = dataclasses.field(default_factory=list)  # unfed
+    reserve_left: int = 0  # admission-reserved blocks not yet allocated
+    last_token: Optional[int] = None  # next decode feed
 
     @property
     def done(self) -> bool:
@@ -83,6 +114,14 @@ def _bucket(n: int, buckets) -> int:
 
 
 @dataclasses.dataclass
+class _Residency:
+    """A retired sequence whose blocks stay allocated for prefix resume."""
+
+    blocks: tuple
+    length: int  # tokens of the sequence (KV covers length - 1)
+
+
+@dataclasses.dataclass
 class EngineStats:
     steps: int = 0
     decode_tokens: int = 0
@@ -93,6 +132,11 @@ class EngineStats:
     prefix_partial_hits: int = 0  # resumes that rewound PAST a divergence
     #                               (resident sequence != prompt prefix)
     prefix_cached_tokens: int = 0  # prompt tokens whose prefill was skipped
+    # paged-pool telemetry
+    cow_copies: int = 0  # shared blocks duplicated on first divergent write
+    peak_running: int = 0  # high-water concurrent admitted sequences
+    shared_block_peak: int = 0  # max physical blocks saved by sharing
+    evicted_residencies: int = 0  # resident sequences dropped for space
     started: float = dataclasses.field(default_factory=time.perf_counter)
 
     @property
@@ -111,7 +155,11 @@ class InferenceEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_num_seqs: int = 8,
                  max_num_batched_tokens: int = 2048, max_len: int = 512,
                  prefill_buckets=(32, 64, 128, 256, 512), seed: int = 0,
-                 mesh=None, enable_prefix_reuse: bool = True):
+                 mesh=None, enable_prefix_reuse: bool = True,
+                 paged: bool = False, block_size: int = 16,
+                 num_blocks: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 max_running: Optional[int] = None):
         self.cfg = cfg
         self.api: ModelApi = get_model(cfg)
         self.params = params
@@ -120,14 +168,13 @@ class InferenceEngine:
         self.max_len = max_len
         self.buckets = tuple(b for b in prefill_buckets if b <= max_len) or (max_len,)
         self.mesh = mesh
-        self.pool = CachePool(cfg, max_num_seqs, max_len)
         self.queue: list[Request] = []
-        self.running: dict[int, Request] = {}  # slot -> request
-        # radix index over the token sequences freed slots' caches still
-        # cover (value = slot id); admission finds the deepest resident
-        # common prefix in one O(len(prompt)) descent.  State-carrying
-        # families (ssm/hybrid) have no per-position KV to rewind, so the
-        # fast path is gated off for them below.
+        self.running: dict[int, Request] = {}  # slot (or uid) -> request
+        # radix index over token sequences whose KV is still resident
+        # (value = slot id, or a residency id in paged mode); admission
+        # finds the deepest resident common prefix in one O(len(prompt))
+        # descent.  State-carrying families (ssm/hybrid) have no
+        # per-position KV to rewind, so the fast path is gated off below.
         self._prefix_index = RadixIndex()
         self._resident_len: dict[int, int] = {}  # slot -> covered seq len
         # residency gossip PUSH channel: called (no args) whenever resident
@@ -141,11 +188,7 @@ class InferenceEngine:
         self._last_tokens = jnp.zeros((max_num_seqs,), jnp.int32)
 
         api = self.api
-
-        def decode_fn(params, cache, tokens):
-            return api.decode(params, cache, tokens, cfg, mesh=mesh)
-
-        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+        self.paged = paged
 
         # KV-cache families: right-pad prompts into buckets, fix cache "len"
         # afterwards, read logits at the true last position.  State-carrying
@@ -157,6 +200,62 @@ class InferenceEngine:
         # to rewind) or vlm/encdec (vision/audio prefix offsets positions)
         self._prefix_reuse = (enable_prefix_reuse
                               and cfg.family in ("dense", "moe"))
+
+        if paged:
+            if cfg.family not in ("dense", "moe") or api.extend is None:
+                raise ValueError(
+                    f"paged=True requires a pure text-decoder family with "
+                    f"chunked extend (dense/moe), not {cfg.family!r}")
+            self.block_size = block_size
+            # memory parity by default: same KV cells as the slot pool
+            # (+1 for the reserved null block)
+            if num_blocks is None:
+                num_blocks = max_num_seqs * (-(-max_len // block_size)) + 1
+            self.num_blocks = num_blocks
+            self.pool: Any = PagedCachePool(cfg, num_blocks, block_size,
+                                            max_len)
+            self.prefill_chunk = min(prefill_chunk or max(self.buckets),
+                                     max_num_batched_tokens)
+            self._chunk_buckets = tuple(
+                b for b in self.buckets if b <= self.prefill_chunk) \
+                or (self.prefill_chunk,)
+            # concurrency is block-bounded; max_running only caps the
+            # decode batch (and its gathered-view footprint)
+            self.max_running = max_running or self.pool.alloc.capacity
+            self._prefill_order: list[Request] = []  # FIFO chunk scheduling
+            self._residency: "OrderedDict[int, _Residency]" = OrderedDict()
+            self._res_holds: dict[int, int] = {}  # block -> residency refs
+            self._res_counter = itertools.count()
+            self._reserved = 0  # admission-reserved, not-yet-allocated
+
+            def paged_extend_fn(params, store, bt, lens, tokens, wphys, woff):
+                view = gather_block_view(store, bt, lens)
+                view, logits = api.extend(params, view, tokens, cfg,
+                                          mesh=mesh)
+                T = tokens.shape[1]
+                wpos = lens[:, None] + jnp.arange(T)[None, :]
+                store = scatter_block_writes(store, view, wphys, woff, wpos)
+                return store, logits
+
+            def paged_decode_fn(params, store, bt, lens, tokens, wphys,
+                                woff):
+                view = gather_block_view(store, bt, lens)
+                view, logits = api.decode(params, view, tokens, cfg,
+                                          mesh=mesh)
+                store = scatter_block_writes(store, view, wphys, woff,
+                                             lens[:, None])
+                return store, logits
+
+            self._paged_extend = jax.jit(paged_extend_fn, donate_argnums=(1,))
+            self._paged_decode = jax.jit(paged_decode_fn, donate_argnums=(1,))
+            return
+
+        self.pool = CachePool(cfg, max_num_seqs, max_len)
+
+        def decode_fn(params, cache, tokens):
+            return api.decode(params, cache, tokens, cfg, mesh=mesh)
+
+        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
 
         def prefill_fn(params, batch):
             kw = {"max_len": max_len}
@@ -182,6 +281,8 @@ class InferenceEngine:
 
     def step(self) -> list:
         """One engine iteration. Returns [(uid, token), ...] emitted."""
+        if self.paged:
+            return self._step_paged()
         self._admit()
         events = []
         if self.running:
@@ -196,6 +297,8 @@ class InferenceEngine:
         reuse on, the freed slot's KV stays resident (it is only memory
         already allocated) and the sequence it covers is remembered so a
         later prompt extending it can skip that prefill."""
+        if self.paged:
+            return self._collect_finished_paged()
         done = []
         for slot, req in list(self.running.items()):
             if req.done:
@@ -223,7 +326,7 @@ class InferenceEngine:
         return done
 
     # ------------------------------------------------------------------
-    # Internals
+    # Internals (slot pool)
     # ------------------------------------------------------------------
     def _admit(self):
         budget = self.max_num_batched_tokens
@@ -407,6 +510,309 @@ class InferenceEngine:
             req.output[-1] == req.eos_id
         if len(req.output) >= req.max_new_tokens or hit_eos:
             req.finished_at = time.perf_counter()
+
+    # ------------------------------------------------------------------
+    # Internals (paged pool)
+    # ------------------------------------------------------------------
+    def _step_paged(self) -> list:
+        self._admit_paged()
+        self.stats.peak_running = max(self.stats.peak_running,
+                                      len(self.running))
+        self._prefill_step_paged()
+        events = self._decode_step_paged()
+        self.stats.steps += 1
+        self.stats.active_slot_steps += len(self.running)
+        self.stats.slot_steps += max(self.max_num_seqs, len(self.running))
+        self.stats.shared_block_peak = max(self.stats.shared_block_peak,
+                                           self.pool.block_savings())
+        return events
+
+    def _blocks_needed(self, total_len: int, covered: int) -> int:
+        """Blocks a sequence of ``total_len`` tokens must be able to
+        allocate, given ``covered`` resumed positions: blocks strictly
+        before ``covered // block_size`` are shared read-only and never
+        written; a partial boundary block still counts (its first write
+        may need a copy-on-write replacement)."""
+        bs = self.block_size
+        total = min(total_len, self.pool.max_blocks * bs)
+        return max(1, -(-total // bs) - covered // bs)
+
+    def _reclaimable_blocks(self) -> int:
+        """Blocks whose every reference is a residency hold — freeing
+        them needs only eviction, no live sequence loses KV."""
+        alloc = self.pool.alloc
+        return sum(1 for b, h in self._res_holds.items()
+                   if h > 0 and alloc.refcount(b) == h)
+
+    def _reserve(self, need: int, pinned: int = 0) -> bool:
+        """Admission control: admit only when ``need`` blocks are covered
+        by free + reclaimable capacity net of earlier reservations (and of
+        ``pinned`` reclaimable blocks this admission is about to share),
+        so an admitted sequence can ALWAYS grow to its full length —
+        over-admitting would deadlock: every running sequence blocked on a
+        block none of them can free."""
+        avail = (self.pool.n_free + self._reclaimable_blocks()
+                 - pinned - self._reserved)
+        if avail < need:
+            return False
+        self._reserved += need
+        return True
+
+    def _admit_paged(self):
+        while self.queue and len(self.running) < self.max_running:
+            req = self.queue[0]
+            if self._prefix_reuse and self._try_resume_paged(req):
+                self.queue.pop(0)
+                continue
+            m = min(req.n_prompt, self.max_len - 1)
+            need = self._blocks_needed(m + req.max_new_tokens, 0)
+            if not self._reserve(need):
+                break
+            self.queue.pop(0)
+            req.truncated = m < req.n_prompt
+            req.pending_tokens = list(req.prompt[-m:])
+            req.reserve_left = need
+            self.running[req.uid] = req
+            self._prefill_order.append(req)
+
+    def _try_resume_paged(self, req: Request) -> bool:
+        """Prefix resume by block sharing: fork (refcount++) the resident
+        blocks covering the prompt's deepest resident prefix instead of
+        exclusively claiming a slot.  The residency entry SURVIVES the
+        resume — that is the paging win: any number of concurrent
+        sequences extend one physical copy of a shared stem, and only
+        boundary blocks are duplicated (copy-on-write) when they write.
+
+        Gate: at least one full block must be covered — sharing only a
+        partial boundary block would be immediately copied-on-write,
+        costing a block copy to save less than one block of prefill."""
+        m = req.n_prompt
+        if m >= self.max_len:
+            return False
+        bs = self.block_size
+        best = None
+        for res_id, d in self._prefix_index.match_lengths(req.prompt).items():
+            ent = self._residency.get(res_id)
+            if ent is None:
+                continue
+            covered = min(d, ent.length - 1, m - 1)
+            if covered >= bs and (best is None or covered > best[0]):
+                best = (covered, res_id, ent, d)
+        if best is None:
+            return False
+        covered, res_id, ent, d = best
+        shared = ent.blocks[:-(-covered // bs)]
+        need = self._blocks_needed(m + req.max_new_tokens, covered)
+        # the shared blocks stop being reclaimable the moment this
+        # sequence pins them: account for that in the reservation check
+        alloc = self.pool.alloc
+        pinned = sum(1 for b in set(shared)
+                     if self._res_holds.get(b, 0) > 0
+                     and alloc.refcount(b) == self._res_holds[b])
+        if not self._reserve(need, pinned=pinned):
+            return False
+        for b in shared:
+            alloc.fork(b)
+        req.table = list(shared)
+        req.pos = covered
+        req.pending_tokens = list(req.prompt[covered:])
+        req.reserve_left = need
+        req.cached_prefix = covered
+        self.running[req.uid] = req
+        self._prefill_order.append(req)
+        self._residency.move_to_end(res_id)  # hit: refresh retirement order
+        self.stats.prefix_reuse_hits += 1
+        if d < ent.length and d < m:
+            self.stats.prefix_partial_hits += 1
+        self.stats.prefix_cached_tokens += covered
+        return True
+
+    def _alloc_block(self, req: Request) -> int:
+        """Allocate one physical block for ``req``, evicting resident
+        sequences (coldest first) as needed; consumes the request's
+        admission reserve.  Admission control guarantees this succeeds."""
+        b = self.pool.alloc.allocate()
+        while b is None and self._residency:
+            self._evict_residency()
+            b = self.pool.alloc.allocate()
+        if b is None:
+            raise RuntimeError(
+                "paged KV pool exhausted despite admission reservation")
+        if req.reserve_left > 0:
+            req.reserve_left -= 1
+            self._reserved -= 1
+        return b
+
+    def _evict_residency(self):
+        """Drop the coldest resident sequence: decref its blocks (shared
+        ones survive under their live references) and forget its index
+        entry, notifying the residency-gossip listener."""
+        res_id, ent = self._residency.popitem(last=False)
+        for b in ent.blocks:
+            self._res_holds[b] -= 1
+            if self._res_holds[b] == 0:
+                del self._res_holds[b]
+            self.pool.alloc.free(b)
+        self._prefix_index.remove_value(res_id)
+        self.stats.evicted_residencies += 1
+        if self.on_residency_drop is not None:
+            try:
+                self.on_residency_drop()
+            except Exception:
+                pass  # gossip is best-effort; serving must not care
+
+    def _ensure_writable(self, req: Request, start: int, n: int):
+        """Make positions [start, start+n) writable: grow the block table
+        (append-only) and copy-on-write any shared block about to be
+        written — writing a block another table points at would corrupt
+        the other sequence's (or the residency's) KV."""
+        bs = self.block_size
+        alloc = self.pool.alloc
+        # past-capacity writes clamp to the final position, mirroring the
+        # slot pool's clamped scatter when generation outruns max_len
+        cap = self.pool.max_blocks * bs - 1
+        start = min(start, cap)
+        for lb in range(start // bs, (min(start + n - 1, cap)) // bs + 1):
+            if lb < len(req.table):
+                b = req.table[lb]
+                if alloc.refcount(b) > 1:  # shared: copy before write
+                    nb = self._alloc_block(req)
+                    self.pool.copy_block(b, nb)
+                    alloc.free(b)  # drop only OUR reference
+                    req.table[lb] = nb
+                    self.stats.cow_copies += 1
+            else:
+                assert lb == len(req.table), "non-contiguous block write"
+                req.table.append(self._alloc_block(req))
+
+    def _prefill_step_paged(self):
+        """Feed one prompt chunk per prefilling sequence (admission FIFO)
+        until the per-step token budget runs out.  Chunk lengths are
+        bucketed to bound recompilation; the final chunk's last real
+        logits row produces the first generated token."""
+        budget = self.max_num_batched_tokens
+        mb = self.pool.max_blocks
+        bs = self.block_size
+        for req in list(self._prefill_order):
+            if budget <= 0:
+                break
+            if req.done or not req.pending_tokens:
+                self._prefill_order.remove(req)
+                continue
+            T = min(len(req.pending_tokens), budget, self.prefill_chunk)
+            bucket = _bucket(T, self._chunk_buckets)
+            T = min(T, bucket)
+            self._ensure_writable(req, req.pos, T)
+            bt = np.zeros((1, mb), np.int32)
+            bt[0, :len(req.table)] = req.table
+            tokens = np.zeros((1, bucket), np.int32)
+            tokens[0, :T] = req.pending_tokens[:T]
+            # padded chunk positions scatter into the null block
+            wphys = np.zeros((1, bucket), np.int32)
+            woff = np.zeros((1, bucket), np.int32)
+            for t in range(T):
+                p = req.pos + t
+                wphys[0, t] = req.table[p // bs]
+                woff[0, t] = p % bs
+            self.pool.cache, logits = self._paged_extend(
+                self.params, self.pool.cache, jnp.asarray(bt),
+                jnp.asarray([req.pos], jnp.int32), jnp.asarray(tokens),
+                jnp.asarray(wphys), jnp.asarray(woff))
+            req.pending_tokens = req.pending_tokens[T:]
+            req.pos += T
+            budget -= T
+            self.stats.prefill_tokens += T
+            if not req.pending_tokens:  # prompt complete: first token
+                self._prefill_order.remove(req)
+                logits_last = logits[0, T - 1]
+                if req.temperature > 0:
+                    self._key, sub = jax.random.split(self._key)
+                    tok = int(sample(logits_last[None, :], sub,
+                                     temperature=req.temperature)[0])
+                else:
+                    tok = int(jnp.argmax(logits_last))
+                req.output.append(tok)
+                req.last_token = tok
+                req.first_token_at = time.perf_counter()
+                self._check_done(req)
+
+    def _decode_step_paged(self) -> list:
+        """One batched decode over every sequence past prefill.  The
+        batch is padded to a power of two (padding rows carry the null
+        block table and length 0, so their writes land in the null
+        block), bounding recompilation to O(log max_running) shapes."""
+        active = [r for r in self.running.values()
+                  if not r.pending_tokens and not r.done and r.output]
+        if not active:
+            return []
+        for r in active:
+            self._ensure_writable(r, r.pos, 1)
+        B = 1
+        while B < len(active):
+            B *= 2
+        mb = self.pool.max_blocks
+        bs = self.block_size
+        bt = np.zeros((B, mb), np.int32)
+        lens = np.zeros((B,), np.int32)
+        tokens = np.zeros((B,), np.int32)
+        wphys = np.zeros((B, 1), np.int32)
+        woff = np.zeros((B, 1), np.int32)
+        temps = np.zeros((B,), np.float32)
+        for i, r in enumerate(active):
+            bt[i, :len(r.table)] = r.table
+            lens[i] = r.pos
+            tokens[i] = r.last_token
+            p = min(r.pos, mb * bs - 1)  # clamp like the slot pool
+            wphys[i, 0] = r.table[p // bs]
+            woff[i, 0] = p % bs
+            temps[i] = r.temperature
+        self._key, sub = jax.random.split(self._key)
+        self.pool.cache, logits = self._paged_decode(
+            self.params, self.pool.cache, jnp.asarray(bt),
+            jnp.asarray(lens), jnp.asarray(tokens), jnp.asarray(wphys),
+            jnp.asarray(woff))
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        sampled = sample(logits, sub, temperature=1.0)
+        toks = np.asarray(jnp.where(jnp.asarray(temps) > 0, sampled, greedy))
+        events = []
+        for i, r in enumerate(active):
+            tok = int(toks[i])
+            r.output.append(tok)
+            r.last_token = tok
+            r.pos += 1
+            events.append((r.uid, tok))
+            self.stats.decode_tokens += 1
+            self._check_done(r)
+        return events
+
+    def _collect_finished_paged(self) -> list:
+        """Retire finished requests.  With prefix reuse on, the block
+        table transfers to a residency entry (no refcount change — the
+        references move, they are not duplicated), so the blocks stay
+        shareable until block-granular eviction reclaims them."""
+        done = []
+        for uid, req in list(self.running.items()):
+            if not req.done:
+                continue
+            del self.running[uid]
+            if req in self._prefill_order:
+                self._prefill_order.remove(req)
+            self._reserved -= req.reserve_left
+            req.reserve_left = 0
+            if self._prefix_reuse and not req.truncated and req.table:
+                seq = tuple(req.prompt) + tuple(req.output)
+                res_id = next(self._res_counter)
+                self._residency[res_id] = _Residency(tuple(req.table),
+                                                     len(seq))
+                for b in req.table:
+                    self._res_holds[b] = self._res_holds.get(b, 0) + 1
+                self._prefix_index.insert(seq, res_id)
+            else:
+                for b in req.table:
+                    self.pool.alloc.free(b)
+            req.table = []
+            done.append(req)
+        return done
 
 
 def make_engine_from_scratch(cfg: ModelConfig, *, seed=0, **kw):

@@ -11,7 +11,7 @@ import pytest
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 from benchmarks.check_bench_json import (CheckFailed, check_affinity,  # noqa: E402
                                          check_autoscale, check_multimodel,
-                                         main)
+                                         check_paged, main)
 
 
 def affinity_rows():
@@ -55,10 +55,26 @@ def multimodel_rows():
     ]
 
 
+def paged_rows():
+    return [
+        {"scenario": "paged_compare", "engine": "monolithic",
+         "max_num_seqs": 4, "max_len": 64, "block_size": None,
+         "num_blocks": None, "requests": 13, "peak_concurrent": 4,
+         "prefix_reuse_hits": 9, "prefix_cached_tokens": 108,
+         "shared_block_peak": 0, "cow_copies": 0, "tokens_match": True},
+        {"scenario": "paged_compare", "engine": "paged",
+         "max_num_seqs": 4, "max_len": 64, "block_size": 8,
+         "num_blocks": 33, "requests": 13, "peak_concurrent": 12,
+         "prefix_reuse_hits": 12, "prefix_cached_tokens": 144,
+         "shared_block_peak": 12, "cow_copies": 12, "tokens_match": True},
+    ]
+
+
 def test_good_rows_pass():
     check_affinity(affinity_rows())
     check_autoscale(autoscale_rows())
     check_multimodel(multimodel_rows())
+    check_paged(paged_rows())
 
 
 def test_affinity_catches_missing_policy_and_dead_hits():
@@ -99,6 +115,27 @@ def test_multimodel_catches_wrong_route_and_missing_rebalance():
     rows[1]["service_cores"] = 2  # groups no longer sum to the ledger
     with pytest.raises(CheckFailed):
         check_multimodel(rows)
+
+
+def test_paged_catches_mismatch_and_unshared_blocks():
+    rows = paged_rows()
+    rows[1]["tokens_match"] = False  # paged output diverged
+    with pytest.raises(CheckFailed):
+        check_paged(rows)
+    rows = paged_rows()
+    rows[1]["peak_concurrent"] = 4  # never admitted past the slot ceiling
+    with pytest.raises(CheckFailed):
+        check_paged(rows)
+    rows = paged_rows()
+    rows[1]["shared_block_peak"] = 0  # no physical sharing observed
+    with pytest.raises(CheckFailed):
+        check_paged(rows)
+    rows = paged_rows()
+    rows[1]["cow_copies"] = 0  # divergence never copy-on-wrote
+    with pytest.raises(CheckFailed):
+        check_paged(rows)
+    with pytest.raises(CheckFailed):
+        check_paged(paged_rows()[:1])  # an engine's row is missing
 
 
 def test_main_exit_codes(tmp_path):

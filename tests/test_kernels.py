@@ -5,8 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.decode_attention.ops import decode_attention
-from repro.kernels.decode_attention.ref import decode_ref
+from repro.kernels.decode_attention.ops import (decode_attention,
+                                                paged_decode_attention)
+from repro.kernels.decode_attention.ref import (decode_ref, gather_kv,
+                                                paged_decode_ref)
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.mamba2.ops import ssd
@@ -58,6 +60,107 @@ def test_decode_attention(B, S, Hq, Hkv, D, bk):
                      lens).reshape(B, 1, Hq, D)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-5, atol=2e-5)
+
+
+def _paged_setup(key, B, num_blocks, bs, mb, Hq, Hkv, D, *, permute=True):
+    """Random paged stores + per-sequence block tables with DISTINCT,
+    permuted physical blocks and ragged lengths (including lengths not a
+    multiple of block_size)."""
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, 1, Hq, D))
+    k_store = jax.random.normal(ks[1], (num_blocks, bs, Hkv, D))
+    v_store = jax.random.normal(ks[2], (num_blocks, bs, Hkv, D))
+    # physical blocks 1..num_blocks-1 dealt without repeats (block 0 is
+    # the null block), shuffled so tables are non-contiguous
+    perm = np.arange(1, num_blocks)
+    if permute:
+        perm = np.asarray(jax.random.permutation(ks[3], perm))
+    bt = np.zeros((B, mb), np.int32)
+    flat = perm[:B * mb]
+    bt[:, :] = flat.reshape(B, mb)
+    lens = np.asarray(jax.random.randint(ks[4], (B,), 1, mb * bs + 1),
+                      np.int32)
+    # logical blocks past each length point at the null block, as the
+    # engine guarantees
+    for b in range(B):
+        used = -(-int(lens[b]) // bs)
+        bt[b, used:] = 0
+    return q, k_store, v_store, jnp.asarray(bt), jnp.asarray(lens)
+
+
+@pytest.mark.parametrize("B,num_blocks,bs,mb,Hq,Hkv,D", [
+    (2, 17, 16, 4, 4, 2, 32),     # ragged lens, permuted tables
+    (3, 32, 8, 6, 8, 4, 16),      # small blocks, more heads
+    (1, 9, 32, 8, 2, 1, 64),      # single sequence, MHA-degenerate
+])
+def test_paged_decode_attention(B, num_blocks, bs, mb, Hq, Hkv, D):
+    """Paged kernel vs the gather-then-dense oracle."""
+    q, ks_, vs_, bt, lens = _paged_setup(
+        jax.random.PRNGKey(5), B, num_blocks, bs, mb, Hq, Hkv, D)
+    out = paged_decode_attention(q, ks_, vs_, bt, lens, interpret=True)
+    ref = paged_decode_ref(q[:, 0].reshape(B, Hkv, Hq // Hkv, D),
+                           ks_, vs_, bt, lens).reshape(B, 1, Hq, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_matches_contiguous_kernel():
+    """The paged kernel on a blocked store equals the contiguous kernel on
+    the gathered caches — the two engine paths agree bit-for-bit up to
+    float tolerance, whatever the block-table permutation."""
+    B, num_blocks, bs, mb, Hq, Hkv, D = 2, 13, 16, 3, 4, 2, 32
+    q, ks_, vs_, bt, lens = _paged_setup(
+        jax.random.PRNGKey(6), B, num_blocks, bs, mb, Hq, Hkv, D)
+    paged = paged_decode_attention(q, ks_, vs_, bt, lens, interpret=True)
+    kc, vc = gather_kv(ks_, bt), gather_kv(vs_, bt)
+    contig = decode_attention(q, kc, vc, lens, block_k=bs, interpret=True)
+    np.testing.assert_allclose(np.asarray(paged), np.asarray(contig),
+                               rtol=2e-6, atol=2e-6)
+
+
+def test_paged_decode_block_size_edges():
+    """Lengths straddling block boundaries: 1, block_size-1, block_size,
+    block_size+1, and full capacity all mask correctly."""
+    num_blocks, bs, mb, Hq, Hkv, D = 23, 8, 4, 4, 2, 16
+    edge_lens = [1, bs - 1, bs, bs + 1, mb * bs]
+    B = len(edge_lens)
+    q, ks_, vs_, _, _ = _paged_setup(
+        jax.random.PRNGKey(7), B, num_blocks, bs, mb, Hq, Hkv, D)
+    lens = jnp.asarray(edge_lens, jnp.int32)
+    # deal fresh full tables (distinct shuffled physical blocks), then
+    # null exactly the logical blocks past each edge length
+    perm = np.asarray(jax.random.permutation(jax.random.PRNGKey(17),
+                                             np.arange(1, num_blocks)))
+    bt_np = perm[:B * mb].reshape(B, mb).astype(np.int32).copy()
+    for b in range(B):
+        bt_np[b, -(-edge_lens[b] // bs):] = 0
+    bt = jnp.asarray(bt_np)
+    out = paged_decode_attention(q, ks_, vs_, bt, lens, interpret=True)
+    ref = paged_decode_ref(q[:, 0].reshape(B, Hkv, Hq // Hkv, D),
+                           ks_, vs_, bt, lens).reshape(B, 1, Hq, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_table_permutation_invariance():
+    """Physically relocating blocks (and rewriting the tables to match)
+    must not change the output: attention depends only on the logical
+    sequence the table reconstructs."""
+    B, num_blocks, bs, mb, Hq, Hkv, D = 2, 11, 8, 4, 4, 2, 16
+    q, ks_, vs_, bt, lens = _paged_setup(
+        jax.random.PRNGKey(8), B, num_blocks, bs, mb, Hq, Hkv, D,
+        permute=False)
+    out1 = paged_decode_attention(q, ks_, vs_, bt, lens, interpret=True)
+    # relocate: physical block p -> perm[p], stores shuffled to match
+    perm = np.concatenate([[0], 1 + np.asarray(
+        jax.random.permutation(jax.random.PRNGKey(9), num_blocks - 1))])
+    inv = np.argsort(perm)
+    ks2 = jnp.asarray(np.asarray(ks_)[inv])
+    vs2 = jnp.asarray(np.asarray(vs_)[inv])
+    bt2 = jnp.asarray(perm[np.asarray(bt)])
+    out2 = paged_decode_attention(q, ks2, vs2, bt2, lens, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=0, atol=0)
 
 
 @pytest.mark.parametrize("B,T,H,hd,chunk", [

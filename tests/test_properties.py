@@ -321,3 +321,106 @@ def test_hw_bounded_by_distinct_types(transitions):
     for k, v in open_tasks.items():
         log.emit(k, "DONE", v)
     assert log.peak_hw() <= len(types)
+
+
+# ---------------------------------------------------------------------------
+# Paged-KV block allocator: conservation under allocate/fork/free
+# interleavings — no block leaked, no double-free, refcounts always equal
+# the live reference multiset (the copy-on-write safety invariant)
+# ---------------------------------------------------------------------------
+
+
+_block_ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("alloc")),
+        st.tuples(st.just("fork"), st.integers(0, 255)),
+        st.tuples(st.just("free"), st.integers(0, 255)),
+    ),
+    min_size=1, max_size=80)
+
+
+@settings(max_examples=60, deadline=None)
+@given(num_blocks=st.integers(2, 12), ops=_block_ops)
+def test_block_allocator_refcount_conservation(num_blocks, ops):
+    """Ground-truth model: a multiset of references (one entry per block
+    table pointing at a block).  After every op the allocator's refcounts
+    must equal the model exactly, free + live must cover capacity, the
+    null block must never be handed out, and ``block_savings`` must equal
+    the model's duplicate count."""
+    from repro.serving.kvcache import NULL_BLOCK, BlockAllocator
+
+    alloc = BlockAllocator(num_blocks)
+    refs: list = []  # one element per live reference
+
+    def check():
+        assert alloc.n_free + alloc.n_live == alloc.capacity  # no leak
+        assert alloc.refcount(NULL_BLOCK) == 0
+        for b in range(1, num_blocks):
+            assert alloc.refcount(b) == refs.count(b)
+        assert alloc.block_savings() == sum(
+            max(0, refs.count(b) - 1) for b in set(refs))
+
+    for op in ops:
+        if op[0] == "alloc":
+            b = alloc.allocate()
+            if b is None:  # exhausted, never silently over-allocated
+                assert alloc.n_free == 0
+            else:
+                assert b != NULL_BLOCK
+                assert b not in refs  # a free block has no live refs
+                refs.append(b)
+        elif op[0] == "fork":
+            if refs:  # fork only ever targets a live block (engine rule)
+                b = refs[op[1] % len(refs)]
+                alloc.fork(b)
+                refs.append(b)
+        else:  # free drops ONE reference; last one returns the block
+            if refs:
+                b = refs.pop(op[1] % len(refs))
+                became_free = alloc.free(b)
+                assert became_free == (b not in refs)
+        check()
+    # drain: releasing every reference restores full capacity
+    while refs:
+        alloc.free(refs.pop())
+    assert alloc.n_free == alloc.capacity
+    assert alloc.block_savings() == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(num_blocks=st.integers(3, 10), ops=_block_ops)
+def test_block_allocator_cow_conservation(num_blocks, ops):
+    """Copy-on-write as the engine performs it (allocate fresh, free the
+    shared original's reference) conserves blocks: interpreting each op
+    triple as fork-then-cow on a random shared block keeps free + live ==
+    capacity and never double-frees."""
+    from repro.serving.kvcache import BlockAllocator
+
+    alloc = BlockAllocator(num_blocks)
+    refs: list = []
+    for op in ops:
+        if op[0] == "alloc":
+            b = alloc.allocate()
+            if b is not None:
+                refs.append(b)
+        elif op[0] == "fork":
+            if refs:
+                b = refs[op[1] % len(refs)]
+                alloc.fork(b)
+                refs.append(b)
+        else:  # cow: a shared block gets a private replacement
+            shared = [b for b in refs if alloc.refcount(b) > 1]
+            if shared:
+                old = shared[op[1] % len(shared)]
+                new = alloc.allocate()
+                if new is None:
+                    continue  # pool full: engine would evict first
+                assert alloc.free(old) is False  # others still hold it
+                refs.remove(old)
+                refs.append(new)
+        assert alloc.n_free + alloc.n_live == alloc.capacity
+        for b in set(refs):
+            assert alloc.refcount(b) == refs.count(b)
+    while refs:
+        alloc.free(refs.pop())
+    assert alloc.n_free == alloc.capacity

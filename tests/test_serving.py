@@ -277,3 +277,44 @@ def test_prefix_reuse_slot_contention(small_lm):
     u3 = eng.submit(p3, max_new_tokens=3)
     out3 = eng.run()[u3].output
     assert out3 == _ref_generate(api, params, cfg, p3, 3)
+
+
+def test_cache_pool_allocation_order_regression(small_lm):
+    """The O(1) two-deque free list must preserve the exact allocation
+    order of the old linear scan: blank slots FIFO first, then resident
+    slots in least-recently-retired (coldest-eviction) order."""
+    cfg, _, _ = small_lm
+    pool = CachePool(cfg, max_seqs=5, max_len=32)
+    slots = [pool.allocate() for _ in range(5)]
+    assert pool.allocate() is None
+    # retire in a known order: 2 and 4 resident (2 is colder), rest blank
+    pool.free(slots[2], resident=True)
+    pool.free(slots[0])
+    pool.free(slots[4], resident=True)
+    pool.free(slots[1])
+    assert pool.n_free == 4 and pool.n_free_blank == 2
+    # blanks pop in FIFO retirement order...
+    assert pool.allocate() == slots[0]
+    assert pool.allocate() == slots[1]
+    # ...then residents, coldest (earliest-retired) first
+    assert pool.allocate() == slots[2]
+    assert pool.allocate() == slots[4]
+    assert pool.allocate() is None
+
+
+def test_cache_pool_take_specific_slot(small_lm):
+    """take() claims a specific slot from either free queue (the prefix-
+    resume path) and refuses busy slots."""
+    cfg, _, _ = small_lm
+    pool = CachePool(cfg, max_seqs=3, max_len=32)
+    a, b, c = (pool.allocate() for _ in range(3))
+    pool.free(a, resident=True)
+    pool.free(b)
+    assert pool.take(c) is False          # busy: not in any free queue
+    assert pool.take(a) is True           # resident queue
+    assert pool.take(a) is False          # no double-take
+    assert pool.take(b) is True           # blank queue
+    assert pool.n_free == 0
+    # a re-freed taken slot goes back to the blank queue unless re-marked
+    pool.free(a)
+    assert pool.n_free_blank == 1
