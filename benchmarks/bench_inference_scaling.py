@@ -26,10 +26,14 @@ replica.
 
 ``--paged`` runs the block-paged KV comparison: a branching-session load
 (one shared stem, many divergent suffixes) against a slot-pool engine and
-a block-paged engine at MEMORY PARITY (same KV cells).  Validation
-(``check_bench_json.py paged``) asserts exact greedy-token equivalence,
-concurrency above the slot pool's ``max_num_seqs`` ceiling, and measured
-physical-block sharing (copy-on-write reuse > 0).
+BOTH paged decode paths (legacy gather round-trip and the default direct
+kernel) at MEMORY PARITY (same KV cells), plus a small replicated paged
+service whose per-group ``block_telemetry`` lands in the JSON.
+Validation (``check_bench_json.py paged``) asserts exact greedy-token
+equivalence across all three engines, concurrency above the slot pool's
+``max_num_seqs`` ceiling, measured physical-block sharing (copy-on-write
+reuse > 0), direct decode throughput no worse than the gather round-trip,
+and sane free/shared block telemetry.
 """
 from __future__ import annotations
 
@@ -398,18 +402,57 @@ def _drive(eng, prompts, new_tokens: int):
     return [done[u].output for u in uids], peak
 
 
+def _decode_burst(eng, prompts, new_tokens: int, repeats: int = 3) -> float:
+    """Decode-phase throughput on a warm engine (the caller already
+    compiled every jitted branch): admit + prefill run UNTIMED, then the
+    pure decode steps are timed and ``decode_tokens/s`` reported — the
+    number that isolates the gather round-trip vs direct-kernel decode
+    cost from prefill and compile noise.  Best of ``repeats`` bursts, the
+    standard microbenchmark answer to scheduler jitter on a shared CI
+    host."""
+    best = 0.0
+    for _ in range(repeats):
+        for p in prompts:
+            eng.submit(p, max_new_tokens=new_tokens)
+
+        def prefilling() -> bool:
+            return bool(eng.queue) or any(
+                r.pending_tokens and not r.done
+                for r in eng.running.values())
+
+        while eng.has_work() and prefilling():
+            eng.step()
+            eng.collect_finished()
+        d0 = eng.stats.decode_tokens
+        t0 = time.perf_counter()
+        while eng.has_work():
+            eng.step()
+            eng.collect_finished()
+        dt = time.perf_counter() - t0
+        best = max(best, (eng.stats.decode_tokens - d0) / max(1e-9, dt))
+    return best
+
+
 def run_paged_compare(*, max_num_seqs: int = 4, max_len: int = 64,
                       block_size: int = 8, n_branches: int = 12,
-                      prompt_len: int = 12, new_tokens: int = 6) -> list:
+                      prompt_len: int = 12, new_tokens: int = 6,
+                      burst_tokens: int = 32) -> list:
     """Branching-session load (one stem, many divergent suffixes) on a
-    slot-pool engine and a block-paged engine at MEMORY PARITY (the paged
-    pool defaults to the slot pool's KV cell count).  The stem runs first
-    so its KV is resident when the branch burst arrives: the slot pool can
-    resume ONE slot and must prefill the rest into its ``max_num_seqs``
-    slots, while the paged engine forks the stem's blocks into every
-    branch's table (refcount sharing) and admits the whole burst at once,
-    copy-on-write duplicating only the divergence-boundary block.  Greedy
-    outputs must match token-for-token."""
+    slot-pool engine and BOTH block-paged decode paths at MEMORY PARITY
+    (the paged pool defaults to the slot pool's KV cell count).  The stem
+    runs first so its KV is resident when the branch burst arrives: the
+    slot pool can resume ONE slot and must prefill the rest into its
+    ``max_num_seqs`` slots, while the paged engines fork the stem's blocks
+    into every branch's table (refcount sharing) and admit the whole burst
+    at once, copy-on-write duplicating only the divergence-boundary block.
+
+    Three rows: ``monolithic`` (slot pool), ``paged_gather`` (legacy
+    gather/scatter round-trip, ``paged_decode_mode="gather"``), and
+    ``paged`` (the default direct path — new K/V written straight into the
+    tail block, attention through the block table).  Greedy outputs must
+    match token-for-token across all three, and a warm decode-only burst
+    measures ``decode_tokens_per_s`` so ``check_bench_json.py paged`` can
+    gate direct >= gather."""
     cfg = engine_cfg()
     kw = dict(max_num_seqs=max_num_seqs, max_len=max_len,
               prefill_buckets=(16, 32), seed=0)
@@ -419,36 +462,85 @@ def run_paged_compare(*, max_num_seqs: int = 4, max_len: int = 64,
                 for _ in range(n_branches)]
     outs = {}
     rows = []
-    for name in ("monolithic", "paged"):
-        eng = make_engine_from_scratch(
-            cfg, **kw, **({"paged": True, "block_size": block_size}
-                          if name == "paged" else {}))
+    variants = (
+        ("monolithic", {}),
+        ("paged_gather", {"paged": True, "block_size": block_size,
+                          "paged_decode_mode": "gather"}),
+        ("paged", {"paged": True, "block_size": block_size}),  # direct
+    )
+    for name, extra in variants:
+        eng = make_engine_from_scratch(cfg, **kw, **extra)
         t0 = time.perf_counter()
         stem_out, _ = _drive(eng, [stem], new_tokens)
         branch_out, peak = _drive(eng, branches, new_tokens)
         dt = time.perf_counter() - t0
+        # everything is compiled now: measure pure decode throughput
+        # (best of 3 warm bursts — see _decode_burst)
+        decode_tps = _decode_burst(eng, branches, burst_tokens)
         outs[name] = stem_out + branch_out
         st = eng.stats
+        tel = eng.block_telemetry()
         rows.append({
             "scenario": "paged_compare",
             "engine": name,
+            "decode_mode": (extra.get("paged_decode_mode", "direct")
+                            if extra.get("paged") else None),
             "max_num_seqs": max_num_seqs,
             "max_len": max_len,
-            "block_size": block_size if name == "paged" else None,
-            "num_blocks": eng.num_blocks if name == "paged" else None,
+            "block_size": block_size if extra.get("paged") else None,
+            "num_blocks": eng.num_blocks if extra.get("paged") else None,
             "requests": 1 + n_branches,
             "seconds": dt,
             "tokens_per_s": st.tokens_per_s,
+            "decode_tokens_per_s": decode_tps,
             "peak_concurrent": peak,
             "prefix_reuse_hits": st.prefix_reuse_hits,
             "prefix_cached_tokens": st.prefix_cached_tokens,
             "shared_block_peak": st.shared_block_peak,
             "cow_copies": st.cow_copies,
+            # live pool gauges at quiescence (paged rows only)
+            "free_blocks": tel["free_blocks"] if tel else None,
+            "reserved_blocks": tel["reserved_blocks"] if tel else None,
         })
-    match = outs["monolithic"] == outs["paged"]
+    match = (outs["monolithic"] == outs["paged_gather"] == outs["paged"])
     for r in rows:
         r["tokens_match"] = match
     return rows
+
+
+def run_paged_service(*, n_replicas: int = 2, requests: int = 8,
+                      prompt_len: int = 12, new_tokens: int = 6) -> list:
+    """Small replicated PAGED service: exercises the telemetry pipeline
+    the router's headroom weighting consumes — per-replica engine
+    ``block_telemetry()`` aggregated per model group by
+    ``ReplicaSet.stats()["per_group"][g]["block_telemetry"]``.  One JSON
+    row per group; ``check_bench_json.py paged`` asserts the
+    ``free_blocks``/``shared_blocks`` keys are present and sane."""
+    cfg = engine_cfg()
+    rh = Rhapsody(ResourceDescription(nodes=n_replicas, cores_per_node=16),
+                  policy=ExecutionPolicy(routing="least_loaded"),
+                  n_workers=2)
+    try:
+        rs = rh.add_service(ServiceDescription(
+            name="llm", replicas=n_replicas,
+            factory=llm_service_factory(
+                cfg, max_num_seqs=4, max_len=64, prefill_buckets=(16,),
+                paged=True, block_size=8)))
+        futs = [rs.request({"prompt": [7] * prompt_len,
+                            "max_new_tokens": new_tokens})
+                for _ in range(requests)]
+        for f in futs:
+            f.result(timeout=600)
+        stats = rs.stats()
+        return [{
+            "scenario": "paged_service",
+            "group": g,
+            "replicas": gs["replicas"],
+            "requests": gs["requests"],
+            "block_telemetry": gs["block_telemetry"],
+        } for g, gs in stats["per_group"].items()]
+    finally:
+        rh.close()
 
 
 if __name__ == "__main__":
@@ -474,18 +566,26 @@ if __name__ == "__main__":
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
     if args.paged:
-        rows = run_paged_compare(block_size=args.block_size,
-                                 n_branches=args.branches)
+        rows = (run_paged_compare(block_size=args.block_size,
+                                  n_branches=args.branches)
+                + run_paged_service())
         if args.json:
             print(json.dumps(rows, indent=2))
         else:
             for r in rows:
-                print(f"[paged] {r['engine']:>10s} "
+                if r["scenario"] == "paged_service":
+                    print(f"[paged] service group={r['group']} "
+                          f"x{r['replicas']} "
+                          f"telemetry={r['block_telemetry']}")
+                    continue
+                print(f"[paged] {r['engine']:>12s} "
                       f"peak={r['peak_concurrent']} "
                       f"(slots {r['max_num_seqs']}) "
                       f"shared={r['shared_block_peak']} "
                       f"cow={r['cow_copies']} "
                       f"hits={r['prefix_reuse_hits']} "
+                      f"decode={r['decode_tokens_per_s']:.0f}tok/s "
+                      f"free={r['free_blocks']} "
                       f"match={r['tokens_match']} "
                       f"{r['seconds']:.1f}s")
         raise SystemExit(0)

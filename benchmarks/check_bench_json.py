@@ -128,26 +128,67 @@ def check_multimodel(rows: list) -> None:
 
 
 def check_paged(rows: list) -> None:
-    """bench_inference_scaling --paged: one row per engine, identical
-    greedy tokens, and the paged engine must demonstrate what paging buys
-    at memory parity — concurrency above the slot pool's ``max_num_seqs``
-    ceiling, physical-block sharing (refcount > 1 somewhere at peak), and
-    at least one copy-on-write divergence."""
-    _require(len(rows) == 2, "expected one row per engine", rows)
-    by = {r.get("engine"): r for r in rows}
-    _require(set(by) == {"monolithic", "paged"},
-             "rows must cover both engines", sorted(by))
-    for r in rows:
+    """bench_inference_scaling --paged: one row per engine (slot pool,
+    paged gather round-trip, paged direct kernel), identical greedy
+    tokens across all three, and the paged engines must demonstrate what
+    paging buys at memory parity — concurrency above the slot pool's
+    ``max_num_seqs`` ceiling, physical-block sharing (refcount > 1
+    somewhere at peak), at least one copy-on-write divergence, live
+    free/reserved block gauges, and a DIRECT decode path no slower than
+    the gather/scatter round-trip it replaced.  The service rows carry the
+    per-group ``block_telemetry`` aggregate out of
+    ``ReplicaSet.stats()`` — the numbers the router's headroom weighting
+    runs on."""
+    eng_rows = [r for r in rows if r.get("scenario") == "paged_compare"]
+    svc_rows = [r for r in rows if r.get("scenario") == "paged_service"]
+    _require(len(eng_rows) == 3, "expected one row per engine", eng_rows)
+    by = {r.get("engine"): r for r in eng_rows}
+    _require(set(by) == {"monolithic", "paged_gather", "paged"},
+             "rows must cover all three engines", sorted(by))
+    for r in eng_rows:
         _require(r.get("requests", 0) > 0, "engine served nothing", r)
         _require(r.get("tokens_match") is True,
                  "paged and slot-pool engines disagree on greedy tokens", r)
-    mono, paged = by["monolithic"], by["paged"]
-    _require(paged["peak_concurrent"] > mono["max_num_seqs"],
-             "paged engine never admitted past the slot ceiling", paged)
-    _require(paged.get("shared_block_peak", 0) > 0,
-             "no physical-block sharing observed", paged)
-    _require(paged.get("cow_copies", 0) > 0,
-             "no copy-on-write divergence observed", paged)
+    mono, gather, direct = by["monolithic"], by["paged_gather"], by["paged"]
+    _require(gather.get("decode_mode") == "gather"
+             and direct.get("decode_mode") == "direct",
+             "paged rows mislabel their decode mode", eng_rows)
+    for paged in (gather, direct):
+        _require(paged["peak_concurrent"] > mono["max_num_seqs"],
+                 "paged engine never admitted past the slot ceiling", paged)
+        _require(paged.get("shared_block_peak", 0) > 0,
+                 "no physical-block sharing observed", paged)
+        _require(paged.get("cow_copies", 0) > 0,
+                 "no copy-on-write divergence observed", paged)
+        # live gauges: at quiescence nothing is reserved and the pool
+        # holds a sane free count (residency retention may keep blocks)
+        _require(paged.get("free_blocks") is not None
+                 and 0 <= paged["free_blocks"] <= paged["num_blocks"],
+                 "free_blocks gauge missing or out of range", paged)
+        _require(paged.get("reserved_blocks") == 0,
+                 "blocks still reserved at quiescence", paged)
+    # direct decode must not regress the gather round-trip it replaced;
+    # the 0.9 factor only absorbs CI timer noise (the bench margin is
+    # typically > 1.1x in direct's favor)
+    _require(direct.get("decode_tokens_per_s", 0)
+             >= 0.9 * gather.get("decode_tokens_per_s", 0),
+             "direct paged decode slower than the gather round-trip",
+             {"direct": direct.get("decode_tokens_per_s"),
+              "gather": gather.get("decode_tokens_per_s")})
+    # per-group telemetry out of ReplicaSet.stats(): the router's
+    # headroom-weighting inputs must survive the full service pipeline
+    _require(bool(svc_rows), "no paged_service telemetry rows", rows)
+    for r in svc_rows:
+        tel = r.get("block_telemetry")
+        _require(isinstance(tel, dict),
+                 "service group reported no block_telemetry", r)
+        _require({"free_blocks", "total_blocks", "shared_blocks",
+                  "cow_copies"} <= set(tel),
+                 "block_telemetry missing keys", tel)
+        _require(0 <= tel["free_blocks"] <= tel["total_blocks"],
+                 "free_blocks out of range", tel)
+        _require(tel.get("reporting_replicas", 0) >= 1,
+                 "no replica reported block telemetry", tel)
 
 
 CHECKS = {

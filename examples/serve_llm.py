@@ -40,8 +40,18 @@ replicas, so a request can never land on a wrong-model engine.  Per-group
 request counts, latency, and ledger claims land in
 ``ReplicaSet.stats()["per_group"]``.
 
+KV paging (``--paged``/``--no-paged``, default auto = ON for the demo's
+dense config): replicas run the block-paged engine — admission by
+free-block count, chunked prefill interleaved with decode, copy-on-write
+prefix sharing, and direct paged decode (no gathered-view round-trip).
+``--block-size``/``--num-blocks`` tune the pool; per-group free/shared
+block telemetry lands in ``ReplicaSet.stats()["per_group"]
+["block_telemetry"]`` and is printed after the run.  Works with
+``--multi-model`` (both groups get the same paging knobs).
+
 Run: PYTHONPATH=src python examples/serve_llm.py [--requests 24] [--replicas 2]
      PYTHONPATH=src python examples/serve_llm.py --multi-model --replicas 3
+     PYTHONPATH=src python examples/serve_llm.py --paged --block-size 16
 """
 import argparse
 import time
@@ -65,6 +75,16 @@ def main():
                     help="serve a chat + draft model pair from ONE "
                          "replica set (weights 2:1), requests addressed "
                          "per model")
+    ap.add_argument("--paged", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="block-paged KV engine per replica (default auto: "
+                         "ON for dense/moe configs; --no-paged forces the "
+                         "slot pool)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV positions per physical block (paged)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="physical KV blocks per replica; default matches "
+                         "the slot pool's memory budget (paged)")
     args = ap.parse_args()
 
     cfg = get_config("rhapsody-demo")
@@ -75,7 +95,10 @@ def main():
     model_names = []
     try:
         engine_kw = dict(max_num_seqs=4, max_len=256,
-                         prefill_buckets=(32, 64, 128))
+                         prefill_buckets=(32, 64, 128),
+                         # None = auto-resolve per config (see LLMServicer)
+                         paged=args.paged, block_size=args.block_size,
+                         num_blocks=args.num_blocks)
         if args.multi_model:
             # two model configs, one service: the draft model is the same
             # family scaled down (a speculative-decoding-style sidecar)
@@ -134,6 +157,13 @@ def main():
                   {g: {"replicas": s["replicas"],
                        "requests": s["requests"], "cores": s["cores"]}
                    for g, s in per_group.items()})
+        btel = {g: s.get("block_telemetry")
+                for g, s in replica_set.stats()["per_group"].items()}
+        if any(t is not None for t in btel.values()):
+            print("paged-block telemetry per group:",
+                  {g: {"free": t["free_blocks"], "total": t["total_blocks"],
+                       "shared": t["shared_blocks"], "cow": t["cow_copies"]}
+                   for g, t in btel.items() if t is not None})
         if args.routing == "prefix_affinity":
             stats = replica_set.stats()
             hits, misses = stats["prefix_hits"], stats["prefix_misses"]

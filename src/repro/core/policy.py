@@ -32,6 +32,13 @@ class ExecutionPolicy:
     affinity_min_match: int = 8  # radix_affinity: shortest common prefix
     #                              that counts as a match (shorter ones
     #                              route by load, not stickiness)
+    affinity_headroom_watermark: float = 0.1  # radix_affinity: a member
+    #                              whose gossiped free-block fraction
+    #                              falls below this ranks after every
+    #                              non-starved prefix match (its engine
+    #                              is about to evict the matched
+    #                              residency); <=0 disables headroom
+    #                              weighting
     residency_sync_every: int = 32  # routed requests between residency
     #                                 gossip pulls from the replicas'
     #                                 engines (0 disables the periodic

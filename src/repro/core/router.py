@@ -236,6 +236,12 @@ class Router:
         """Feed one member's resident prefix sequences (replica-set
         gossip); affinity-blind routers ignore it."""
 
+    def update_headroom(self, affinity_group, member, free: int,
+                        capacity: int):
+        """Feed one member's physical KV headroom (free / total blocks,
+        replica-set gossip); routers without headroom awareness ignore
+        it."""
+
     def forget_member(self, affinity_group, member):
         """Drop all sticky state pointing at ``member`` (it left the
         replica set for good); affinity-blind routers ignore it."""
@@ -473,25 +479,36 @@ class RadixAffinityRouter(LeastLoadedRouter):
     falls back to least-loaded when no other member knows the prefix.
     Assignments name stable member identities, so membership churn
     re-homes only sessions homed on a departed member.
+
+    Residency matches are additionally weighed by PHYSICAL headroom
+    (``update_headroom``, gossiped from the paged engines' free/total
+    block gauges): a member whose free-block fraction is below
+    ``headroom_watermark`` ranks after every non-starved match, so a
+    deep prefix match on a memory-starved replica — one about to evict
+    the very residency being matched — no longer beats a shallow match
+    (or an empty replica) with room to grow.
     """
 
     uses_affinity = True
     uses_residency = True
 
     def __init__(self, max_prefix: int = 128, min_match: int = 8,
-                 spill_factor: float = 2.0, map_capacity: int = 4096):
+                 spill_factor: float = 2.0, map_capacity: int = 4096,
+                 headroom_watermark: float = 0.1):
         super().__init__()
         self.max_prefix = max_prefix
         self.min_match = max(1, min_match)
         self.spill_factor = spill_factor
         self.map_capacity = map_capacity
+        self.headroom_watermark = headroom_watermark
 
     def signature(self, request) -> Optional[tuple]:
         return request_prefix(request, max_len=self.max_prefix)
 
     def _new_affinity_state(self):
         return {"sessions": RadixIndex(capacity=self.map_capacity),
-                "residency": RadixIndex(capacity=self.map_capacity)}
+                "residency": RadixIndex(capacity=self.map_capacity),
+                "headroom": {}}  # member -> (free_blocks, total_blocks)
 
     def update_residency(self, affinity_group, member, seqs):
         """Replace ``member``'s gossiped residency with ``seqs`` (its
@@ -505,6 +522,13 @@ class RadixAffinityRouter(LeastLoadedRouter):
             for s in list(seqs)[:1024]:
                 res.insert(tuple(s)[:self.max_prefix], member)
 
+    def update_headroom(self, affinity_group, member, free, capacity):
+        """Replace ``member``'s gossiped physical headroom (free / total
+        KV blocks of its paged engine)."""
+        with self._lock:
+            astate = self._affinity_state(affinity_group)
+            astate.setdefault("headroom", {})[member] = (free, capacity)
+
     def forget_member(self, affinity_group, member):
         with self._lock:
             astate = self._affinity.get(affinity_group)
@@ -512,6 +536,19 @@ class RadixAffinityRouter(LeastLoadedRouter):
                 return
             astate["sessions"].remove_value(member)
             astate["residency"].remove_value(member)
+            astate.get("headroom", {}).pop(member, None)
+
+    def _starved(self, astate, member) -> bool:
+        """True when the member's gossiped free-block fraction is below
+        the watermark — its next admissions will evict residency, so its
+        prefix matches should not win placement.  Members with no
+        gossiped headroom (slot-pool engines, pre-first-gossip) are never
+        starved."""
+        hr = astate.get("headroom", {}).get(member)
+        if hr is None:
+            return False
+        free, capacity = hr
+        return capacity > 0 and free < self.headroom_watermark * capacity
 
     def _pick_affinity(self, state, cost, queue_depths, affinity_key, info,
                        *, astate, members):
@@ -525,33 +562,45 @@ class RadixAffinityRouter(LeastLoadedRouter):
             if d > depth.get(v, 0):
                 depth[v] = d
         pos = {m: i for i, m in enumerate(members)}
-        ranked = [(d, pos[m]) for m, d in depth.items()
+        ranked = [(self._starved(astate, m), d, pos[m])
+                  for m, d in depth.items()
                   if d >= self.min_match and m in pos]
         # deepest match first; equal depths (e.g. several members holding
-        # the same shared stem) prefer the shallower live queue
+        # the same shared stem) prefer the shallower live queue; matches
+        # on memory-starved members rank after EVERY non-starved match,
+        # however shallow — their engine is about to evict the matched
+        # residency anyway, so the prefill saving is illusory
         ranked.sort(key=lambda t: (
-            -t[0], queue_depths[t[1]] if queue_depths is not None else 0.0))
+            t[0], -t[1],
+            queue_depths[t[2]] if queue_depths is not None else 0.0))
+        eligible = [t for t in ranked if not t[0]]
+        starved_max = max((d for s, d, _i in ranked if s), default=-1)
         outcome = "miss"
         idx = None
-        for _d, i in ranked:
+        for _s, d, i in eligible:
             if not self._overloaded(i, queue_depths):
                 idx = i
                 if outcome == "miss":
-                    outcome = "hit"
+                    # landing on a shallower match than a starved member's
+                    # deeper one is a headroom spill, not a plain hit
+                    outcome = "hit" if d >= starved_max else "spill"
                 break
             outcome = "spill"  # matching member overloaded: try the next-
             #                    longest matching prefix holder
-        if idx is None and ranked and queue_depths is not None and \
+        if idx is None and eligible and queue_depths is not None and \
                 self.spill_factor > 0 and \
-                queue_depths[ranked[0][1]] <= 2 * self.spill_factor * (
+                queue_depths[eligible[0][2]] <= 2 * self.spill_factor * (
                     min(queue_depths) + 1.0):
             # every prefix holder is past the eager threshold, but going
-            # COLD re-pays the whole prefill — stay with the deepest match
-            # until pressure doubles the spill threshold (two-tier spill:
-            # warm->warm moves are cheap, warm->cold moves are not)
-            idx = ranked[0][1]
-            outcome = "hit"
+            # COLD re-pays the whole prefill — stay with the deepest
+            # non-starved match until pressure doubles the spill threshold
+            # (two-tier spill: warm->warm moves are cheap, warm->cold
+            # moves are not)
+            idx = eligible[0][2]
+            outcome = "hit" if eligible[0][1] >= starved_max else "spill"
         if idx is None:
+            if ranked:
+                outcome = "spill"  # every match starved or overloaded
             idx = self._pick(state, cost, queue_depths)  # charges balance
         else:
             state["loads"][idx] += cost
@@ -592,5 +641,7 @@ def router_from_policy(policy) -> Router:
             "max_prefix": getattr(policy, "affinity_max_prefix", 128),
             "min_match": getattr(policy, "affinity_min_match", 8),
             "spill_factor": getattr(policy, "affinity_spill_factor", 2.0),
+            "headroom_watermark": getattr(
+                policy, "affinity_headroom_watermark", 0.1),
         }
     return make_router(kind, **kw)

@@ -666,6 +666,7 @@ class ReplicaSet:
         self._sync_residency()
         with self._lock:
             eps = list(self.endpoints)
+            insts = list(self.instances)
             per = [dict(ep.stats) for ep in eps]
             retired_pairs = [(ep.group, dict(ep.stats))
                              for ep in self._retired]
@@ -675,6 +676,22 @@ class ReplicaSet:
             dead = self._dead_count
             denied = self._admission_denied
         retired = [p for _, p in retired_pairs]
+        # live paged-pool gauges per replica (free/total/reserved/shared
+        # blocks, CoW copies, evictions): the physical-memory view the
+        # per-group aggregation and headroom-aware routing build on.
+        # Slot-pool engines (and replicas still starting up) report None.
+        block_tel: dict = {}  # replica_idx -> telemetry dict
+        for ep, inst in zip(eps, insts):
+            fn = getattr(getattr(inst, "servicer", None),
+                         "block_telemetry", None)
+            if fn is None or ep.retired:
+                continue
+            try:
+                tel = fn()
+            except Exception:
+                tel = None  # crashed mid-read: next stats tick retries
+            if tel:
+                block_tel[ep.replica_idx] = tel
         all_samples: list = []
         ep_samples: dict = {}  # replica_idx -> latency snapshot (reused by
         #                        the per-group aggregation below)
@@ -685,6 +702,7 @@ class ReplicaSet:
             p["group"] = ep.group
             p["latency_p95_ms"] = None if p95 is None else p95 * 1e3
             p["latency_histogram"] = ep.latency.histogram(samples=samples)
+            p["block_telemetry"] = block_tel.get(ep.replica_idx)
             if not ep.retired:
                 all_samples.extend(samples)
         agg = {k: folded[k] + sum(p[k] for p in per)
@@ -724,6 +742,17 @@ class ReplicaSet:
             claims = [ep.claim for ep in live if ep.claim is not None]
             gs["cores"] = sum(c.n_cores for c in claims)
             gs["gpus"] = sum(c.n_gpus for c in claims)
+            gtel = [block_tel[ep.replica_idx] for ep in live
+                    if ep.replica_idx in block_tel]
+            if gtel:
+                summed = {k: sum(t.get(k, 0) for t in gtel)
+                          for k in ("free_blocks", "total_blocks",
+                                    "reserved_blocks", "shared_blocks",
+                                    "cow_copies", "evicted_residencies")}
+                summed["reporting_replicas"] = len(gtel)
+                gs["block_telemetry"] = summed
+            else:  # no paged replicas in the group (slot pool / starting)
+                gs["block_telemetry"] = None
             per_group[g] = gs
         agg["per_group"] = per_group
         return agg
@@ -836,6 +865,19 @@ class ReplicaSet:
                     continue  # crashed mid-snapshot: next tick retries
                 router.update_residency((self.name, self._uid, ep.group),
                                         ep.replica_idx, seqs)
+                # piggyback physical headroom on the same gossip tick so
+                # residency matches are weighed by free-block pressure
+                tel_fn = getattr(inst.servicer, "block_telemetry", None)
+                if tel_fn is None:
+                    continue
+                try:
+                    tel = tel_fn()
+                except Exception:
+                    continue
+                if tel:
+                    router.update_headroom(
+                        (self.name, self._uid, ep.group), ep.replica_idx,
+                        tel["free_blocks"], tel["total_blocks"])
 
     def mean_depth(self, group: Optional[str] = None) -> float:
         with self._lock:

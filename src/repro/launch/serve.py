@@ -55,10 +55,13 @@ def main():
     ap.add_argument("--max-num-seqs", type=int, default=4)
     ap.add_argument("--max-num-batched-tokens", type=int, default=512)
     ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--paged", action="store_true",
+    ap.add_argument("--paged", action=argparse.BooleanOptionalAction,
+                    default=None,
                     help="block-paged KV cache: admission by free-block "
                          "count, chunked prefill, copy-on-write prefix "
-                         "sharing (dense/moe archs only)")
+                         "sharing, direct paged decode.  Default: auto "
+                         "(ON for dense/moe archs, slot pool otherwise); "
+                         "--no-paged forces the slot pool")
     ap.add_argument("--block-size", type=int, default=16,
                     help="KV positions per physical block (--paged)")
     ap.add_argument("--num-blocks", type=int, default=None,
@@ -106,10 +109,11 @@ def main():
                   n_workers=2)
     engine_kw = dict(max_num_seqs=args.max_num_seqs,
                      max_num_batched_tokens=args.max_num_batched_tokens,
-                     max_len=args.max_len, prefill_buckets=(16, 32, 64))
-    if args.paged:
-        engine_kw.update(paged=True, block_size=args.block_size,
-                         num_blocks=args.num_blocks)
+                     max_len=args.max_len, prefill_buckets=(16, 32, 64),
+                     # None = auto: LLMServicer resolves to paged for
+                     # dense/moe, slot pool for state-carrying families
+                     paged=args.paged, block_size=args.block_size,
+                     num_blocks=args.num_blocks)
     model_names: list = []
     try:
         if args.models:
@@ -165,6 +169,14 @@ def main():
               f"mean slot-utilization {np.mean(utils):.2f}")
         print("[serve] per-replica requests:",
               [p["requests"] for p in stats["per_replica"]])
+        btel = {g: s.get("block_telemetry")
+                for g, s in stats["per_group"].items()}
+        if any(t is not None for t in btel.values()):
+            print("[serve] paged-block telemetry per group:",
+                  {g: {"free": t["free_blocks"], "total": t["total_blocks"],
+                       "shared": t["shared_blocks"],
+                       "cow": t["cow_copies"]}
+                   for g, t in btel.items() if t is not None})
         if model_names:
             print("[serve] per-model groups:",
                   {g: {"replicas": s["replicas"],

@@ -24,6 +24,10 @@ class ModelApi:
     # chunked cache extension (paged serving); None for state-carrying
     # families whose recurrent state has no per-position KV to extend
     extend: Optional[Callable] = None  # (params, cache, tokens [B,T], cfg, *, mesh=None) -> (cache, logits [B,T,V])
+    # single-token decode directly on a block-paged physical store; None
+    # for families without per-position KV (and unused by encdec/vlm,
+    # whose cross/prefix handling the paged engine does not support)
+    decode_paged: Optional[Callable] = None  # (params, store, block_tables, lens, tokens [B], write_phys, write_off, cfg, *, mesh=None) -> (store, logits [B,V])
 
 
 def get_model(cfg: ModelConfig) -> ModelApi:
@@ -51,6 +55,7 @@ def get_model(cfg: ModelConfig) -> ModelApi:
         prefill=tfm.prefill,
         decode=tfm.decode_step,
         extend=tfm.extend_step,
+        decode_paged=tfm.paged_decode_step,
     )
 
 

@@ -160,6 +160,25 @@ def block_decode(p, x, cache, cfg: ModelConfig, *, mesh=None):
     return y, cache
 
 
+def block_decode_paged(p, x, cache, block_tables, lens, write_phys,
+                       write_off, cfg: ModelConfig, *, mesh=None):
+    """Single-token decode against one layer's paged K/V store leaves.
+
+    ``cache`` is the layer's slice of the paged store tree ({"k", "v",
+    "len"} with block-paged k/v of shape [num_blocks, block_size, Hkv, D]);
+    the "len" leaf is a template artifact — lengths live host-side in the
+    engine and arrive as ``lens`` — so it passes through untouched.  Only
+    dense/moe stacks run paged, so there is no cross-attention branch."""
+    h = nn.rmsnorm_apply(p["ln_attn"], x, cfg.norm_eps)
+    h, ck, cv = attn.attention_decode_paged(
+        p["attn"], h, cache["k"], cache["v"], block_tables, lens,
+        write_phys, write_off, cfg)
+    cache = dict(cache, k=ck, v=cv)
+    x = x + h
+    y, _ = _ffn(p, x, cfg, mesh, decode=True)
+    return y, cache
+
+
 def block_extend(p, x, cache, cfg: ModelConfig, *, mesh=None):
     """Multi-token cache extension (chunked prefill): x [B,T,d] appended
     at cache positions len..len+T-1.  Cross-attn reads precomputed cross
@@ -518,3 +537,43 @@ def decode_step(p, cache, tokens, cfg: ModelConfig, *, mesh=None):
         new_cache["pre"] = new_pre
     logits = _logits(p, x, cfg)[:, 0]
     return new_cache, logits
+
+
+def paged_decode_step(p, store, block_tables, lens, tokens, write_phys,
+                      write_off, cfg: ModelConfig, *, mesh=None):
+    """One decode step directly on the block-paged physical store.
+
+    The paged analogue of ``decode_step``: ``store`` is the engine's
+    physical cache tree (k/v leaves [L, num_blocks, block_size, Hkv, D]),
+    ``block_tables`` [B, max_blocks] maps each sequence's logical blocks
+    to physical ones, ``lens`` [B] is each sequence's valid length before
+    this token, and ``write_phys``/``write_off`` [B] name the single
+    physical cell the new token's K/V is written into.  No contiguous
+    [B, Smax] view is ever materialized — attention reads K/V through the
+    block table (see ``attention_decode_paged``).  Returns
+    (store, logits [B, vocab])."""
+    x = nn.embedding_apply(p["embed"], tokens[:, None], cfg.cdtype, mesh=mesh)
+    if cfg.positions == "learned":
+        tab = p["pos_embed"]["table"].astype(x.dtype)
+        x = x + jnp.take(tab, lens, axis=0)[:, None, :]
+
+    new_pre = {}
+    for name in _pre_names(p):
+        x, c = block_decode_paged(p["pre"][name], x, store["pre"][name],
+                                  block_tables, lens, write_phys, write_off,
+                                  cfg, mesh=mesh)
+        new_pre[name] = c
+
+    def scan_body(x, layer):
+        layer_params, layer_store = layer
+        y, c = block_decode_paged(layer_params, x, layer_store,
+                                  block_tables, lens, write_phys, write_off,
+                                  cfg, mesh=mesh)
+        return y, c
+
+    x, new_scan = jax.lax.scan(scan_body, x, (p["blocks"], store["scan"]))
+    new_store = {"scan": new_scan}
+    if new_pre:
+        new_store["pre"] = new_pre
+    logits = _logits(p, x, cfg)[:, 0]
+    return new_store, logits

@@ -10,6 +10,22 @@ from repro.models.config import ModelConfig
 from .engine import InferenceEngine, make_engine_from_scratch
 
 
+def _resolve_paged(cfg: ModelConfig, engine_kw: dict) -> dict:
+    """Paged-by-default policy for replicas: dense/moe engines get the
+    block-paged pool unless the caller opts out (``paged=False``);
+    state-carrying and prefix-offset families (ssm/hybrid/vlm/encdec)
+    keep the slot pool.  ``paged=None`` (or absent) means "auto"."""
+    kw = dict(engine_kw)
+    if kw.get("paged") is None:
+        kw["paged"] = cfg.family in ("dense", "moe")
+    if not kw["paged"]:
+        # the slot-pool engine does not take paged-only tuning knobs
+        for k in ("block_size", "num_blocks", "prefill_chunk",
+                  "max_running", "paged_decode_mode"):
+            kw.pop(k, None)
+    return kw
+
+
 class LLMServicer:
     """Servicer protocol (submit/step) around an InferenceEngine.
 
@@ -17,10 +33,15 @@ class LLMServicer:
                       "temperature": float}.
     Result: {"tokens": [...], "n_prompt": int, "ttft_s": float,
              "latency_s": float}.
+
+    Replicas default to the block-paged engine for dense/moe configs
+    (``paged=None`` auto-resolves via ``_resolve_paged``); pass
+    ``paged=False`` to force the slot pool.
     """
 
     def __init__(self, cfg: ModelConfig, params=None, *, seed: int = 0,
                  **engine_kw):
+        engine_kw = _resolve_paged(cfg, engine_kw)
         if params is None:
             self.engine = make_engine_from_scratch(cfg, seed=seed, **engine_kw)
         else:
@@ -74,9 +95,18 @@ class LLMServicer:
     def stats(self):
         return self.engine.stats
 
+    def block_telemetry(self):
+        """Live paged-pool gauges (free/total/reserved/shared blocks, CoW
+        copies, evictions) the replica set aggregates per group and
+        gossips to headroom-aware routers; None for slot-pool engines."""
+        return self.engine.block_telemetry()
+
 
 def llm_service_factory(cfg: ModelConfig, params=None, **engine_kw):
-    """Factory suitable for ServiceDescription(factory=...)."""
+    """Factory suitable for ServiceDescription(factory=...).
+
+    Engine kwargs pass through; ``paged`` defaults to auto (block-paged
+    pool for dense/moe, slot pool otherwise — see ``_resolve_paged``)."""
 
     def make():
         return LLMServicer(cfg, params, **engine_kw)
@@ -98,7 +128,9 @@ def llm_model_group(name: str, cfg: ModelConfig, params=None, *,
     considers that group's replicas, so a request can never land on a
     wrong-model engine.  ``weight`` anchors the group's share of the
     set's capacity; ``slo_p95_ms`` gives it its own latency target under
-    the ``weighted_capacity`` autoscaler.
+    the ``weighted_capacity`` autoscaler.  Engine kwargs (including the
+    auto-defaulting ``paged`` flag and its ``block_size``/``num_blocks``
+    knobs) apply to every replica of the group.
     """
     return ModelGroup(name=name,
                       factory=llm_service_factory(cfg, params, **engine_kw),

@@ -41,15 +41,26 @@ partial hits, and skipped tokens are tracked in ``EngineStats``.
   * admission reserves ``ceil(len/block_size)`` blocks against
     free + reclaimable-resident capacity, so a mid-flight sequence can
     always grow (block-granular residency eviction, coldest first,
-    supplies the reserve).
+    supplies the reserve);
+  * decode runs DIRECTLY on the physical store
+    (``paged_decode_mode="direct"``, the default): the new token's K/V is
+    written into only its tail block and attention reads K/V through the
+    block table (``api.decode_paged`` -> the scalar-prefetch Pallas
+    kernel when ``use_pallas`` is on), so per-token HBM traffic is
+    O(blocks-touched) instead of the O(B*Smax*H*D) gather/scatter
+    round-trip.  ``paged_decode_mode="gather"`` keeps the old
+    reassembled-view decode for A/B benchmarking; chunked *extend*
+    (prefill) still gathers — it touches the whole prefix anyway.
 
 Both paths produce token-for-token identical greedy output: chunked
 extend is bit-exact versus one full prefill (masked softmax columns
-underflow to exact zeros), and the gathered block view is bit-identical
-to a contiguous slot cache.
+underflow to exact zeros), and both the gathered block view and the
+direct path's table-gathered read are bit-identical to a contiguous
+slot cache (masked columns underflow to exact zeros in the softmax).
 
-Telemetry (per-step active slots, tokens, queue depth) feeds the paper's
-utilization/throughput experiments.
+Telemetry (per-step active slots, tokens, queue depth, live
+free/reserved block gauges) feeds the paper's utilization/throughput
+experiments and the replica set's headroom-aware routing.
 """
 from __future__ import annotations
 
@@ -137,6 +148,12 @@ class EngineStats:
     peak_running: int = 0  # high-water concurrent admitted sequences
     shared_block_peak: int = 0  # max physical blocks saved by sharing
     evicted_residencies: int = 0  # resident sequences dropped for space
+    # live gauges (refreshed every paged step, not cumulative): the
+    # pool's unallocated blocks and the admission-reserved blocks not
+    # yet allocated — the "why is admission stalling" signal operators
+    # and the autoscaler were missing when only peaks were reported
+    free_blocks: int = 0
+    reserved_blocks: int = 0
     started: float = dataclasses.field(default_factory=time.perf_counter)
 
     @property
@@ -159,7 +176,8 @@ class InferenceEngine:
                  paged: bool = False, block_size: int = 16,
                  num_blocks: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 max_running: Optional[int] = None):
+                 max_running: Optional[int] = None,
+                 paged_decode_mode: str = "direct"):
         self.cfg = cfg
         self.api: ModelApi = get_model(cfg)
         self.params = params
@@ -237,17 +255,36 @@ class InferenceEngine:
                 store = scatter_block_writes(store, view, wphys, woff, wpos)
                 return store, logits
 
-            def paged_decode_fn(params, store, bt, lens, tokens, wphys,
-                                woff):
-                view = gather_block_view(store, bt, lens)
-                view, logits = api.decode(params, view, tokens, cfg,
-                                          mesh=mesh)
-                store = scatter_block_writes(store, view, wphys, woff,
-                                             lens[:, None])
-                return store, logits
+            if paged_decode_mode not in ("direct", "gather"):
+                raise ValueError(
+                    f"paged_decode_mode must be 'direct' or 'gather', "
+                    f"not {paged_decode_mode!r}")
+            self.paged_decode_mode = paged_decode_mode
+
+            if paged_decode_mode == "direct":
+                # the tentpole path: no gather_block_view on decode — the
+                # model writes the token's K/V into its tail block and
+                # reads K/V through the block table (Pallas paged kernel
+                # under use_pallas, jnp table-gather fallback otherwise)
+                def paged_decode_fn(params, store, bt, lens, tokens, wphys,
+                                    woff):
+                    return api.decode_paged(params, store, bt, lens, tokens,
+                                            wphys, woff, cfg, mesh=mesh)
+            else:
+                # legacy A/B path: reassemble a contiguous [B, Smax] view,
+                # run the slot-pool decode, scatter the one new row back
+                def paged_decode_fn(params, store, bt, lens, tokens, wphys,
+                                    woff):
+                    view = gather_block_view(store, bt, lens)
+                    view, logits = api.decode(params, view, tokens, cfg,
+                                              mesh=mesh)
+                    store = scatter_block_writes(store, view, wphys[:, None],
+                                                 woff[:, None], lens[:, None])
+                    return store, logits
 
             self._paged_extend = jax.jit(paged_extend_fn, donate_argnums=(1,))
             self._paged_decode = jax.jit(paged_decode_fn, donate_argnums=(1,))
+            self.stats.free_blocks = self.pool.n_free
             return
 
         self.pool = CachePool(cfg, max_num_seqs, max_len)
@@ -313,6 +350,22 @@ class InferenceEngine:
                     self.pool.free(slot)
                 done.append(req)
         return done
+
+    def block_telemetry(self) -> Optional[dict]:
+        """Live physical-block telemetry for a paged engine (None for the
+        slot pool).  The replica set aggregates this per model group and
+        gossips (free, total) to headroom-aware routers, so a deep prefix
+        match on a memory-starved replica stops winning placement."""
+        if not self.paged:
+            return None
+        return {
+            "free_blocks": self.pool.n_free,
+            "total_blocks": self.pool.alloc.capacity,
+            "reserved_blocks": self._reserved,
+            "shared_blocks": self.pool.block_savings(),
+            "cow_copies": self.stats.cow_copies,
+            "evicted_residencies": self.stats.evicted_residencies,
+        }
 
     def run(self, *, max_steps: int = 100000) -> dict:
         """Drain the queue; returns completed requests keyed by uid."""
@@ -525,6 +578,8 @@ class InferenceEngine:
         self.stats.slot_steps += max(self.max_num_seqs, len(self.running))
         self.stats.shared_block_peak = max(self.stats.shared_block_peak,
                                            self.pool.block_savings())
+        self.stats.free_blocks = self.pool.n_free
+        self.stats.reserved_blocks = self._reserved
         return events
 
     def _blocks_needed(self, total_len: int, covered: int) -> int:
@@ -689,17 +744,26 @@ class InferenceEngine:
         """Feed one prompt chunk per prefilling sequence (admission FIFO)
         until the per-step token budget runs out.  Chunk lengths are
         bucketed to bound recompilation; the final chunk's last real
-        logits row produces the first generated token."""
+        logits row produces the first generated token.
+
+        The budget is charged at the BUCKETED size — the padded bucket is
+        what actually runs through ``_paged_extend``, so charging only the
+        real tokens would let a step of many short ragged chunks exceed
+        ``max_num_batched_tokens`` of compute and stall interleaved
+        decode.  Each chunk therefore picks the largest bucket that still
+        fits the remaining budget (the smallest chunk bucket always fits a
+        fresh budget, so prefill never stalls)."""
         budget = self.max_num_batched_tokens
         mb = self.pool.max_blocks
         bs = self.block_size
         for req in list(self._prefill_order):
-            if budget <= 0:
-                break
             if req.done or not req.pending_tokens:
                 self._prefill_order.remove(req)
                 continue
-            T = min(len(req.pending_tokens), budget, self.prefill_chunk)
+            fitting = [b for b in self._chunk_buckets if b <= budget]
+            if not fitting:
+                break
+            T = min(len(req.pending_tokens), self.prefill_chunk, fitting[-1])
             bucket = _bucket(T, self._chunk_buckets)
             T = min(T, bucket)
             self._ensure_writable(req, req.pos, T)
@@ -720,7 +784,7 @@ class InferenceEngine:
                 jnp.asarray(wphys), jnp.asarray(woff))
             req.pending_tokens = req.pending_tokens[T:]
             req.pos += T
-            budget -= T
+            budget -= bucket  # charge the padded size that actually ran
             self.stats.prefill_tokens += T
             if not req.pending_tokens:  # prompt complete: first token
                 self._prefill_order.remove(req)
@@ -755,16 +819,19 @@ class InferenceEngine:
         bt = np.zeros((B, mb), np.int32)
         lens = np.zeros((B,), np.int32)
         tokens = np.zeros((B,), np.int32)
-        wphys = np.zeros((B, 1), np.int32)
-        woff = np.zeros((B, 1), np.int32)
+        # padding rows write to the null block's cell (0, 0); duplicate
+        # writes there are harmless because masked positions are never
+        # attended
+        wphys = np.zeros((B,), np.int32)
+        woff = np.zeros((B,), np.int32)
         temps = np.zeros((B,), np.float32)
         for i, r in enumerate(active):
             bt[i, :len(r.table)] = r.table
             lens[i] = r.pos
             tokens[i] = r.last_token
             p = min(r.pos, mb * bs - 1)  # clamp like the slot pool
-            wphys[i, 0] = r.table[p // bs]
-            woff[i, 0] = p % bs
+            wphys[i] = r.table[p // bs]
+            woff[i] = p % bs
             temps[i] = r.temperature
         self._key, sub = jax.random.split(self._key)
         self.pool.cache, logits = self._paged_decode(
@@ -812,6 +879,8 @@ class InferenceEngine:
                     self.pool.alloc.free(b)
             req.table = []
             done.append(req)
+        self.stats.free_blocks = self.pool.n_free
+        self.stats.reserved_blocks = self._reserved
         return done
 
 

@@ -18,13 +18,19 @@ physical blocks (refcount > 1); the first divergent write triggers
 copy-on-write of just the boundary block.  Admission is by free-block
 count, eviction is block-granular, and the engine's radix residency
 index becomes real memory headroom instead of whole-slot duplication.
-Because XLA wants static shapes, reads go through a gather
-(``gather_block_view`` reassembles a contiguous ``[B, max_len, ...]``
-view from the block tables inside the jitted step) and writes scatter
-only the newly produced positions back into their blocks
-(``scatter_block_writes``).  Block 0 is reserved as a null block:
-padded batch rows and padded chunk positions write there, so bucketing
-never needs masking logic inside the model.
+Decode runs DIRECTLY on the physical store: the engine's default
+``paged_decode_mode="direct"`` writes each new token's K/V into its
+sequence's tail block (one cell per row) and attends through the block
+table — the Pallas paged-decode kernel under ``use_pallas``, a jnp
+table-gather fallback on CPU — so the per-step cost scales with the
+blocks a sequence actually occupies, not ``max_len``.  Only chunked
+prefill/extend still reassembles a contiguous ``[B, max_len, ...]``
+view (``gather_block_view``) and scatters the newly produced positions
+back (``scatter_block_writes``), because extend consumes a whole chunk
+of positions at once; ``paged_decode_mode="gather"`` keeps that
+round-trip on decode too, as the A/B baseline.  Block 0 is reserved as
+a null block: padded batch rows and padded chunk positions write
+there, so bucketing never needs masking logic inside the model.
 
 Leaf batch dims are located by the same path rules the dry-run uses for
 cache shardings.

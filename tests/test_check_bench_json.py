@@ -58,15 +58,33 @@ def multimodel_rows():
 def paged_rows():
     return [
         {"scenario": "paged_compare", "engine": "monolithic",
-         "max_num_seqs": 4, "max_len": 64, "block_size": None,
-         "num_blocks": None, "requests": 13, "peak_concurrent": 4,
-         "prefix_reuse_hits": 9, "prefix_cached_tokens": 108,
-         "shared_block_peak": 0, "cow_copies": 0, "tokens_match": True},
+         "decode_mode": None, "max_num_seqs": 4, "max_len": 64,
+         "block_size": None, "num_blocks": None, "requests": 13,
+         "peak_concurrent": 4, "prefix_reuse_hits": 9,
+         "prefix_cached_tokens": 108, "shared_block_peak": 0,
+         "cow_copies": 0, "decode_tokens_per_s": 2100.0,
+         "free_blocks": None, "reserved_blocks": None,
+         "tokens_match": True},
+        {"scenario": "paged_compare", "engine": "paged_gather",
+         "decode_mode": "gather", "max_num_seqs": 4, "max_len": 64,
+         "block_size": 8, "num_blocks": 33, "requests": 13,
+         "peak_concurrent": 12, "prefix_reuse_hits": 12,
+         "prefix_cached_tokens": 144, "shared_block_peak": 12,
+         "cow_copies": 12, "decode_tokens_per_s": 2000.0,
+         "free_blocks": 1, "reserved_blocks": 0, "tokens_match": True},
         {"scenario": "paged_compare", "engine": "paged",
-         "max_num_seqs": 4, "max_len": 64, "block_size": 8,
-         "num_blocks": 33, "requests": 13, "peak_concurrent": 12,
-         "prefix_reuse_hits": 12, "prefix_cached_tokens": 144,
-         "shared_block_peak": 12, "cow_copies": 12, "tokens_match": True},
+         "decode_mode": "direct", "max_num_seqs": 4, "max_len": 64,
+         "block_size": 8, "num_blocks": 33, "requests": 13,
+         "peak_concurrent": 12, "prefix_reuse_hits": 12,
+         "prefix_cached_tokens": 144, "shared_block_peak": 12,
+         "cow_copies": 12, "decode_tokens_per_s": 2300.0,
+         "free_blocks": 1, "reserved_blocks": 0, "tokens_match": True},
+        {"scenario": "paged_service", "group": "default", "replicas": 2,
+         "requests": 8,
+         "block_telemetry": {"free_blocks": 40, "total_blocks": 64,
+                             "reserved_blocks": 0, "shared_blocks": 0,
+                             "cow_copies": 0, "evicted_residencies": 0,
+                             "reporting_replicas": 2}},
     ]
 
 
@@ -119,23 +137,58 @@ def test_multimodel_catches_wrong_route_and_missing_rebalance():
 
 def test_paged_catches_mismatch_and_unshared_blocks():
     rows = paged_rows()
-    rows[1]["tokens_match"] = False  # paged output diverged
+    rows[2]["tokens_match"] = False  # paged output diverged
     with pytest.raises(CheckFailed):
         check_paged(rows)
     rows = paged_rows()
-    rows[1]["peak_concurrent"] = 4  # never admitted past the slot ceiling
+    rows[2]["peak_concurrent"] = 4  # never admitted past the slot ceiling
     with pytest.raises(CheckFailed):
         check_paged(rows)
     rows = paged_rows()
-    rows[1]["shared_block_peak"] = 0  # no physical sharing observed
+    rows[2]["shared_block_peak"] = 0  # no physical sharing observed
     with pytest.raises(CheckFailed):
         check_paged(rows)
     rows = paged_rows()
-    rows[1]["cow_copies"] = 0  # divergence never copy-on-wrote
+    rows[2]["cow_copies"] = 0  # divergence never copy-on-wrote
     with pytest.raises(CheckFailed):
         check_paged(rows)
     with pytest.raises(CheckFailed):
-        check_paged(paged_rows()[:1])  # an engine's row is missing
+        check_paged(paged_rows()[:2])  # an engine's row is missing
+
+
+def test_paged_catches_decode_regression_and_missing_telemetry():
+    rows = paged_rows()
+    # the direct kernel must not be slower than the gather round-trip
+    # (beyond the 10% CI-noise allowance)
+    rows[2]["decode_tokens_per_s"] = 0.5 * rows[1]["decode_tokens_per_s"]
+    with pytest.raises(CheckFailed):
+        check_paged(rows)
+    rows = paged_rows()
+    rows[2]["decode_mode"] = "gather"  # direct row mislabeled
+    with pytest.raises(CheckFailed):
+        check_paged(rows)
+    rows = paged_rows()
+    rows[2]["free_blocks"] = None  # live gauge never surfaced
+    with pytest.raises(CheckFailed):
+        check_paged(rows)
+    rows = paged_rows()
+    rows[2]["reserved_blocks"] = 3  # reserve leak at quiescence
+    with pytest.raises(CheckFailed):
+        check_paged(rows)
+    with pytest.raises(CheckFailed):
+        check_paged(paged_rows()[:3])  # service telemetry rows missing
+    rows = paged_rows()
+    del rows[3]["block_telemetry"]["shared_blocks"]
+    with pytest.raises(CheckFailed):
+        check_paged(rows)
+    rows = paged_rows()
+    rows[3]["block_telemetry"] = None  # group aggregated nothing
+    with pytest.raises(CheckFailed):
+        check_paged(rows)
+    rows = paged_rows()
+    rows[3]["block_telemetry"]["reporting_replicas"] = 0
+    with pytest.raises(CheckFailed):
+        check_paged(rows)
 
 
 def test_main_exit_codes(tmp_path):

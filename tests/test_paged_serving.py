@@ -274,3 +274,187 @@ def test_paged_sampling_smoke(dense_lm):
     out = _drive(eng, [], 0, uids=[u])[0]
     assert len(out) == 5
     assert all(0 <= t < cfg.vocab for t in out)
+
+
+# ---------------------------------------------------------------------------
+# Direct paged decode (the kernel-on-the-block-store path)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", ["dense", "moe"])
+def test_paged_decode_modes_equivalent(family, dense_lm, moe_lm):
+    """Direct paged decode (K/V written straight into the tail block,
+    attention through the block table) is token-identical to the legacy
+    gather round-trip AND the slot pool — ragged lengths straddling block
+    boundaries (block_size 8: 7/8/9 and 15/16/17)."""
+    cfg, api, params = dense_lm if family == "dense" else moe_lm
+    rng = np.random.RandomState(7)
+    prompts = [list(rng.randint(1, cfg.vocab, size=n))
+               for n in (7, 8, 9, 15, 16, 17)]
+    outs = {}
+    for mode in ("slot", "direct", "gather"):
+        kw = dict(ENGINE_KW)
+        if mode != "slot":
+            kw.update(paged=True, block_size=8, paged_decode_mode=mode)
+        outs[mode] = _drive(InferenceEngine(cfg, params, **kw), prompts, 6)
+    assert outs["direct"] == outs["gather"] == outs["slot"]
+
+
+def test_paged_decode_modes_agree_on_divergence(dense_lm):
+    """Partial-hit resume plus copy-on-write divergence produce identical
+    greedy tokens under the direct kernel and the gather round-trip, and
+    both match the from-scratch oracle."""
+    cfg, api, params = dense_lm
+    stem = [5, 4, 3, 2, 1, 2, 3, 4, 5, 6, 7, 8]
+    branches = [stem[:9] + [100 + i, 101, 102] for i in range(3)]
+    outs = {}
+    for mode in ("direct", "gather"):
+        eng = InferenceEngine(cfg, params, **ENGINE_KW, paged=True,
+                              block_size=4, paged_decode_mode=mode)
+        _drive(eng, [stem], 4)
+        outs[mode] = _drive(eng, branches, 4)
+        assert eng.stats.prefix_partial_hits >= 1
+        assert eng.stats.cow_copies >= 1
+    assert outs["direct"] == outs["gather"]
+    for p, o in zip(branches, outs["direct"]):
+        assert o == _ref_generate(api, params, cfg, p, 4)
+
+
+def test_direct_decode_never_gathers(dense_lm, monkeypatch):
+    """The tentpole invariant: in direct mode the decode step NEVER
+    reassembles a contiguous view — ``gather_block_view`` is extend-only.
+    The gather-mode engine run through the same spy proves the spy sees
+    decode-phase gathers when they happen."""
+    import repro.serving.engine as engine_mod
+    cfg, _, params = dense_lm
+    in_decode = []
+    decode_gathers = {"direct": 0, "gather": 0}
+    real_gather = engine_mod.gather_block_view
+    current = ["direct"]
+
+    def spy(*a, **k):
+        if in_decode:
+            decode_gathers[current[0]] += 1
+        return real_gather(*a, **k)
+
+    monkeypatch.setattr(engine_mod, "gather_block_view", spy)
+    rng = np.random.RandomState(8)
+    prompts = [list(rng.randint(1, cfg.vocab, size=n)) for n in (5, 11, 19)]
+    for mode in ("direct", "gather"):
+        current[0] = mode
+        eng = InferenceEngine(cfg, params, **ENGINE_KW, paged=True,
+                              block_size=8, paged_decode_mode=mode)
+        real_decode = eng._paged_decode
+
+        def wrapped(*a, __real=real_decode, **k):
+            in_decode.append(1)
+            try:
+                return __real(*a, **k)
+            finally:
+                in_decode.pop()
+
+        eng._paged_decode = wrapped
+        _drive(eng, prompts, 6)
+    assert decode_gathers["direct"] == 0
+    assert decode_gathers["gather"] > 0
+
+
+def test_paged_rejects_unknown_decode_mode(dense_lm):
+    cfg, _, params = dense_lm
+    with pytest.raises(ValueError, match="paged_decode_mode"):
+        InferenceEngine(cfg, params, **ENGINE_KW, paged=True,
+                        block_size=8, paged_decode_mode="telepathy")
+
+
+# ---------------------------------------------------------------------------
+# Chunk-budget accounting (bugfix: charge the padded bucket, not T)
+# ---------------------------------------------------------------------------
+
+
+def test_paged_chunk_budget_charges_padded_bucket(dense_lm):
+    """Regression: the prefill scheduler must charge the PADDED bucket
+    that actually runs, so one step's batched prefill tokens never exceed
+    ``max_num_batched_tokens`` under ragged chunk mixes.  (The old code
+    charged the real token count: three 9-token chunks padded to bucket 16
+    fit a 24-token budget on paper while running 48.)"""
+    cfg, api, params = dense_lm
+    eng = InferenceEngine(cfg, params, max_num_seqs=8,
+                          max_num_batched_tokens=24, max_len=64,
+                          prefill_buckets=(8, 16), seed=0, paged=True,
+                          block_size=8)
+    real = eng._paged_extend
+    widths = []
+
+    def spy(params, store, bt, lens, tokens, wphys, woff):
+        widths.append(int(tokens.shape[1]))
+        return real(params, store, bt, lens, tokens, wphys, woff)
+
+    eng._paged_extend = spy
+    rng = np.random.RandomState(9)
+    prompts = [list(rng.randint(1, cfg.vocab, size=n))
+               for n in (9, 9, 9, 13, 21, 30)]
+    uids = [eng.submit(p, max_new_tokens=4) for p in prompts]
+    done = {}
+    per_step = []
+    for _ in range(100000):
+        if not eng.has_work():
+            break
+        widths.clear()
+        eng.step()
+        per_step.append(sum(widths))
+        for r in eng.collect_finished():
+            done[r.uid] = r
+    assert max(per_step) <= 24
+    # splitting a chunk to fit the remaining budget stays correct
+    for p, u in zip(prompts, uids):
+        assert done[u].output == _ref_generate(api, params, cfg, p, 4)
+
+
+# ---------------------------------------------------------------------------
+# Live pool gauges + telemetry + servicer paged default
+# ---------------------------------------------------------------------------
+
+
+def test_paged_live_gauges_and_telemetry(dense_lm):
+    """free/reserved gauges track the pool every step (not just peaks),
+    and block_telemetry() bundles the router-facing numbers."""
+    cfg, _, params = dense_lm
+    eng = InferenceEngine(cfg, params, **ENGINE_KW, paged=True,
+                          block_size=8)
+    assert eng.stats.free_blocks == eng.pool.n_free
+    _drive(eng, [[1, 2, 3, 4, 5], [1, 2, 3, 9, 9, 9, 9]], 4)
+    assert eng.stats.free_blocks == eng.pool.n_free
+    assert eng.stats.reserved_blocks == eng._reserved == 0
+    tel = eng.block_telemetry()
+    assert tel["free_blocks"] == eng.pool.n_free
+    assert tel["total_blocks"] == eng.pool.alloc.capacity
+    assert {"reserved_blocks", "shared_blocks", "cow_copies",
+            "evicted_residencies"} <= set(tel)
+    # slot-pool engines report no block telemetry
+    mono = InferenceEngine(cfg, params, **ENGINE_KW)
+    assert mono.block_telemetry() is None
+
+
+def test_llm_servicer_paged_auto_default(dense_lm):
+    """LLMServicer defaults dense/moe replicas to the paged engine
+    (direct decode); explicit paged=False forces the slot pool; families
+    without per-position KV auto-resolve to the slot pool with the
+    paged-only knobs stripped."""
+    from repro.serving.client import LLMServicer
+    cfg, _, params = dense_lm
+    s = LLMServicer(cfg, params, max_num_seqs=2, max_len=32,
+                    prefill_buckets=(16,))
+    assert s.engine.paged
+    assert s.engine.paged_decode_mode == "direct"
+    assert s.block_telemetry()["total_blocks"] > 0
+    s = LLMServicer(cfg, params, max_num_seqs=2, max_len=32,
+                    prefill_buckets=(16,), paged=False, block_size=8)
+    assert not s.engine.paged
+    assert s.block_telemetry() is None
+    ssm = get_smoke_config("rwkv6-1.6b")
+    sapi = get_model(ssm)
+    sparams, _ = nn.split(sapi.init(jax.random.PRNGKey(0), ssm))
+    s = LLMServicer(ssm, sparams, max_num_seqs=2, max_len=16,
+                    prefill_buckets=(16,), block_size=8, num_blocks=16)
+    assert not s.engine.paged
+    assert s.block_telemetry() is None

@@ -489,3 +489,112 @@ def test_radix_equal_depth_matches_prefer_shallow_queue():
                  affinity_group="svc", queue_depths=[3.0, 0.0],
                  affinity_key=tuple(stem + [9]))
     assert idx == 1
+
+
+# ---------------------------------------------------------------------------
+# Headroom-weighted radix matches (free-block gossip)
+# ---------------------------------------------------------------------------
+
+
+def test_radix_headroom_starved_match_spills_to_next_match():
+    """A deep prefix match on a replica whose engine is nearly out of
+    free blocks is a match about to be evicted: the router prefers the
+    next-deepest NON-starved match and accounts the route as a spill."""
+    r = make_router("radix_affinity", min_match=4,
+                    headroom_watermark=0.25)
+    prompt = list(range(200, 240))
+    r.update_residency("svc", 0, [prompt])       # deepest match...
+    r.update_residency("svc", 1, [prompt[:16]])  # shallower, healthy
+    r.update_headroom("svc", 0, 1, 32)   # ...but 1/32 free: starved
+    r.update_headroom("svc", 1, 16, 32)
+    info = {}
+    idx = r.pick(1.0, n_instances=3, group="g", members=(0, 1, 2),
+                 affinity_group="svc", queue_depths=[0.0, 0.0, 0.0],
+                 affinity_key=tuple(prompt), info=info)
+    assert idx == 1
+    assert info["affinity"] == "spill"
+
+
+def test_radix_headroom_recovery_restores_the_deep_match():
+    """Headroom is a live gauge: once the starved replica frees blocks
+    (requests drained / residencies evicted), its deep match wins again
+    and counts as a hit."""
+    r = make_router("radix_affinity", min_match=4,
+                    headroom_watermark=0.25)
+    prompt = list(range(50, 90))
+    r.update_residency("svc", 0, [prompt])
+    r.update_residency("svc", 1, [prompt[:16]])
+    r.update_headroom("svc", 0, 2, 32)
+    # member 1's queue is deeper, so once member 0 is healthy again the
+    # equal-depth tie (0's residency vs the session memory the first pick
+    # left on 1) resolves back to 0
+    assert r.pick(1.0, n_instances=2, group="g", members=(0, 1),
+                  affinity_group="svc", queue_depths=[0.0, 1.0],
+                  affinity_key=tuple(prompt)) == 1
+    r.update_headroom("svc", 0, 20, 32)  # pool drained back above water
+    info = {}
+    assert r.pick(1.0, n_instances=2, group="g", members=(0, 1),
+                  affinity_group="svc", queue_depths=[0.0, 1.0],
+                  affinity_key=tuple(prompt), info=info) == 0
+    assert info["affinity"] == "hit"
+
+
+def test_radix_headroom_all_starved_falls_back_by_load():
+    """When every matching replica is starved the router does not pick a
+    doomed match: it falls back to least-loaded and accounts a spill."""
+    r = make_router("radix_affinity", min_match=4,
+                    headroom_watermark=0.25)
+    prompt = list(range(10, 40))
+    r.update_residency("svc", 0, [prompt])
+    r.update_residency("svc", 1, [prompt[:12]])
+    r.update_headroom("svc", 0, 0, 32)
+    r.update_headroom("svc", 1, 1, 32)
+    info = {}
+    idx = r.pick(1.0, n_instances=3, group="g", members=(0, 1, 2),
+                 affinity_group="svc", queue_depths=[5.0, 5.0, 0.0],
+                 affinity_key=tuple(prompt), info=info)
+    assert idx == 2  # least-loaded, cache-cold — but not about to evict
+    assert info["affinity"] == "spill"
+
+
+def test_radix_headroom_disabled_by_nonpositive_watermark():
+    r = make_router("radix_affinity", min_match=4, headroom_watermark=0.0)
+    prompt = list(range(300, 330))
+    r.update_residency("svc", 0, [prompt])
+    r.update_headroom("svc", 0, 0, 32)  # zero free, but weighting is off
+    info = {}
+    assert r.pick(1.0, n_instances=2, group="g", members=(0, 1),
+                  affinity_group="svc", affinity_key=tuple(prompt),
+                  info=info) == 0
+    assert info["affinity"] == "hit"
+
+
+def test_radix_forget_member_drops_its_headroom():
+    r = make_router("radix_affinity", min_match=4,
+                    headroom_watermark=0.25)
+    prompt = list(range(400, 430))
+    r.update_residency("svc", 0, [prompt])
+    r.update_headroom("svc", 0, 0, 32)
+    r.forget_member("svc", 0)
+    # re-gossiped residency with no headroom report routes normally
+    r.update_residency("svc", 0, [prompt])
+    info = {}
+    assert r.pick(1.0, n_instances=2, group="g", members=(0, 1),
+                  affinity_group="svc", affinity_key=tuple(prompt),
+                  info=info) == 0
+    assert info["affinity"] == "hit"
+
+
+def test_update_headroom_noop_on_plain_routers():
+    make_router("least_loaded").update_headroom("svc", 0, 1, 32)
+    make_router("round_robin").update_headroom("svc", 0, 1, 32)
+
+
+def test_router_from_policy_threads_headroom_watermark():
+    class P:
+        routing = "radix_affinity"
+        affinity_headroom_watermark = 0.33
+
+    r = router_from_policy(P())
+    assert isinstance(r, RadixAffinityRouter)
+    assert r.headroom_watermark == 0.33
