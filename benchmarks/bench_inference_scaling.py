@@ -43,11 +43,13 @@ import random
 import threading
 import time
 
+import jax
+
 from repro.configs import get_config
 from repro.core import (ExecutionPolicy, ModelGroup, ResourceDescription,
                         ResourceRequirements, Rhapsody, ServiceDescription)
 from repro.serving.client import llm_service_factory
-from repro.serving.engine import make_engine_from_scratch
+from repro.serving.engine import SpecDecodeSession, make_engine_from_scratch
 
 from .common import Reporter
 
@@ -543,6 +545,135 @@ def run_paged_service(*, n_replicas: int = 2, requests: int = 8,
         rh.close()
 
 
+# ---------------------------------------------------------------------------
+# Cross-group speculative decoding: draft-propose / target-verify pipeline
+# ---------------------------------------------------------------------------
+
+
+def _spec_cfg(n_layers: int):
+    """A deep-enough model that per-forward cost scales with depth (the
+    jitted forward is one XLA executable, so dispatch overhead is paid
+    once per forward and layer compute dominates) — the regime where a
+    shallow draft is genuinely cheaper than the deep target.  d512/12L
+    puts one target step at ~15x a draft step, so the session's fixed
+    per-round cost (host sync on the accept decision, slot rewinds) is
+    small against the full-depth forwards it saves."""
+    return get_config("rhapsody-demo").scaled(
+        n_layers=n_layers, d_model=512, n_heads=8, n_kv_heads=4,
+        head_dim=64, d_ff=2048, vocab=512)
+
+
+def _identity_padded(draft_eng, target_eng, n_draft_layers: int):
+    """Target params whose first ``n_draft_layers`` layers are the
+    draft's and whose remaining layers are EXACT identities: the blocks
+    are pre-norm with bias-free projections, so zeroing a layer's
+    attention output projection and MLP down projection leaves only the
+    residual path (``x + 0``).  The target then computes the draft's
+    function bit-for-bit while paying full-depth cost — acceptance is
+    1.0 by construction, isolating the propose/verify pipeline's best
+    case without training a real draft."""
+    dp, tp = draft_eng.params, target_eng.params
+    blocks = jax.tree_util.tree_map(
+        lambda t, d: t.at[:n_draft_layers].set(d),
+        tp["blocks"], dp["blocks"])
+    blocks["attn"]["o"]["w"] = \
+        blocks["attn"]["o"]["w"].at[n_draft_layers:].set(0.0)
+    blocks["mlp"]["down"]["w"] = \
+        blocks["mlp"]["down"]["w"].at[n_draft_layers:].set(0.0)
+    return {**dp, "blocks": blocks}
+
+
+def _drain_timed(driver, prompts, new_tokens: int, repeats: int = 3):
+    """Warm end-to-end drains: one untimed pass compiles every branch
+    (prefill / decode / verify-extend), then the best decode-tokens/s
+    over ``repeats`` timed passes — the microbenchmark answer to
+    scheduler jitter on a shared CI host.  Returns (tok/s, outputs)."""
+    stats = driver.stats  # the target engine's counters for a session
+    best, outs = 0.0, None
+    for i in range(repeats + 1):
+        uids = [driver.submit(p, max_new_tokens=new_tokens)
+                for p in prompts]
+        d0 = stats.decode_tokens
+        t0 = time.perf_counter()
+        done = driver.run()
+        dt = time.perf_counter() - t0
+        outs = [done[u].output for u in uids]
+        if i > 0:  # pass 0 is the compile warm-up
+            best = max(best, (stats.decode_tokens - d0) / max(1e-9, dt))
+    return best, outs
+
+
+def run_speculative(*, k: int = 4, target_layers: int = 12,
+                    draft_layers: int = 1, new_tokens: int = 40,
+                    repeats: int = 3) -> list:
+    """Three streams over identical prompts, one row each:
+
+    ``vanilla``            — target-only greedy decode (the baseline).
+    ``high_acceptance``    — SpecDecodeSession with a shallow draft the
+                             identity-padded target agrees with 100%:
+                             every round emits k+1 tokens for one
+                             full-depth forward plus k shallow ones.
+    ``low_acceptance``     — adversarial draft (independent weights,
+                             ~zero acceptance) with the acceptance floor
+                             armed: the session must disable itself
+                             after the probe window and asymptote to
+                             vanilla cost, not degrade below it.
+
+    All three transcripts must match token-for-token (greedy
+    equivalence); ``check_bench_json.py specdecode`` gates the speedups
+    and the disable behavior."""
+    tcfg = _spec_cfg(target_layers)
+    dcfg = _spec_cfg(draft_layers)
+    kw = dict(max_num_seqs=4, max_len=96, prefill_buckets=(16,))
+    rng = random.Random(0)
+    prompts = [[rng.randrange(1, tcfg.vocab) for _ in range(n)]
+               for n in (12, 9, 12, 7)]
+
+    drf = make_engine_from_scratch(dcfg, seed=0, **kw)
+
+    def padded_target():
+        tgt = make_engine_from_scratch(tcfg, seed=1, **kw)
+        tgt.params = _identity_padded(drf, tgt, draft_layers)
+        return tgt
+
+    rows = []
+    # vanilla: the target alone (identity-padded so all three streams
+    # decode the SAME transcript)
+    base_tps, ref = _drain_timed(padded_target(), prompts, new_tokens,
+                                 repeats)
+    rows.append({"stream": "vanilla", "decode_tokens_per_s": base_tps,
+                 "acceptance_rate": None, "proposed": 0, "accepted": 0,
+                 "enabled": None, "outs": ref})
+    # high acceptance: the draft IS the target's function
+    sess = SpecDecodeSession(padded_target(), drf, k=k)
+    tps, outs = _drain_timed(sess, prompts, new_tokens, repeats)
+    ss = sess.spec_stats()
+    rows.append({"stream": "high_acceptance", "decode_tokens_per_s": tps,
+                 "acceptance_rate": ss["acceptance_rate"],
+                 "proposed": ss["proposed"], "accepted": ss["accepted"],
+                 "enabled": ss["enabled"], "outs": outs})
+    # low acceptance: an unrelated draft + the adaptive floor — the
+    # session must turn itself off and fall back to vanilla stepping
+    drf_bad = make_engine_from_scratch(dcfg, seed=7, **kw)
+    sess = SpecDecodeSession(padded_target(), drf_bad, k=k,
+                             min_acceptance=0.3, probe_proposals=32)
+    tps, outs = _drain_timed(sess, prompts, new_tokens, repeats)
+    ss = sess.spec_stats()
+    rows.append({"stream": "low_acceptance", "decode_tokens_per_s": tps,
+                 "acceptance_rate": ss["acceptance_rate"],
+                 "proposed": ss["proposed"], "accepted": ss["accepted"],
+                 "enabled": ss["enabled"], "outs": outs})
+    match = all(r.pop("outs") == ref if r["stream"] != "vanilla"
+                else bool(r.pop("outs")) for r in rows)
+    for r in rows:
+        r.update(scenario="speculative", k=k,
+                 target_layers=target_layers, draft_layers=draft_layers,
+                 new_tokens=new_tokens, tokens_match=match,
+                 speedup_vs_vanilla=r["decode_tokens_per_s"]
+                 / max(1e-9, base_tps))
+    return rows
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--autoscale", action="store_true",
@@ -554,6 +685,11 @@ if __name__ == "__main__":
     ap.add_argument("--paged", action="store_true",
                     help="run the block-paged vs slot-pool engine "
                          "comparison on a branching-session load")
+    ap.add_argument("--speculative", action="store_true",
+                    help="run the draft-propose / target-verify "
+                         "speculative-decoding comparison (vanilla vs "
+                         "high- and low-acceptance streams)")
+    ap.add_argument("--spec-k", type=int, default=4)
     ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--branches", type=int, default=12)
     ap.add_argument("--policies", nargs="*",
@@ -565,6 +701,21 @@ if __name__ == "__main__":
     ap.add_argument("--shift-s", type=float, default=5.0)
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
+    if args.speculative:
+        rows = run_speculative(k=args.spec_k)
+        if args.json:
+            print(json.dumps(rows, indent=2))
+        else:
+            for r in rows:
+                acc = r["acceptance_rate"]
+                print(f"[spec] {r['stream']:>16s} "
+                      f"decode={r['decode_tokens_per_s']:.0f}tok/s "
+                      f"({r['speedup_vs_vanilla']:.2f}x) "
+                      f"acc={acc if acc is None else round(acc, 2)} "
+                      f"proposed={r['proposed']} "
+                      f"enabled={r['enabled']} "
+                      f"match={r['tokens_match']}")
+        raise SystemExit(0)
     if args.paged:
         rows = (run_paged_compare(block_size=args.block_size,
                                   n_branches=args.branches)

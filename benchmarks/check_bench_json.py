@@ -9,6 +9,7 @@ Usage::
     python benchmarks/check_bench_json.py autoscale  /tmp/autoscale.json
     python benchmarks/check_bench_json.py multimodel /tmp/multimodel.json
     python benchmarks/check_bench_json.py paged      /tmp/paged.json
+    python benchmarks/check_bench_json.py specdecode /tmp/specdecode.json
 
 Each checker takes the decoded rows and raises ``CheckFailed`` with a
 pointed message on the first violated invariant — these used to live as
@@ -191,11 +192,52 @@ def check_paged(rows: list) -> None:
                  "no replica reported block telemetry", tel)
 
 
+def check_specdecode(rows: list) -> None:
+    """bench_inference_scaling --speculative: three streams over the same
+    prompts (vanilla / high_acceptance / low_acceptance), all three
+    transcripts token-for-token identical (the greedy-equivalence
+    invariant speculative decoding must never trade away), the
+    identity-padded high-acceptance stream actually speculating
+    (acceptance ~1.0) AND beating vanilla by >= 1.3x, and the
+    adversarial low-acceptance stream tripping the acceptance floor —
+    session disabled — without degrading below vanilla (>= 0.9x; the
+    0.1 allowance only absorbs CI timer noise on a 1.0x design
+    target)."""
+    by = {r.get("stream"): r for r in rows}
+    _require(set(by) == {"vanilla", "high_acceptance", "low_acceptance"},
+             "wrong stream set", sorted(by))
+    for r in rows:
+        _require(r.get("scenario") == "speculative",
+                 "row mislabels its scenario", r)
+        _require(r.get("tokens_match") is True,
+                 "speculative streams disagree on greedy tokens", r)
+        _require(r.get("decode_tokens_per_s", 0) > 0,
+                 "stream decoded nothing", r)
+    hi, lo = by["high_acceptance"], by["low_acceptance"]
+    _require(by["vanilla"].get("proposed") == 0,
+             "vanilla stream proposed draft tokens", by["vanilla"])
+    _require(hi.get("enabled") is True,
+             "high-acceptance session turned itself off", hi)
+    _require(hi.get("proposed", 0) > 0,
+             "high-acceptance session never proposed", hi)
+    _require(hi.get("acceptance_rate", 0) >= 0.9,
+             "identity-padded draft should verify near-perfectly", hi)
+    _require(hi.get("speedup_vs_vanilla", 0) >= 1.3,
+             "speculative decode did not pay for its draft",
+             {"speedup": hi.get("speedup_vs_vanilla")})
+    _require(lo.get("enabled") is False,
+             "low-acceptance session failed to disable itself", lo)
+    _require(lo.get("speedup_vs_vanilla", 0) >= 0.9,
+             "disabled speculation degraded below vanilla",
+             {"speedup": lo.get("speedup_vs_vanilla")})
+
+
 CHECKS = {
     "affinity": check_affinity,
     "autoscale": check_autoscale,
     "multimodel": check_multimodel,
     "paged": check_paged,
+    "specdecode": check_specdecode,
 }
 
 

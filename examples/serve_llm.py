@@ -49,9 +49,21 @@ block telemetry lands in ``ReplicaSet.stats()["per_group"]
 ["block_telemetry"]`` and is printed after the run.  Works with
 ``--multi-model`` (both groups get the same paging knobs).
 
+Cross-group speculative decoding (``--speculative``, implies
+``--multi-model``): the draft group becomes the chat group's proposer —
+``role="draft"``/``paired_with="chat"`` aliases both onto one routing
+namespace and lets the ``weighted_capacity`` autoscaler scale the draft's
+entitlement by measured acceptance (``min_replicas=0``: a useless draft
+scales away entirely), and every chat replica runs a ``SpecDecodeSession``
+(draft proposes ``--spec-k`` tokens per round, target verifies them in one
+extend; greedy output identical to target-only decode).  All requests
+address the chat model; per-group proposed/accepted/acceptance land in
+``ReplicaSet.stats()["per_group"]`` and are printed after the run.
+
 Run: PYTHONPATH=src python examples/serve_llm.py [--requests 24] [--replicas 2]
      PYTHONPATH=src python examples/serve_llm.py --multi-model --replicas 3
      PYTHONPATH=src python examples/serve_llm.py --paged --block-size 16
+     PYTHONPATH=src python examples/serve_llm.py --speculative --spec-k 4
 """
 import argparse
 import time
@@ -75,6 +87,12 @@ def main():
                     help="serve a chat + draft model pair from ONE "
                          "replica set (weights 2:1), requests addressed "
                          "per model")
+    ap.add_argument("--speculative", action="store_true",
+                    help="arm cross-group speculative decoding on the "
+                         "chat group (implies --multi-model): the draft "
+                         "group proposes, chat replicas verify")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft proposals per speculative round")
     ap.add_argument("--paged", action=argparse.BooleanOptionalAction,
                     default=None,
                     help="block-paged KV engine per replica (default auto: "
@@ -99,18 +117,31 @@ def main():
                          # None = auto-resolve per config (see LLMServicer)
                          paged=args.paged, block_size=args.block_size,
                          num_blocks=args.num_blocks)
-        if args.multi_model:
+        if args.multi_model or args.speculative:
             # two model configs, one service: the draft model is the same
             # family scaled down (a speculative-decoding-style sidecar)
             draft_cfg = cfg.scaled(n_layers=2, d_model=64, n_heads=4,
                                    n_kv_heads=2, head_dim=16, d_ff=128)
-            model_names = ["chat", "draft"]
+            if args.speculative:
+                # the sidecar becomes a real proposer: every chat replica
+                # verifies its spec_k-token proposals in one extend, the
+                # draft group's entitlement tracks measured acceptance
+                draft_group = llm_model_group(
+                    "draft", draft_cfg, weight=1.0, role="draft",
+                    paired_with="chat", min_replicas=0, **engine_kw)
+                chat_group = llm_model_group(
+                    "chat", cfg, weight=2.0, draft_group=draft_group,
+                    spec_k=args.spec_k, **engine_kw)
+                model_names = ["chat"]  # drafts propose, they don't serve
+            else:
+                draft_group = llm_model_group("draft", draft_cfg,
+                                              weight=1.0, **engine_kw)
+                chat_group = llm_model_group("chat", cfg, weight=2.0,
+                                             **engine_kw)
+                model_names = ["chat", "draft"]
             replica_set = rh.add_service(ServiceDescription(
                 name="llm", replicas=max(2, args.replicas),
-                models=[llm_model_group("chat", cfg, weight=2.0,
-                                        **engine_kw),
-                        llm_model_group("draft", draft_cfg, weight=1.0,
-                                        **engine_kw)]))
+                models=[chat_group, draft_group]))
             print(f"launched multi-model llm service "
                   f"{replica_set.group_counts()}:", rh.services.list())
         else:
@@ -156,6 +187,14 @@ def main():
             print("per-model groups:",
                   {g: {"replicas": s["replicas"],
                        "requests": s["requests"], "cores": s["cores"]}
+                   for g, s in per_group.items()})
+        if args.speculative:
+            per_group = replica_set.stats()["per_group"]
+            print("speculative decode per group:",
+                  {g: {"role": s.get("role"),
+                       "proposed": s.get("proposed"),
+                       "accepted": s.get("accepted"),
+                       "acceptance": s.get("acceptance_rate")}
                    for g, s in per_group.items()})
         btel = {g: s.get("block_telemetry")
                 for g, s in replica_set.stats()["per_group"].items()}

@@ -248,9 +248,20 @@ class WeightedCapacityAutoscaler(LatencySLOAutoscaler):
     replica from a donor group (not itself violating, holding more than
     one replica, preferring the group furthest ABOVE its weighted share,
     then the coldest) so the violating group can be admitted on the freed
-    capacity.  Every group always keeps >= 1 replica (a model with no
-    replica cannot serve), and plain grows/shrinks remain bounded by
+    capacity.  Every group keeps at least its ``ModelGroup.min_replicas``
+    floor (default 1 — a model with no replica cannot serve; an explicit
+    0 allows scale-to-zero) and never exceeds its ``max_replicas``
+    ceiling; plain grows/shrinks remain bounded by
     ``autoscale_max_replicas`` (total across groups) and the ledger.
+
+    Speculative decoding closes the loop on draft-role groups
+    (``ModelGroup.role == "draft"``): the set-wide acceptance rate
+    (``ReplicaSet.spec_totals()``) scales the draft's effective weight —
+    a draft whose proposals are mostly rejected becomes the most
+    over-entitled donor — and once ``spec_min_proposed`` proposals have
+    been observed, a rate below ``spec_min_acceptance`` force-shrinks the
+    group one replica per tick (no sustain) toward its floor: spec-decode
+    turns itself off gracefully instead of burning cores.
 
     The manager consumes this policy through ``desired_groups(name, rs)``
     — one dict of per-group targets per tick, applied shrink-first so a
@@ -298,16 +309,17 @@ class WeightedCapacityAutoscaler(LatencySLOAutoscaler):
         return 0
 
     def _pick_donor(self, grower: str, targets: dict, dirs: dict,
-                    weights: dict, growers) -> Optional[str]:
+                    weights: dict, growers, bounds=None) -> Optional[str]:
         """Group to retire a replica from so ``grower`` can be admitted:
-        not itself wanting to grow, above one replica, preferring the
-        largest surplus over its weighted share and then the coldest
-        direction.  None when nobody can donate."""
+        not itself wanting to grow, above its per-group floor (default
+        1), preferring the largest surplus over its weighted share and
+        then the coldest direction.  None when nobody can donate."""
         total = sum(targets.values())
         total_w = sum(weights.values()) or float(len(weights))
         best = None
         for g, n in targets.items():
-            if g == grower or g in growers or n <= 1:
+            floor = (bounds or {}).get(g, (1, None))[0]
+            if g == grower or g in growers or n <= floor:
                 continue
             if dirs.get(g, 0) > 0:
                 continue  # donating from a violating group helps nobody
@@ -326,9 +338,37 @@ class WeightedCapacityAutoscaler(LatencySLOAutoscaler):
         counts = rs.group_counts()
         if not counts:
             return None
+        role_fn = getattr(rs, "group_role", None)
+        roles = {g: (role_fn(g) if role_fn else "serve") for g in counts}
+        bounds_fn = getattr(rs, "group_bounds", None)
+        bounds = {g: (bounds_fn(g) if bounds_fn else (1, None))
+                  for g in counts}
+        # speculative-decoding feedback: the set-wide acceptance rate
+        # (accepted / proposed across every spec session) prices a
+        # draft-role group's entitlement.  Below the floor — once enough
+        # proposals have been observed to judge — the draft force-shrinks
+        # toward its min_replicas (no sustain: a collapsed acceptance is
+        # as decisive as a breached SLO), turning spec-decode off
+        # gracefully instead of burning cores on rejected proposals.
+        acceptance = None
+        if any(r == "draft" for r in roles.values()) \
+                and hasattr(rs, "spec_totals"):
+            proposed, accepted = rs.spec_totals()
+            if proposed >= max(1, getattr(pol, "spec_min_proposed", 256)):
+                acceptance = accepted / proposed
+        min_acc = getattr(pol, "spec_min_acceptance", 0.3)
+        forced = set()
         dirs = {}
         for g in counts:
             d = self._group_direction(name, rs, g)
+            if roles[g] == "draft" and acceptance is not None:
+                if acceptance < min_acc:
+                    d = -1
+                    if counts[g] > bounds[g][0]:
+                        forced.add(g)
+                elif d < 0:
+                    d = 0  # a paying draft group is not idle overhead:
+                    #        its work shows up as the target's latency
             key = (name, g)
             if d > 0:
                 self._hot[key] = self._hot.get(key, 0) + 1
@@ -343,15 +383,25 @@ class WeightedCapacityAutoscaler(LatencySLOAutoscaler):
         growers = [g for g in counts if dirs[g] > 0
                    and self._hot.get((name, g), 0) >= self.sustain_up]
         shrinkers = [g for g in counts if dirs[g] < 0
-                     and self._cold.get((name, g), 0) >= self.sustain_down]
+                     and (g in forced
+                          or self._cold.get((name, g), 0)
+                          >= self.sustain_down)]
         targets = dict(counts)
         weights = {g: max(0.0, rs.group_weight(g)) for g in counts}
+        if acceptance is not None:
+            for g in counts:  # entitlement scales with measured usefulness
+                if roles[g] == "draft":
+                    weights[g] *= acceptance
         for g in growers:
+            gmax = bounds[g][1]
+            if gmax is not None and targets[g] >= gmax:
+                continue  # pinned by the operator's per-group ceiling
             donor = None
             headroom = rs.capacity_headroom(group=g)
             at_max = sum(targets.values()) >= pol.autoscale_max_replicas
             if at_max or (headroom is not None and headroom < 1):
-                donor = self._pick_donor(g, targets, dirs, weights, growers)
+                donor = self._pick_donor(g, targets, dirs, weights, growers,
+                                         bounds=bounds)
                 if donor is None:
                     # nothing to retire and nothing free: a sustained
                     # denial episode, visible on the set's stats
@@ -367,8 +417,10 @@ class WeightedCapacityAutoscaler(LatencySLOAutoscaler):
         for g in shrinkers:
             if targets[g] != counts[g]:
                 continue  # already donated (or grew) this tick
-            if targets[g] <= 1:
-                continue  # every model keeps at least one replica
+            if targets[g] <= bounds[g][0]:
+                continue  # per-group floor (default: every model keeps
+                #           at least one replica; an explicit
+                #           min_replicas=0 lets a draft scale off)
             if sum(targets.values()) <= min_total:
                 continue  # the SET total honors autoscale_min_replicas,
                 #           same floor the per-set policies enforce

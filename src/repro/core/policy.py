@@ -67,6 +67,13 @@ class ExecutionPolicy:
     slo_window_s: float = 5.0  # latency_slo: latency sample window
     slo_down_factor: float = 0.5  # latency_slo: shrink only when p95 is
     #                               under factor * slo (and queues shallow)
+    # speculative decoding (weighted_capacity draft-group entitlements):
+    # a draft-role ModelGroup's weight is scaled by the set's measured
+    # acceptance rate, and once enough proposals are observed a rate
+    # below the floor force-shrinks the group toward its min_replicas —
+    # spec-decode turns off gracefully instead of burning cores
+    spec_min_acceptance: float = 0.3  # acceptance floor for draft groups
+    spec_min_proposed: int = 256  # proposals to observe before judging
     warmup: bool = False  # prime new replicas (servicer.warmup(): compile
     #                       + a token of decode) before the router sees them
     # fault tolerance

@@ -97,6 +97,20 @@ class ModelGroup:
     #                                     ExecutionPolicy.slo_p95_ms
     requirements: Optional[ResourceRequirements] = None  # per-replica
     #                                 claim shape; None -> desc.requirements
+    role: str = "serve"  # | "draft": a speculative-decoding draft group.
+    #   Draft groups share their target group's affinity namespace under
+    #   residency-aware routers (both legs of one prompt pin to the same
+    #   radix key, keeping both KV stems warm), and the weighted_capacity
+    #   autoscaler scales their entitlement by the set's measured
+    #   acceptance rate — a low-acceptance workload shrinks the draft
+    #   toward min_replicas instead of burning cores
+    paired_with: Optional[str] = None  # draft role: target group sharing
+    #   the affinity namespace; None -> the first serve-role group
+    min_replicas: Optional[int] = None  # per-group autoscale floor; None
+    #   -> 1 (every model keeps a replica).  An EXPLICIT 0 allows the
+    #   rebalancer to retire the group entirely (spec-decode off)
+    max_replicas: Optional[int] = None  # per-group autoscale ceiling;
+    #   None -> bounded only by the set total / ledger
 
 
 @dataclasses.dataclass
@@ -502,6 +516,60 @@ class ReplicaSet:
             slo = getattr(self.manager.policy, "slo_p95_ms", 250.0)
         return float(slo)
 
+    def group_role(self, group: str) -> str:
+        return self.model_groups[group].role
+
+    def group_bounds(self, group: str) -> tuple:
+        """Per-group autoscale bounds ``(min, max)``: min defaults to 1
+        (every model keeps a replica); an explicit ``min_replicas=0``
+        allows scale-to-zero; max is None when unbounded."""
+        mg = self.model_groups[group]
+        gmin = 1 if mg.min_replicas is None else max(0, mg.min_replicas)
+        gmax = mg.max_replicas
+        if gmax is not None:
+            gmax = max(gmin, gmax)
+        return gmin, gmax
+
+    def _affinity_alias(self, group: str) -> str:
+        """Affinity-namespace alias: a draft-role group shares its target
+        group's namespace (``paired_with``, else the first serve-role
+        group), so the draft and target legs of one prompt pin to the
+        same radix key and residency view — replica indices are unique
+        set-wide, so both groups' members coexist in one index and each
+        leg still only picks among its own group's candidates."""
+        mg = self.model_groups.get(group)
+        if mg is None or mg.role != "draft":
+            return group
+        if mg.paired_with is not None and mg.paired_with in self.model_groups:
+            return mg.paired_with
+        for g, other in self.model_groups.items():
+            if other.role != "draft":
+                return g
+        return group
+
+    def spec_totals(self) -> tuple:
+        """Set-wide speculative-decoding counters ``(proposed, accepted)``
+        summed over live replicas whose servicers run a spec-decode
+        session — the acceptance signal the ``weighted_capacity``
+        autoscaler scales draft-group entitlements by."""
+        with self._lock:
+            pairs = [(ep, inst) for ep, inst
+                     in zip(self.endpoints, self.instances)
+                     if not ep.retired]
+        proposed = accepted = 0
+        for ep, inst in pairs:
+            fn = getattr(getattr(inst, "servicer", None), "spec_stats", None)
+            if fn is None:
+                continue
+            try:
+                ss = fn()
+            except Exception:
+                continue  # crashed mid-read: next tick retries
+            if ss:
+                proposed += int(ss.get("proposed", 0))
+                accepted += int(ss.get("accepted", 0))
+        return proposed, accepted
+
     def _group_requirements(self, group: str) -> ResourceRequirements:
         return self.model_groups[group].requirements or self.desc.requirements
 
@@ -639,11 +707,20 @@ class ReplicaSet:
         members = tuple(ep.replica_idx for ep in eps)
         group = (self.name, self._uid, self._gen, gsel) + members
         info: dict = {}
+        # residency-aware routers get the PAIR namespace: a draft-role
+        # group's sticky/residency state keys under its target group, so
+        # the draft and target legs of one prompt share a radix key (the
+        # radix indices hold many members per prefix, and each leg only
+        # picks among its own group's candidates).  Hash-map affinity
+        # routers keep per-group namespaces — one key -> one member there,
+        # and two legs would evict each other's assignment every request.
+        gaff = (self._affinity_alias(gsel)
+                if getattr(router, "uses_residency", False) else gsel)
         idx = router.pick(cost, n_instances=len(eps), group=group,
                           queue_depths=[ep.depth() for ep in eps],
                           affinity_key=affinity_key, info=info,
                           members=members,
-                          affinity_group=(self.name, self._uid, gsel))
+                          affinity_group=(self.name, self._uid, gaff))
         eps[idx].bump("cost", cost)
         if account_affinity:
             affinity = info.get("affinity")
@@ -681,17 +758,28 @@ class ReplicaSet:
         # per-group aggregation and headroom-aware routing build on.
         # Slot-pool engines (and replicas still starting up) report None.
         block_tel: dict = {}  # replica_idx -> telemetry dict
+        spec_tel: dict = {}  # replica_idx -> spec-decode session counters
         for ep, inst in zip(eps, insts):
+            if ep.retired:
+                continue
             fn = getattr(getattr(inst, "servicer", None),
                          "block_telemetry", None)
-            if fn is None or ep.retired:
-                continue
-            try:
-                tel = fn()
-            except Exception:
-                tel = None  # crashed mid-read: next stats tick retries
-            if tel:
-                block_tel[ep.replica_idx] = tel
+            if fn is not None:
+                try:
+                    tel = fn()
+                except Exception:
+                    tel = None  # crashed mid-read: next stats tick retries
+                if tel:
+                    block_tel[ep.replica_idx] = tel
+            sfn = getattr(getattr(inst, "servicer", None),
+                          "spec_stats", None)
+            if sfn is not None:
+                try:
+                    ss = sfn()
+                except Exception:
+                    ss = None
+                if ss:
+                    spec_tel[ep.replica_idx] = ss
         all_samples: list = []
         ep_samples: dict = {}  # replica_idx -> latency snapshot (reused by
         #                        the per-group aggregation below)
@@ -753,8 +841,27 @@ class ReplicaSet:
                 gs["block_telemetry"] = summed
             else:  # no paged replicas in the group (slot pool / starting)
                 gs["block_telemetry"] = None
+            # speculative-decoding counters: a group's own sessions'
+            # proposed/accepted (the target group hosts the sessions —
+            # its servicers embed the draft engine), plus the group role
+            gs["role"] = self.group_role(g)
+            gspec = [spec_tel[ep.replica_idx] for ep in live
+                     if ep.replica_idx in spec_tel]
+            gs["proposed"] = sum(int(s.get("proposed", 0)) for s in gspec)
+            gs["accepted"] = sum(int(s.get("accepted", 0)) for s in gspec)
+            gs["acceptance_rate"] = (gs["accepted"] / gs["proposed"]
+                                     if gs["proposed"] else None)
             per_group[g] = gs
         agg["per_group"] = per_group
+        # a draft-role group runs no sessions itself (the target group's
+        # servicers do); surface the SET-WIDE acceptance on it so the
+        # signal that scales its entitlement is observable where the
+        # operator looks for it
+        tot_p = sum(int(s.get("proposed", 0)) for s in spec_tel.values())
+        tot_a = sum(int(s.get("accepted", 0)) for s in spec_tel.values())
+        for g, gs in per_group.items():
+            if gs["role"] == "draft" and not gs["proposed"]:
+                gs["acceptance_rate"] = (tot_a / tot_p) if tot_p else None
         return agg
 
     def latency_p95(self, window_s: Optional[float] = None,
@@ -863,8 +970,11 @@ class ReplicaSet:
                         seqs = fn()
                 except Exception:
                     continue  # crashed mid-snapshot: next tick retries
-                router.update_residency((self.name, self._uid, ep.group),
-                                        ep.replica_idx, seqs)
+                # draft-role groups gossip into their PAIR namespace (see
+                # route()): the shared radix index is what lets a target
+                # leg see which replica holds the draft's warm stem
+                gkey = (self.name, self._uid, self._affinity_alias(ep.group))
+                router.update_residency(gkey, ep.replica_idx, seqs)
                 # piggyback physical headroom on the same gossip tick so
                 # residency matches are weighed by free-block pressure
                 tel_fn = getattr(inst.servicer, "block_telemetry", None)
@@ -876,7 +986,7 @@ class ReplicaSet:
                     continue
                 if tel:
                     router.update_headroom(
-                        (self.name, self._uid, ep.group), ep.replica_idx,
+                        gkey, ep.replica_idx,
                         tel["free_blocks"], tel["total_blocks"])
 
     def mean_depth(self, group: Optional[str] = None) -> float:
@@ -1095,7 +1205,11 @@ class ReplicaSet:
 
     def _scale_group_locked(self, gname: str, n: int,
                             ready_timeout: Optional[float]):
-        n = max(1, n)
+        gmin, gmax = self.group_bounds(gname)
+        n = max(gmin, n)  # default floor 1; an explicit min_replicas=0
+        #                   lets a draft group scale all the way off
+        if gmax is not None:
+            n = min(n, gmax)
         timeout = (self.desc.ready_timeout if ready_timeout is None
                    else ready_timeout)
 
@@ -1261,9 +1375,15 @@ class ReplicaSet:
             # pull that snapshotted these endpoints can't resurrect them
             for ep in endpoints:
                 # the replica is gone for good: sticky sessions homed on
-                # it must re-home, and its gossiped residency is stale
-                self.manager.router.forget_member(
-                    (self.name, self._uid, ep.group), ep.replica_idx)
+                # it must re-home, and its gossiped residency is stale.
+                # Forget under both the plain and (for draft groups) the
+                # pair-aliased namespace — sticky state lives under the
+                # plain key on hash-affinity routers and under the alias
+                # on residency-aware ones, and forgetting is idempotent
+                keys = {ep.group, self._affinity_alias(ep.group)}
+                for g in keys:
+                    self.manager.router.forget_member(
+                        (self.name, self._uid, g), ep.replica_idx)
 
     def _declare_dead(self, inst: ServiceInstance):
         """Mark one replica permanently dead (restart budget exhausted, or

@@ -7,7 +7,8 @@ from typing import Any, Optional
 
 from repro.core.service import ModelGroup
 from repro.models.config import ModelConfig
-from .engine import InferenceEngine, make_engine_from_scratch
+from .engine import (InferenceEngine, SpecDecodeSession,
+                     make_engine_from_scratch)
 
 
 def _resolve_paged(cfg: ModelConfig, engine_kw: dict) -> dict:
@@ -26,6 +27,34 @@ def _resolve_paged(cfg: ModelConfig, engine_kw: dict) -> dict:
     return kw
 
 
+def _resolve_draft_engine(spec, *, seed: int = 0) -> InferenceEngine:
+    """``draft_group`` resolution: accept the co-located draft in any of
+    the shapes a launcher naturally holds — an ``InferenceEngine``, a
+    built ``LLMServicer``, a ``ModelGroup`` (whose factory builds one; the
+    ``--multi-model`` path hands exactly this), or a bare ``ModelConfig``
+    (a fresh engine with auto-resolved pool)."""
+    if isinstance(spec, InferenceEngine):
+        return spec
+    if isinstance(spec, LLMServicer):
+        return spec.engine
+    if isinstance(spec, ModelGroup):
+        if spec.factory is None:
+            raise ValueError(
+                f"draft_group {spec.name!r} has no factory to build a "
+                f"draft servicer from")
+        servicer = spec.factory()
+        engine = getattr(servicer, "engine", None)
+        if engine is None:
+            raise TypeError(
+                f"draft_group {spec.name!r} factory built "
+                f"{type(servicer).__name__}, which exposes no .engine")
+        return engine
+    if isinstance(spec, ModelConfig):
+        return make_engine_from_scratch(spec, seed=seed,
+                                        **_resolve_paged(spec, {}))
+    raise TypeError(f"cannot resolve a draft engine from {type(spec)}")
+
+
 class LLMServicer:
     """Servicer protocol (submit/step) around an InferenceEngine.
 
@@ -37,18 +66,39 @@ class LLMServicer:
     Replicas default to the block-paged engine for dense/moe configs
     (``paged=None`` auto-resolves via ``_resolve_paged``); pass
     ``paged=False`` to force the slot pool.
+
+    ``draft_group`` arms cross-group speculative decoding: a co-located
+    draft engine (resolved from a ``ModelGroup``/``ModelConfig``/engine,
+    see ``_resolve_draft_engine``) proposes ``spec_k`` tokens per round
+    and this replica's target engine verifies them in one extend forward
+    (``SpecDecodeSession``).  Greedy output stays token-for-token
+    identical to target-only decode; sampled requests are refused by the
+    session.  ``spec_stats()`` exposes the proposed/accepted counters the
+    replica set aggregates per group for the autoscaler.
     """
 
     def __init__(self, cfg: ModelConfig, params=None, *, seed: int = 0,
-                 **engine_kw):
+                 draft_group=None, spec_k: int = 4,
+                 spec_min_acceptance: float = 0.0,
+                 spec_probe_proposals: int = 64, **engine_kw):
         engine_kw = _resolve_paged(cfg, engine_kw)
         if params is None:
             self.engine = make_engine_from_scratch(cfg, seed=seed, **engine_kw)
         else:
             self.engine = InferenceEngine(cfg, params, **engine_kw)
+        self.session = None
+        if draft_group is not None:
+            draft = _resolve_draft_engine(draft_group, seed=seed)
+            self.session = SpecDecodeSession(
+                self.engine, draft, k=spec_k,
+                min_acceptance=spec_min_acceptance,
+                probe_proposals=spec_probe_proposals)
+        # everything below drives this one surface: the session when
+        # speculating, the bare engine otherwise (identical protocol)
+        self._driver = self.session or self.engine
 
     def submit(self, payload, **meta) -> int:
-        return self.engine.submit(
+        return self._driver.submit(
             payload["prompt"],
             max_new_tokens=payload.get("max_new_tokens", 16),
             temperature=payload.get("temperature", 0.0),
@@ -56,12 +106,12 @@ class LLMServicer:
         )
 
     def step(self):
-        if not self.engine.has_work():
+        if not self._driver.has_work():
             time.sleep(1e-4)
             return []
-        self.engine.step()
+        self._driver.step()
         out = []
-        for req in self.engine.collect_finished():
+        for req in self._driver.collect_finished():
             out.append((req.uid, {
                 "tokens": req.output,
                 "n_prompt": req.n_prompt,
@@ -95,6 +145,14 @@ class LLMServicer:
     def stats(self):
         return self.engine.stats
 
+    def spec_stats(self):
+        """Speculative-decoding counters (k, proposed, accepted,
+        acceptance_rate, rounds, enabled) when a draft is armed; None on
+        plain replicas.  The replica set sums these per group and the
+        ``weighted_capacity`` autoscaler turns the set-wide acceptance
+        rate into the draft group's capacity entitlement."""
+        return self.session.spec_stats() if self.session else None
+
     def block_telemetry(self):
         """Live paged-pool gauges (free/total/reserved/shared blocks, CoW
         copies, evictions) the replica set aggregates per group and
@@ -117,7 +175,10 @@ def llm_service_factory(cfg: ModelConfig, params=None, **engine_kw):
 def llm_model_group(name: str, cfg: ModelConfig, params=None, *,
                     weight: float = 1.0, replicas: Optional[int] = None,
                     slo_p95_ms: Optional[float] = None,
-                    requirements=None, **engine_kw):
+                    requirements=None, role: str = "serve",
+                    paired_with: Optional[str] = None,
+                    min_replicas: Optional[int] = None,
+                    max_replicas: Optional[int] = None, **engine_kw):
     """One model config of a multi-model service: a ``ModelGroup`` whose
     factory builds an ``LLMServicer`` for ``cfg``.
 
@@ -130,9 +191,21 @@ def llm_model_group(name: str, cfg: ModelConfig, params=None, *,
     set's capacity; ``slo_p95_ms`` gives it its own latency target under
     the ``weighted_capacity`` autoscaler.  Engine kwargs (including the
     auto-defaulting ``paged`` flag and its ``block_size``/``num_blocks``
-    knobs) apply to every replica of the group.
+    knobs, plus the spec-decode ``draft_group``/``spec_k`` servicer
+    kwargs) apply to every replica of the group.
+
+    ``role="draft"`` marks the group as the proposer side of a
+    speculative pair: ``paired_with`` names the target group (routing
+    aliases both onto one affinity namespace so drafts land where the
+    target's KV prefix is resident), and the ``weighted_capacity``
+    autoscaler scales the group's entitlement by the measured acceptance
+    rate.  ``min_replicas``/``max_replicas`` bound autoscaling per group;
+    an explicit ``min_replicas=0`` allows a cold draft group to be
+    scaled away entirely.
     """
     return ModelGroup(name=name,
                       factory=llm_service_factory(cfg, params, **engine_kw),
                       weight=weight, replicas=replicas,
-                      slo_p95_ms=slo_p95_ms, requirements=requirements)
+                      slo_p95_ms=slo_p95_ms, requirements=requirements,
+                      role=role, paired_with=paired_with,
+                      min_replicas=min_replicas, max_replicas=max_replicas)

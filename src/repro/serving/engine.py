@@ -61,6 +61,27 @@ slot cache (masked columns underflow to exact zeros in the softmax).
 Telemetry (per-step active slots, tokens, queue depth, live
 free/reserved block gauges) feeds the paper's utilization/throughput
 experiments and the replica set's headroom-aware routing.
+
+Speculative decoding (``SpecDecodeSession``) couples TWO engines into a
+propose/verify/rewind cycle — the first cross-group *pipeline* (cheap
+surrogate proposes, expensive model validates).  Each round: (1) the
+DRAFT engine proposes ``k`` tokens per active sequence via its ordinary
+batched greedy decode (feeding any catch-up tokens it missed first);
+(2) the TARGET engine verifies all ``k+1`` positions in ONE forward
+through the chunked-extend path (``ModelApi.extend`` — on the paged pool
+the verified chunk's K/V is scattered straight into the block store, no
+per-token decode round-trips); (3) the leftover-token acceptance rule
+(``repro.serving.sampling.speculative_accept``) emits the longest
+matching proposal prefix PLUS the target's own pick at the first
+divergence, so greedy output is token-for-token identical to target-only
+decode; (4) both engines REWIND past the rejected suffix — the slot pool
+by batch-resetting cache lengths (``set_lens``), the paged pool by
+truncating the block table (tail blocks free back to the admission
+reserve; stale K/V below the rewind is never attended and is overwritten
+by the next round's writes).  A session whose measured acceptance rate
+stays under ``min_acceptance`` turns speculation off and degenerates to
+plain target-engine stepping — the same graceful-off signal the
+``weighted_capacity`` autoscaler consumes fleet-wide.
 """
 from __future__ import annotations
 
@@ -516,17 +537,21 @@ class InferenceEngine:
         return False
 
     def _decode_step(self):
-        self._key, sub = jax.random.split(self._key)
         self.pool.cache, logits = self._decode(
             self.params, self.pool.cache, self._last_tokens)
         temps = np.zeros((self.max_num_seqs,), np.float32)
         for slot, req in self.running.items():
             temps[slot] = req.temperature
-        # greedy for temp==0 slots, sampled otherwise
+        # greedy for temp==0 slots, sampled otherwise; an all-greedy batch
+        # (the common serving case) skips the sampled path AND the key
+        # split entirely instead of paying for tokens it discards
         greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        sampled = sample(logits, sub, temperature=1.0)
-        t = jnp.asarray(temps)
-        tokens = jnp.where(t > 0, sampled, greedy)
+        if np.any(temps > 0):
+            self._key, sub = jax.random.split(self._key)
+            sampled = sample(logits, sub, temperature=1.0)
+            tokens = jnp.where(jnp.asarray(temps) > 0, sampled, greedy)
+        else:
+            tokens = greedy
         tokens_np = np.asarray(tokens)
         # only a resumed request forces the host-side token rewrite (and
         # the device re-upload below); the common all-decode step keeps the
@@ -833,14 +858,20 @@ class InferenceEngine:
             wphys[i] = r.table[p // bs]
             woff[i] = p % bs
             temps[i] = r.temperature
-        self._key, sub = jax.random.split(self._key)
         self.pool.cache, logits = self._paged_decode(
             self.params, self.pool.cache, jnp.asarray(bt),
             jnp.asarray(lens), jnp.asarray(tokens), jnp.asarray(wphys),
             jnp.asarray(woff))
+        # all-greedy batches skip the sampled path and the key split (the
+        # same fast path as the slot pool's _decode_step)
         greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        sampled = sample(logits, sub, temperature=1.0)
-        toks = np.asarray(jnp.where(jnp.asarray(temps) > 0, sampled, greedy))
+        if np.any(temps > 0):
+            self._key, sub = jax.random.split(self._key)
+            sampled = sample(logits, sub, temperature=1.0)
+            toks = np.asarray(jnp.where(jnp.asarray(temps) > 0, sampled,
+                                        greedy))
+        else:
+            toks = np.asarray(greedy)
         events = []
         for i, r in enumerate(active):
             tok = int(toks[i])
@@ -882,6 +913,528 @@ class InferenceEngine:
         self.stats.free_blocks = self.pool.n_free
         self.stats.reserved_blocks = self._reserved
         return done
+
+
+@dataclasses.dataclass
+class _SpecSeq:
+    """One sequence's coupled state across the draft and target engines."""
+
+    treq: Request  # target-engine request (owns the emitted transcript)
+    dreq: Optional[Request]  # draft-engine request (proposal KV)
+    max_new: int  # real token budget (treq's is inflated until pairing)
+    ready: bool = False  # both engines prefilled; in the propose rotation
+    t_cov: int = 0  # target cache positions holding valid KV
+    d_cov: int = 0  # draft cache positions holding valid KV
+    last_tok: int = 0  # last emitted token (target's next verify feed)
+    # sequence tokens the draft has not fed yet (ends with last_tok);
+    # normally one token, two after a fully-accepted round
+    draft_pending: list = dataclasses.field(default_factory=list)
+
+
+class SpecDecodeSession:
+    """Cross-engine speculative decoding: DRAFT proposes, TARGET verifies.
+
+    Wraps two ``InferenceEngine``s (any mix of slot-pool and paged) behind
+    the engine's own submit/step/collect_finished surface.  Per round the
+    draft runs ``k`` batched greedy decode steps to propose ``k`` tokens
+    per active sequence, then the target verifies all ``k+1`` positions in
+    ONE ``extend`` forward; the leftover-token rule emits the longest
+    matching proposal prefix plus the target's pick at the first
+    divergence (so greedy output is token-for-token identical to
+    target-only decode), and both caches rewind past the rejected suffix
+    (paged: block-table truncation, tail blocks return to the admission
+    reserve; slot: batched length reset).
+
+    Greedy only: sampled requests need the rejection-sampling acceptance
+    rule and are refused at ``submit``.  ``min_acceptance`` > 0 arms the
+    graceful-off path: once ``probe_proposals`` proposals have been
+    measured, a session whose acceptance rate sits below the floor stops
+    speculating permanently and every subsequent ``step()`` is a plain
+    target-engine step (identical call pattern and cost to vanilla
+    decode).  ``proposed``/``accepted`` counters feed the per-group stats
+    the ``weighted_capacity`` autoscaler uses to shrink a low-acceptance
+    draft group's entitlement fleet-wide.
+    """
+
+    def __init__(self, target: InferenceEngine, draft: InferenceEngine, *,
+                 k: int = 4, min_acceptance: float = 0.0,
+                 probe_proposals: int = 64):
+        if target.api.extend is None or \
+                target.cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                "speculative decoding needs a target family with chunked "
+                f"extend (dense/moe), not {target.cfg.family!r}")
+        if draft.cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                "speculative decoding needs a positional-KV draft family "
+                f"(dense/moe), not {draft.cfg.family!r}")
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        self.target = target
+        self.draft = draft
+        self.k = k
+        self.min_acceptance = float(min_acceptance)
+        self.probe_proposals = int(probe_proposals)
+        self.spec_enabled = True
+        self.proposed = 0
+        self.accepted = 0
+        self.rounds = 0
+        self._seqs: "OrderedDict[int, _SpecSeq]" = OrderedDict()
+        self._extend_jits: dict = {}  # id(engine) -> jitted slot extend
+
+    # ------------------------------------------------------------------
+    # Engine-compatible surface
+    # ------------------------------------------------------------------
+    @property
+    def stats(self) -> EngineStats:
+        return self.target.stats
+
+    def spec_stats(self) -> dict:
+        return {
+            "k": self.k,
+            "proposed": self.proposed,
+            "accepted": self.accepted,
+            "acceptance_rate": (self.accepted / self.proposed
+                                if self.proposed else None),
+            "rounds": self.rounds,
+            "enabled": self.spec_enabled,
+        }
+
+    def submit(self, prompt, *, max_new_tokens=16, temperature=0.0,
+               eos_id=None) -> int:
+        if temperature and temperature > 0:
+            raise ValueError(
+                "SpecDecodeSession serves greedy (temperature=0) requests "
+                "only; the leftover-token rule does not cover sampling")
+        prompt = list(prompt)
+        m = len(prompt)
+        # the verify forward writes up to k+1 positions past the accepted
+        # prefix, so the full budget must fit both caches with that slack
+        need = m + max_new_tokens + self.k + 1
+        for eng, who in ((self.target, "target"), (self.draft, "draft")):
+            if need >= eng.max_len:
+                raise ValueError(
+                    f"prompt ({m}) + max_new_tokens ({max_new_tokens}) + "
+                    f"k+1 must fit the {who} engine max_len ({eng.max_len})")
+            if not eng.paged and m > max(eng.buckets):
+                raise ValueError(
+                    f"prompt ({m}) exceeds the {who} engine's largest "
+                    f"prefill bucket ({max(eng.buckets)}): the truncated "
+                    f"prefill would break the verify position math")
+        if not self.spec_enabled:
+            # speculation permanently off: plain target submit — the
+            # inflated budget below is only ever restored by
+            # _pair_ready, which a disabled session never runs
+            return self.target.submit(prompt,
+                                      max_new_tokens=max_new_tokens,
+                                      eos_id=eos_id)
+        # inflate the target budget so admission (paged: the block
+        # reservation; both: _check_done) covers the speculative
+        # overshoot; restored to the real budget when the pair activates
+        uid = self.target.submit(prompt,
+                                 max_new_tokens=max_new_tokens + self.k + 1,
+                                 eos_id=eos_id)
+        treq = self.target.queue[-1]
+        dreq = None
+        if self.spec_enabled:
+            self.draft.submit(prompt,
+                              max_new_tokens=max_new_tokens + self.k + 2,
+                              eos_id=None)  # the draft never self-finishes
+            dreq = self.draft.queue[-1]
+        self._seqs[uid] = _SpecSeq(treq=treq, dreq=dreq,
+                                   max_new=max_new_tokens)
+        return uid
+
+    def has_work(self) -> bool:
+        return self.target.has_work()
+
+    def step(self) -> list:
+        t = self.target
+        if not self.spec_enabled:
+            # degenerate mode: EXACTLY a vanilla engine step (same calls,
+            # same cost) — speculation is off, not merely idle
+            return t.step()
+        if t.paged:
+            t._admit_paged()
+            t.stats.peak_running = max(t.stats.peak_running, len(t.running))
+            t._prefill_step_paged()
+        else:
+            t._admit()
+            self._complete_slot_resumes(t)
+        d = self.draft
+        if d.paged:
+            d._admit_paged()
+            d._prefill_step_paged()
+        else:
+            d._admit()
+            self._complete_slot_resumes(d)
+        self._pair_ready()
+        active = [s for s in self._seqs.values()
+                  if s.ready and not s.treq.done]
+        events = self._spec_round(active) if active else []
+        t.stats.steps += 1
+        t.stats.active_slot_steps += len(t.running)
+        t.stats.slot_steps += max(t.max_num_seqs, len(t.running))
+        if t.paged:
+            t.stats.shared_block_peak = max(t.stats.shared_block_peak,
+                                            t.pool.block_savings())
+            t.stats.free_blocks = t.pool.n_free
+            t.stats.reserved_blocks = t._reserved
+        if self.min_acceptance > 0 and self.proposed >= self.probe_proposals \
+                and self.accepted < self.min_acceptance * self.proposed:
+            self._disable_spec()
+        return events
+
+    def collect_finished(self) -> list:
+        done = self.target.collect_finished()
+        for req in done:
+            seq = self._seqs.pop(req.uid, None)
+            if seq is not None and seq.dreq is not None:
+                self._retire_draft(seq)
+        if self.spec_enabled:
+            self.draft.collect_finished()
+        return done
+
+    def run(self, *, max_steps: int = 100000) -> dict:
+        done: dict[int, Request] = {}
+        for _ in range(max_steps):
+            if not self.has_work():
+                break
+            self.step()
+            for req in self.collect_finished():
+                done[req.uid] = req
+        return done
+
+    # ------------------------------------------------------------------
+    # Pairing and teardown
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _prefilled(eng: InferenceEngine, req: Request) -> bool:
+        if not req.output:
+            return False
+        if eng.paged:
+            return not req.pending_tokens
+        return req.slot is not None and not req.pending_prefix
+
+    def _pair_ready(self):
+        for s in self._seqs.values():
+            if s.ready or s.treq.done:
+                continue
+            if not self._prefilled(self.target, s.treq):
+                continue
+            if s.dreq is None or not self._prefilled(self.draft, s.dreq):
+                continue
+            m = s.treq.n_prompt
+            s.t_cov = s.treq.pos if self.target.paged else m
+            s.d_cov = s.dreq.pos if self.draft.paged else m
+            s.last_tok = s.treq.output[-1]
+            s.draft_pending = [s.last_tok]
+            s.treq.max_new_tokens = s.max_new  # restore the real budget
+            self.target._check_done(s.treq)
+            s.ready = True
+
+    def _retire_draft(self, seq: _SpecSeq):
+        """Finish the draft-side request so its engine frees (or retains
+        as residency) the proposal KV.  The residency transcript is
+        truncated to what the draft cache actually covers — claiming the
+        full emitted sequence would let a later resume attend garbage."""
+        d = self.draft
+        dreq = seq.dreq
+        for i, r in enumerate(d.queue):  # identity, not dataclass ==
+            if r is dreq:
+                del d.queue[i]
+                return
+        if not self._prefilled(d, dreq):
+            dreq.truncated = True  # mid-prefill: no residency claim
+        else:
+            transcript = (list(seq.treq.prompt) + list(seq.treq.output))
+            d_cov = seq.d_cov if seq.ready else dreq.n_prompt
+            dreq.output = transcript[dreq.n_prompt:d_cov + 1]
+            if not dreq.output:
+                dreq.truncated = True
+        dreq.finished_at = time.perf_counter()
+
+    def _disable_spec(self):
+        """Acceptance collapsed: stop speculating for good.  Draft-side
+        requests retire (their KV frees), inflated target budgets are
+        restored, and every later step() is a plain target-engine step."""
+        self.spec_enabled = False
+        slot_tokens = {}
+        for s in self._seqs.values():
+            if not s.ready:
+                s.treq.max_new_tokens = s.max_new
+                self.target._check_done(s.treq)
+            elif not self.target.paged and s.treq.slot is not None:
+                slot_tokens[s.treq.slot] = s.last_tok
+            if s.dreq is not None:
+                self._retire_draft(s)
+                s.dreq = None
+        if slot_tokens:  # hand the feeds to the vanilla decode loop
+            lt = np.asarray(self.target._last_tokens).copy()
+            for slot, tok in slot_tokens.items():
+                lt[slot] = tok
+            self.target._last_tokens = jnp.asarray(lt)
+        self.draft.collect_finished()
+
+    # ------------------------------------------------------------------
+    # Slot-pool prefix-resume completion (chunked, via extend)
+    # ------------------------------------------------------------------
+    def _extend_for(self, eng: InferenceEngine):
+        fn = self._extend_jits.get(id(eng))
+        if fn is None:
+            api, cfg, mesh = eng.api, eng.cfg, eng.mesh
+
+            def extend_fn(params, cache, tokens):
+                return api.extend(params, cache, tokens, cfg, mesh=mesh)
+
+            fn = jax.jit(extend_fn, donate_argnums=(1,))
+            self._extend_jits[id(eng)] = fn
+        return fn
+
+    def _complete_slot_resumes(self, eng: InferenceEngine):
+        """A slot-pool prefix resume leaves the prompt suffix to drip in
+        one token per decode step; the session instead feeds the whole
+        suffix through ONE bucketed extend (the same chunked path verify
+        uses), so a resumed sequence joins the propose rotation
+        immediately.  A running request with no output yet is NECESSARILY
+        a resume (fresh admission emits its first token inside
+        ``_admit``) — including the fully-covered case where
+        ``pending_prefix`` is empty and only the final prompt token needs
+        feeding, which the vanilla decode loop would pick up from
+        ``_last_tokens`` but the session must extend explicitly.  All
+        resumes admitted this step share ONE extend (each slot's suffix
+        in its own row, bucket sized to the longest) — per-request
+        forwards would pay full depth per resume."""
+        todo = [req for req in eng.running.values()
+                if not req.output and req.slot is not None]
+        if not todo:
+            return
+        chunks = {req.slot: list(req.prompt[req.cached_prefix:])
+                  for req in todo}
+        bucket = _bucket(max(len(c) for c in chunks.values()), eng.buckets)
+        tokens = np.zeros((eng.max_num_seqs, bucket), np.int32)
+        for slot, chunk in chunks.items():
+            tokens[slot, :len(chunk)] = chunk
+        ext = self._extend_for(eng)
+        eng.pool.cache, logits = ext(eng.params, eng.pool.cache,
+                                     jnp.asarray(tokens))
+        gtok = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        extra = {}
+        for req in todo:
+            T0 = len(chunks[req.slot])
+            tok = int(gtok[req.slot, T0 - 1])
+            req.pending_prefix = []
+            req.output.append(tok)
+            req.last_token = tok
+            req.first_token_at = time.perf_counter()
+            eng.stats.prefill_tokens += T0 - 1
+            extra[req.slot] = req.cached_prefix + T0
+            if eng is self.target:
+                eng._last_tokens = eng._last_tokens.at[req.slot].set(tok)
+                eng._check_done(req)
+        self._rewind_slots(eng, extra=extra)
+
+    def _rewind_slots(self, eng: InferenceEngine, extra=None):
+        """Batch-reset slot lengths after an extend/decode advanced EVERY
+        slot: each running sequence returns to its true coverage (stale KV
+        past it is never attended and is overwritten by later writes —
+        the same argument the prefix-resume rewind makes).  Untracked
+        requests (admitted but not yet paired) are covered too: their
+        lens were bumped just the same."""
+        updates = dict(extra or {})
+        cov_by_req = {}
+        for s in self._seqs.values():
+            if not s.ready or s.treq.done:
+                continue
+            if eng is self.target:
+                cov_by_req[id(s.treq)] = s.t_cov
+            elif s.dreq is not None:
+                cov_by_req[id(s.dreq)] = s.d_cov
+        for slot, req in eng.running.items():
+            if slot in updates or req.done:
+                continue
+            cov = cov_by_req.get(id(req))
+            if cov is None:
+                if not req.output:  # resume whose catch-up extend has
+                    cov = req.cached_prefix  # not run yet (first-token
+                    #                          feed still pending)
+                else:  # freshly prefilled, waiting to pair
+                    n = min(req.n_prompt, eng.max_len - 1)
+                    cov = min(n, _bucket(n, eng.buckets))
+            updates[slot] = cov
+        eng.pool.set_lens(updates)
+
+    # ------------------------------------------------------------------
+    # The propose / verify / rewind round
+    # ------------------------------------------------------------------
+    def _spec_round(self, active) -> list:
+        k = self.k
+        props = {id(s): [] for s in active}
+        pend = {id(s): list(s.draft_pending) for s in active}
+        steps = max(len(s.draft_pending) for s in active) - 1 + k
+        # -- propose: k batched greedy draft decodes (catch-up feeds
+        #    first); a sequence whose proposals are complete re-feeds its
+        #    last token — the rewind below discards that garbage anyway
+        for j in range(steps):
+            feed = []
+            for s in active:
+                fl = pend[id(s)]
+                feed.append(fl[j] if j < len(fl) else fl[-1])
+            toks = self._draft_step(active, feed)
+            for i, s in enumerate(active):
+                fl = pend[id(s)]
+                if len(fl) - 1 <= j and len(props[id(s)]) < k:
+                    t = int(toks[i])
+                    props[id(s)].append(t)
+                    fl.append(t)
+        # -- verify: ONE extend forward over [last_tok, d_1..d_k]
+        chunks = np.zeros((len(active), k + 1), np.int32)
+        for i, s in enumerate(active):
+            chunks[i, 0] = s.last_tok
+            chunks[i, 1:] = props[id(s)]
+        g = self._verify(active, chunks)  # target greedy picks [B, k+1]
+        # -- accept + emit + rewind
+        events = []
+        t_slot_updates = {}
+        d_slot_updates = {}
+        for i, s in enumerate(active):
+            prop = props[id(s)]
+            row = g[i]
+            a = 0
+            while a < k and prop[a] == int(row[a]):
+                a += 1
+            self.proposed += k
+            self.accepted += a
+            treq = s.treq
+            n = s.t_cov + 1  # emitted sequence length before this round
+            for j in range(a + 1):
+                if treq.done:
+                    break
+                tok = int(row[j])
+                treq.output.append(tok)
+                events.append((treq.uid, tok))
+                self.target.stats.decode_tokens += 1
+                self.target._check_done(treq)
+            seq_len = treq.n_prompt + len(treq.output)
+            # valid coverage: the verified feeds matching the true
+            # sequence (capped by what was actually emitted)
+            t_new = min(n + a, seq_len - 1)
+            d_new = min(n + a if a < k else n + k - 1, seq_len - 1)
+            if treq.done:
+                continue  # retirement keeps the written KV; no rewind
+            s.t_cov = t_new
+            s.d_cov = d_new
+            s.last_tok = treq.output[-1]
+            transcript = list(treq.prompt) + list(treq.output)
+            s.draft_pending = transcript[d_new:]
+            if self.target.paged:
+                self._rewind_paged(self.target, treq, t_new)
+                treq.last_token = s.last_tok
+            else:
+                t_slot_updates[treq.slot] = t_new
+            if self.draft.paged:
+                self._rewind_paged(self.draft, s.dreq, d_new)
+            else:
+                d_slot_updates[s.dreq.slot] = d_new
+        if not self.target.paged:
+            self._rewind_slots(self.target, extra=t_slot_updates)
+        if not self.draft.paged:
+            self._rewind_slots(self.draft, extra=d_slot_updates)
+        self.rounds += 1
+        return events
+
+    def _draft_step(self, active, feed):
+        """One batched greedy decode on the draft engine; returns the
+        proposal token per active sequence."""
+        eng = self.draft
+        eng.stats.steps += 1
+        if not eng.paged:
+            feeds = np.zeros((eng.max_num_seqs,), np.int32)
+            for s, f in zip(active, feed):
+                feeds[s.dreq.slot] = f
+            eng.pool.cache, logits = eng._decode(
+                eng.params, eng.pool.cache, jnp.asarray(feeds))
+            gtok = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+            return [int(gtok[s.dreq.slot]) for s in active]
+        B = 1
+        while B < len(active):
+            B *= 2
+        mb, bs = eng.pool.max_blocks, eng.block_size
+        bt = np.zeros((B, mb), np.int32)
+        lens = np.zeros((B,), np.int32)
+        tokens = np.zeros((B,), np.int32)
+        wphys = np.zeros((B,), np.int32)
+        woff = np.zeros((B,), np.int32)
+        for i, s in enumerate(active):
+            r = s.dreq
+            eng._ensure_writable(r, r.pos, 1)
+            bt[i, :len(r.table)] = r.table
+            lens[i] = r.pos
+            tokens[i] = feed[i]
+            p = min(r.pos, mb * bs - 1)
+            wphys[i] = r.table[p // bs]
+            woff[i] = p % bs
+        eng.pool.cache, logits = eng._paged_decode(
+            eng.params, eng.pool.cache, jnp.asarray(bt), jnp.asarray(lens),
+            jnp.asarray(tokens), jnp.asarray(wphys), jnp.asarray(woff))
+        for s in active:
+            s.dreq.pos += 1
+        gtok = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        return [int(gtok[i]) for i in range(len(active))]
+
+    def _verify(self, active, chunks):
+        """ONE extend forward verifying all k+1 positions per sequence;
+        returns the target's greedy pick at each position [B, k+1]."""
+        eng = self.target
+        T = chunks.shape[1]
+        if not eng.paged:
+            tokens = np.zeros((eng.max_num_seqs, T), np.int32)
+            for i, s in enumerate(active):
+                tokens[s.treq.slot] = chunks[i]
+            ext = self._extend_for(eng)
+            eng.pool.cache, logits = ext(eng.params, eng.pool.cache,
+                                         jnp.asarray(tokens))
+            gtok = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+            return gtok[[s.treq.slot for s in active]]
+        B = 1
+        while B < len(active):
+            B *= 2
+        mb, bs = eng.pool.max_blocks, eng.block_size
+        bt = np.zeros((B, mb), np.int32)
+        lens = np.zeros((B,), np.int32)
+        tokens = np.zeros((B, T), np.int32)
+        wphys = np.zeros((B, T), np.int32)
+        woff = np.zeros((B, T), np.int32)
+        for i, s in enumerate(active):
+            r = s.treq
+            eng._ensure_writable(r, s.t_cov, T)
+            bt[i, :len(r.table)] = r.table
+            lens[i] = s.t_cov
+            tokens[i] = chunks[i]
+            for t in range(T):
+                p = min(s.t_cov + t, mb * bs - 1)
+                wphys[i, t] = r.table[p // bs]
+                woff[i, t] = p % bs
+        eng.pool.cache, logits = eng._paged_extend(
+            eng.params, eng.pool.cache, jnp.asarray(bt), jnp.asarray(lens),
+            jnp.asarray(tokens), jnp.asarray(wphys), jnp.asarray(woff))
+        gtok = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        return gtok[:len(active)]
+
+    def _rewind_paged(self, eng: InferenceEngine, req: Request,
+                      new_pos: int):
+        """Truncate the block table past the accepted prefix: tail blocks
+        holding only rejected K/V free back to the pool AND to the
+        request's admission reserve (symmetric with ``_alloc_block``), so
+        chunk-budget accounting stays exact across rounds."""
+        bs = eng.block_size
+        keep = max(1, -(-new_pos // bs))
+        while len(req.table) > keep:
+            b = req.table.pop()
+            eng.pool.alloc.free(b)
+            req.reserve_left += 1
+            eng._reserved += 1
+        req.pos = new_pos
 
 
 def make_engine_from_scratch(cfg: ModelConfig, *, seed=0, **kw):

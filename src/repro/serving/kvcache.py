@@ -176,6 +176,26 @@ class CachePool:
 
         self.cache = jax.tree_util.tree_map_with_path(upd, self.cache)
 
+    def set_lens(self, updates: dict):
+        """Batch ``set_len``: one cache-tree rebuild for many slots.  The
+        speculative-decode rewind uses this — a verify forward advances
+        EVERY slot's length by the chunk width, so all tracked slots
+        rewind together in one pass instead of one tree walk per slot."""
+        if not updates:
+            return
+
+        def upd(path, leaf):
+            keys = _path_keys(path)
+            if keys[-1] != "len":
+                return leaf
+            bdim = batch_dim_for(keys, leaf.ndim)
+            t = jnp.moveaxis(leaf, bdim, 0)
+            for slot, n in updates.items():
+                t = t.at[slot].set(jnp.full_like(t[slot], n))
+            return jnp.moveaxis(t, 0, bdim)
+
+        self.cache = jax.tree_util.tree_map_with_path(upd, self.cache)
+
     def reset_slot(self, slot: int):
         def zero(path, pool_leaf):
             keys = _path_keys(path)

@@ -1,12 +1,32 @@
-"""Token sampling."""
+"""Token sampling and the speculative-decoding acceptance rule.
+
+``sample`` is the per-step token pick (greedy / temperature / top-k /
+top-p).  ``speculative_accept`` is the *leftover-token* acceptance rule
+for greedy speculative decoding: given the draft's ``k`` proposals and
+the target's greedy pick at each of the ``k+1`` verified positions, it
+returns how many proposals survive and which tokens are emitted.  The
+emitted tokens are ALWAYS the target's own greedy picks (a proposal is
+accepted only when it equals the target pick at its position, and the
+first rejected position contributes the target pick instead), which is
+what makes speculative greedy decode token-for-token identical to
+target-only greedy decode.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 
-def sample(logits, key, *, temperature: float = 0.0, top_k: int = 0):
-    """logits [B, V] -> tokens [B]."""
+def sample(logits, key, *, temperature: float = 0.0, top_k: int = 0,
+           top_p: float = 1.0):
+    """logits [B, V] -> tokens [B].
+
+    ``temperature <= 0`` is greedy (argmax).  ``top_k > 0`` keeps the k
+    highest-logit tokens; ``top_p < 1`` keeps the smallest
+    nucleus whose cumulative probability reaches ``top_p`` (``top_p=0``
+    degenerates to greedy-by-construction: only the single most probable
+    token survives).  Filters compose: top-k first, then top-p over the
+    surviving mass."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / temperature
@@ -14,4 +34,43 @@ def sample(logits, key, *, temperature: float = 0.0, top_k: int = 0):
         vals, _ = jax.lax.top_k(logits, top_k)
         cutoff = vals[:, -1:]
         logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    if top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # keep tokens whose cumulative mass *before* them is < top_p —
+        # and pin the highest-probability token explicitly, so top_p=0
+        # degenerates to greedy instead of an all-False keep mask whose
+        # -inf cutoff would silently disable the filter
+        keep = (cum - probs) < top_p
+        keep = keep.at[:, 0].set(True)
+        cutoff = jnp.max(jnp.where(keep, sorted_logits, -jnp.inf), axis=-1,
+                         keepdims=True)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def speculative_accept(proposed, target_tokens):
+    """Leftover-token acceptance for greedy speculative decoding.
+
+    ``proposed`` [B, k] are the draft's proposals; ``target_tokens``
+    [B, k+1] are the target's greedy picks at the k+1 verified positions
+    (position j's pick conditions on the previous token plus proposals
+    ``proposed[:, :j]``).  Returns ``n_accept`` [B] — the length of the
+    longest matching prefix (proposal i is only valid if every earlier
+    proposal matched, hence the cumulative product) — and the emitted
+    tokens are ``target_tokens[b, : n_accept[b] + 1]`` per row: the
+    accepted proposals (which EQUAL the target picks) plus the target's
+    "leftover" pick at the first divergence (or the bonus token when all
+    k were accepted).
+    """
+    proposed = jnp.asarray(proposed)
+    target_tokens = jnp.asarray(target_tokens)
+    if proposed.ndim != 2 or target_tokens.ndim != 2 or \
+            target_tokens.shape[1] != proposed.shape[1] + 1:
+        raise ValueError(
+            f"expected proposed [B, k] and target [B, k+1], got "
+            f"{proposed.shape} / {target_tokens.shape}")
+    matches = (proposed == target_tokens[:, :-1]).astype(jnp.int32)
+    n_accept = jnp.sum(jnp.cumprod(matches, axis=1), axis=1)
+    return n_accept

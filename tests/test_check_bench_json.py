@@ -11,7 +11,7 @@ import pytest
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 from benchmarks.check_bench_json import (CheckFailed, check_affinity,  # noqa: E402
                                          check_autoscale, check_multimodel,
-                                         check_paged, main)
+                                         check_paged, check_specdecode, main)
 
 
 def affinity_rows():
@@ -88,11 +88,28 @@ def paged_rows():
     ]
 
 
+def specdecode_rows():
+    base = {"scenario": "speculative", "k": 4, "target_layers": 12,
+            "draft_layers": 1, "new_tokens": 40, "tokens_match": True}
+    return [
+        {**base, "stream": "vanilla", "decode_tokens_per_s": 80.0,
+         "acceptance_rate": None, "proposed": 0, "accepted": 0,
+         "enabled": None, "speedup_vs_vanilla": 1.0},
+        {**base, "stream": "high_acceptance", "decode_tokens_per_s": 160.0,
+         "acceptance_rate": 1.0, "proposed": 512, "accepted": 512,
+         "enabled": True, "speedup_vs_vanilla": 2.0},
+        {**base, "stream": "low_acceptance", "decode_tokens_per_s": 78.0,
+         "acceptance_rate": 0.0, "proposed": 32, "accepted": 0,
+         "enabled": False, "speedup_vs_vanilla": 0.975},
+    ]
+
+
 def test_good_rows_pass():
     check_affinity(affinity_rows())
     check_autoscale(autoscale_rows())
     check_multimodel(multimodel_rows())
     check_paged(paged_rows())
+    check_specdecode(specdecode_rows())
 
 
 def test_affinity_catches_missing_policy_and_dead_hits():
@@ -189,6 +206,42 @@ def test_paged_catches_decode_regression_and_missing_telemetry():
     rows[3]["block_telemetry"]["reporting_replicas"] = 0
     with pytest.raises(CheckFailed):
         check_paged(rows)
+
+
+def test_specdecode_catches_divergence_and_missing_speedup():
+    rows = specdecode_rows()
+    rows[1]["tokens_match"] = False  # spec transcript diverged from target
+    with pytest.raises(CheckFailed):
+        check_specdecode(rows)
+    rows = specdecode_rows()
+    rows[1]["speedup_vs_vanilla"] = 1.1  # draft cost ate the win
+    with pytest.raises(CheckFailed):
+        check_specdecode(rows)
+    rows = specdecode_rows()
+    rows[1]["acceptance_rate"] = 0.4  # identity padding broken
+    with pytest.raises(CheckFailed):
+        check_specdecode(rows)
+    with pytest.raises(CheckFailed):
+        check_specdecode(specdecode_rows()[:2])  # a stream is missing
+
+
+def test_specdecode_catches_floor_and_fallback_failures():
+    rows = specdecode_rows()
+    rows[2]["enabled"] = True  # acceptance floor never tripped
+    with pytest.raises(CheckFailed):
+        check_specdecode(rows)
+    rows = specdecode_rows()
+    rows[2]["speedup_vs_vanilla"] = 0.6  # disabled session still dragging
+    with pytest.raises(CheckFailed):
+        check_specdecode(rows)
+    rows = specdecode_rows()
+    rows[0]["proposed"] = 16  # baseline contaminated by speculation
+    with pytest.raises(CheckFailed):
+        check_specdecode(rows)
+    rows = specdecode_rows()
+    rows[1]["enabled"] = False  # high-acceptance session shut down
+    with pytest.raises(CheckFailed):
+        check_specdecode(rows)
 
 
 def test_main_exit_codes(tmp_path):

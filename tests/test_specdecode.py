@@ -1,0 +1,478 @@
+"""Cross-group speculative decoding: sampling/acceptance unit rules, the
+draft-propose / target-verify session (greedy token-for-token equivalence
+across pool layouts and acceptance regimes, including the adaptive
+disable path), servicer threading, per-group spec telemetry, and the
+acceptance-driven draft entitlements of the weighted_capacity autoscaler.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ExecutionPolicy, ModelGroup, ResourceDescription,
+                        ResourceRequirements, Rhapsody, ServiceDescription,
+                        WeightedCapacityAutoscaler)
+from repro.models.config import ModelConfig
+from repro.serving.client import LLMServicer, llm_model_group
+from repro.serving.engine import SpecDecodeSession, make_engine_from_scratch
+from repro.serving.sampling import sample, speculative_accept
+
+# ---------------------------------------------------------------------------
+# sampling: greedy / temperature / top-k / top-p boundaries
+# ---------------------------------------------------------------------------
+
+
+def _logits(rows):
+    return jnp.asarray(rows, jnp.float32)
+
+
+def test_sample_greedy_is_argmax_and_ignores_key():
+    lg = _logits([[0.1, 2.0, -1.0, 0.5], [3.0, 0.0, 0.0, 0.0]])
+    t1 = sample(lg, jax.random.PRNGKey(0), temperature=0.0)
+    t2 = sample(lg, jax.random.PRNGKey(7), temperature=-1.0)
+    assert t1.tolist() == [1, 0]
+    assert t2.tolist() == [1, 0]  # non-positive temperature => greedy
+    assert t1.dtype == jnp.int32
+
+
+def test_sample_seeded_determinism_under_temperature():
+    lg = _logits(np.random.RandomState(0).randn(4, 16))
+    a = sample(lg, jax.random.PRNGKey(3), temperature=0.8)
+    b = sample(lg, jax.random.PRNGKey(3), temperature=0.8)
+    assert a.tolist() == b.tolist()  # same key, same pick
+    # across many keys a hot temperature must visit >1 token
+    seen = {tuple(sample(lg, jax.random.PRNGKey(k), temperature=5.0).tolist())
+            for k in range(32)}
+    assert len(seen) > 1
+
+
+def test_sample_temperature_scales_concentration():
+    lg = _logits([[0.0, 1.0, 0.0, 0.0]] * 64)
+    cold = sample(lg, jax.random.PRNGKey(1), temperature=0.05)
+    hot = sample(lg, jax.random.PRNGKey(1), temperature=50.0)
+    # near-zero temperature concentrates on the argmax...
+    assert np.mean(np.asarray(cold) == 1) > 0.95
+    # ...while a very hot one spreads over the vocabulary
+    assert len(set(np.asarray(hot).tolist())) > 1
+
+
+def test_sample_top_k_one_is_greedy():
+    lg = _logits(np.random.RandomState(1).randn(8, 32))
+    greedy = jnp.argmax(lg, axis=-1)
+    for key in range(8):
+        got = sample(lg, jax.random.PRNGKey(key), temperature=1.7, top_k=1)
+        assert got.tolist() == greedy.tolist()
+
+
+def test_sample_top_p_zero_is_greedy_top_p_one_unrestricted():
+    lg = _logits(np.random.RandomState(2).randn(8, 32))
+    greedy = jnp.argmax(lg, axis=-1)
+    for key in range(8):
+        got = sample(lg, jax.random.PRNGKey(key), temperature=2.0, top_p=0.0)
+        assert got.tolist() == greedy.tolist()  # only the mode survives
+    # top_p=1.0 must not filter: identical to the plain categorical
+    a = sample(lg, jax.random.PRNGKey(5), temperature=1.0, top_p=1.0)
+    b = jax.random.categorical(jax.random.PRNGKey(5), lg, axis=-1)
+    assert a.tolist() == b.tolist()
+
+
+def test_sample_top_p_keeps_nucleus_only():
+    # one token holds ~99% of the mass: any p in (0, .99] keeps just it
+    lg = _logits([[10.0, 0.0, 0.0, 0.0]] * 16)
+    got = sample(lg, jax.random.PRNGKey(9), temperature=1.0, top_p=0.5)
+    assert set(np.asarray(got).tolist()) == {0}
+
+
+# ---------------------------------------------------------------------------
+# speculative_accept: the leftover-token acceptance rule
+# ---------------------------------------------------------------------------
+
+
+def test_speculative_accept_longest_matching_prefix():
+    proposed = [[5, 6, 7],  # all accepted
+                [5, 9, 7],  # diverges at position 1
+                [9, 6, 7],  # diverges immediately
+                [5, 6, 9]]  # diverges at the last proposal
+    target = [[5, 6, 7, 8]] * 4
+    n = speculative_accept(jnp.asarray(proposed), jnp.asarray(target))
+    assert n.tolist() == [3, 1, 0, 2]
+
+
+def test_speculative_accept_ignores_matches_after_divergence():
+    # positions 1..2 match again but position 0 diverged: nothing counts
+    n = speculative_accept(jnp.asarray([[1, 6, 7]]),
+                           jnp.asarray([[5, 6, 7, 8]]))
+    assert n.tolist() == [0]
+
+
+def test_speculative_accept_emitted_tokens_are_target_picks():
+    proposed = jnp.asarray([[5, 9, 7]])
+    target = jnp.asarray([[5, 6, 7, 8]])
+    a = int(speculative_accept(proposed, target)[0])
+    emitted = target[0, :a + 1].tolist()
+    # the accepted proposal EQUALS the target pick; the leftover token is
+    # the target's own pick at the divergence — greedy equivalence
+    assert emitted == [5, 6]
+
+
+def test_speculative_accept_shape_validation():
+    with pytest.raises(ValueError):
+        speculative_accept(jnp.zeros((2, 3)), jnp.zeros((2, 3)))
+    with pytest.raises(ValueError):
+        speculative_accept(jnp.zeros((3,)), jnp.zeros((4,)))
+
+
+# ---------------------------------------------------------------------------
+# SpecDecodeSession: greedy equivalence across pools / families / regimes
+# ---------------------------------------------------------------------------
+
+_KW = dict(max_num_seqs=4, max_len=128)
+
+
+def _mk_cfg(family="dense", n_layers=2, **kw):
+    moe = dict(n_experts=4, top_k=2) if family == "moe" else {}
+    return ModelConfig(family=family, vocab=64, d_model=32,
+                       n_layers=n_layers, n_heads=4, **moe, **kw)
+
+
+def _prompts(seed=0, lens=(5, 9, 3, 7)):
+    rng = np.random.default_rng(seed)
+    return [list(map(int, rng.integers(1, 64, size=n))) for n in lens]
+
+
+def _vanilla(cfg, prompts, paged, max_new=10):
+    eng = make_engine_from_scratch(cfg, seed=1, paged=paged, **_KW)
+    uids = [eng.submit(p, max_new_tokens=max_new) for p in prompts]
+    done = eng.run()
+    return [done[u].output for u in uids]
+
+
+def _spec(tcfg, dcfg, prompts, paged_t, paged_d, max_new=10, dseed=2,
+          perturb=0.0, **sess_kw):
+    tgt = make_engine_from_scratch(tcfg, seed=1, paged=paged_t, **_KW)
+    drf = make_engine_from_scratch(dcfg, seed=dseed, paged=paged_d, **_KW)
+    if perturb:
+        leaves, treedef = jax.tree_util.tree_flatten(drf.params)
+        keys = jax.random.split(jax.random.PRNGKey(9), len(leaves))
+        leaves = [l + perturb * jax.random.normal(k, l.shape, l.dtype)
+                  for l, k in zip(leaves, keys)]
+        drf.params = jax.tree_util.tree_unflatten(treedef, leaves)
+    sess = SpecDecodeSession(tgt, drf, k=sess_kw.pop("k", 3), **sess_kw)
+    uids = [sess.submit(p, max_new_tokens=max_new) for p in prompts]
+    done = sess.run()
+    return [done[u].output for u in uids], sess
+
+
+@pytest.mark.parametrize("paged_t,paged_d", [(False, False), (True, True),
+                                             (True, False)])
+def test_spec_greedy_equivalence_dense(paged_t, paged_d):
+    tcfg, dcfg = _mk_cfg(), _mk_cfg(n_layers=1)
+    prompts = _prompts()
+    ref = _vanilla(tcfg, prompts, paged_t)
+    got, sess = _spec(tcfg, dcfg, prompts, paged_t, paged_d)
+    assert got == ref  # token-for-token, ragged prompt lengths
+    ss = sess.spec_stats()
+    assert ss["proposed"] > 0 and ss["rounds"] > 0 and ss["enabled"]
+    assert 0.0 <= ss["acceptance_rate"] <= 1.0
+
+
+def test_spec_greedy_equivalence_moe_target():
+    tcfg, dcfg = _mk_cfg("moe"), _mk_cfg(n_layers=1)
+    prompts = _prompts()
+    ref = _vanilla(tcfg, prompts, True)
+    got, _ = _spec(tcfg, dcfg, prompts, True, True)
+    assert got == ref
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_spec_same_model_full_acceptance(paged):
+    """Draft == target: every proposal accepted (exercises the a==k bonus
+    path and the two-token draft_pending resume)."""
+    cfg = _mk_cfg()
+    prompts = _prompts(seed=1)
+    ref = _vanilla(cfg, prompts, paged)
+    got, sess = _spec(cfg, cfg, prompts, paged, paged, dseed=1)
+    assert got == ref
+    assert sess.spec_stats()["acceptance_rate"] == 1.0
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_spec_perturbed_draft_ragged_acceptance(paged):
+    """Slightly-off draft: acceptance is ragged per round (0 < rate < 1),
+    which walks the partial-rewind paths — output must stay identical."""
+    cfg = _mk_cfg()
+    prompts = _prompts(seed=1)
+    ref = _vanilla(cfg, prompts, paged)
+    got, sess = _spec(cfg, cfg, prompts, paged, paged, dseed=1, perturb=0.02)
+    assert got == ref
+    assert 0.0 < sess.spec_stats()["acceptance_rate"] < 1.0
+
+
+def test_spec_adaptive_disable_still_matches_vanilla():
+    """A hopeless draft trips the acceptance floor after the probe window:
+    the session permanently falls back to target-only stepping and the
+    transcript still equals vanilla greedy decode."""
+    tcfg, dcfg = _mk_cfg(), _mk_cfg(n_layers=1)
+    prompts = _prompts()
+    ref = _vanilla(tcfg, prompts, True, max_new=16)
+    got, sess = _spec(tcfg, dcfg, prompts, True, True, max_new=16,
+                      min_acceptance=0.9, probe_proposals=8)
+    assert got == ref
+    assert sess.spec_stats()["enabled"] is False
+
+
+def test_spec_session_rejects_sampling_and_validates_k():
+    tcfg, dcfg = _mk_cfg(), _mk_cfg(n_layers=1)
+    tgt = make_engine_from_scratch(tcfg, seed=1, paged=True, **_KW)
+    drf = make_engine_from_scratch(dcfg, seed=2, paged=True, **_KW)
+    with pytest.raises(ValueError):
+        SpecDecodeSession(tgt, drf, k=0)
+    sess = SpecDecodeSession(tgt, drf, k=2)
+    with pytest.raises(ValueError):
+        sess.submit([1, 2, 3], max_new_tokens=4, temperature=0.7)
+
+
+def test_servicer_draft_group_threading_matches_plain():
+    """LLMServicer(draft_group=ModelGroup) resolves the draft through the
+    group's factory and serves greedy requests identically."""
+    tcfg, dcfg = _mk_cfg(), _mk_cfg(n_layers=1)
+    dg = llm_model_group("draft", dcfg, role="draft", paired_with="chat",
+                         min_replicas=0, **_KW)
+    assert (dg.role, dg.paired_with, dg.min_replicas) == ("draft", "chat", 0)
+    plain = LLMServicer(tcfg, seed=1, **_KW)
+    spec = LLMServicer(tcfg, seed=1, draft_group=dg, spec_k=3, **_KW)
+    assert plain.spec_stats() is None
+
+    def drive(sv):
+        uids = [sv.submit({"prompt": p, "max_new_tokens": 8})
+                for p in _prompts()]
+        out = {}
+        for _ in range(400):
+            for uid, res in sv.step():
+                out[uid] = res["tokens"]
+            if len(out) == len(uids):
+                return [out[u] for u in uids]
+        raise AssertionError("servicer did not finish")
+
+    assert drive(plain) == drive(spec)
+    assert spec.spec_stats()["proposed"] > 0
+
+
+# ---------------------------------------------------------------------------
+# replica set: per-group spec telemetry + per-group scaling bounds
+# ---------------------------------------------------------------------------
+
+
+class SpecTagged:
+    """Sync servicer faking a spec session's counters (the target group's
+    servicers host the sessions; plain replicas report None)."""
+
+    def __init__(self, tag, proposed=None, accepted=0):
+        self.tag, self.proposed, self.accepted = tag, proposed, accepted
+
+    def handle(self, payload):
+        return {"served_by": self.tag}
+
+    def spec_stats(self):
+        if self.proposed is None:
+            return None
+        return {"k": 4, "proposed": self.proposed, "accepted": self.accepted,
+                "acceptance_rate": self.accepted / max(1, self.proposed),
+                "rounds": 1, "enabled": True}
+
+
+def _spec_pair_rh(**policy_kw):
+    rh = Rhapsody(ResourceDescription(nodes=1, cores_per_node=8),
+                  policy=ExecutionPolicy(**policy_kw), n_workers=1)
+    rs = rh.add_service(ServiceDescription(
+        name="llm",
+        requirements=ResourceRequirements(ranks=1, cores_per_rank=1),
+        models=[ModelGroup(name="chat",
+                           factory=lambda: SpecTagged("chat", 100, 70),
+                           replicas=2),
+                ModelGroup(name="draft",
+                           factory=lambda: SpecTagged("draft"),
+                           role="draft", paired_with="chat",
+                           min_replicas=0, max_replicas=2, replicas=1)]))
+    return rh, rs
+
+
+def test_per_group_stats_carry_spec_counters_and_roles():
+    rh, rs = _spec_pair_rh()
+    try:
+        assert rs.spec_totals() == (200, 140)  # 2 chat replicas x (100, 70)
+        pg = rs.stats()["per_group"]
+        assert pg["chat"]["role"] == "serve"
+        assert (pg["chat"]["proposed"], pg["chat"]["accepted"]) == (200, 140)
+        assert pg["chat"]["acceptance_rate"] == pytest.approx(0.7)
+        # the draft group runs no sessions itself but mirrors the
+        # set-wide acceptance so the entitlement signal is observable
+        assert pg["draft"]["role"] == "draft"
+        assert pg["draft"]["proposed"] == 0
+        assert pg["draft"]["acceptance_rate"] == pytest.approx(0.7)
+    finally:
+        rh.close()
+
+
+def test_group_bounds_and_scale_groups_clamping():
+    rh, rs = _spec_pair_rh()
+    try:
+        assert rs.group_bounds("chat") == (1, None)
+        assert rs.group_bounds("draft") == (0, 2)
+        # draft may scale to zero; chat is clamped to its implicit floor
+        rs.scale_groups({"chat": 0, "draft": 0})
+        assert rs.group_counts() == {"chat": 1, "draft": 0}
+        # ...and the draft's ceiling caps a greedy target
+        rs.scale_groups({"chat": 1, "draft": 5})
+        assert rs.group_counts() == {"chat": 1, "draft": 2}
+        # requests still route correctly on the scaled set
+        assert rs.request({"prompt": [1], "model": "chat"}
+                          ).result(10.0)["served_by"] == "chat"
+    finally:
+        rh.close()
+
+
+def test_draft_affinity_aliases_to_target_group():
+    rh, rs = _spec_pair_rh()
+    try:
+        assert rs._affinity_alias("draft") == "chat"
+        assert rs._affinity_alias("chat") == "chat"
+    finally:
+        rh.close()
+
+
+# ---------------------------------------------------------------------------
+# weighted_capacity: acceptance-driven draft entitlements (unit, fake rs)
+# ---------------------------------------------------------------------------
+
+
+class SpecGroupRS:
+    """The group surface desired_groups() consumes, plus the spec-decode
+    extensions (roles / per-group bounds / set-wide counters)."""
+
+    multi_model = True
+
+    def __init__(self, counts, p95_s, depths, headroom=None, weights=None,
+                 roles=None, bounds=None, spec=(0, 0)):
+        self._counts = dict(counts)
+        self._p95 = dict(p95_s)
+        self._depths = dict(depths)
+        self._headroom = headroom
+        self._weights = weights or {g: 1.0 for g in counts}
+        self._roles = roles or {}
+        self._bounds = bounds or {}
+        self._spec = spec
+        self.denied = 0
+
+    def group_counts(self):
+        return dict(self._counts)
+
+    def group_weight(self, g):
+        return self._weights[g]
+
+    def group_slo_ms(self, g):
+        return 100.0
+
+    def group_role(self, g):
+        return self._roles.get(g, "serve")
+
+    def group_bounds(self, g):
+        return self._bounds.get(g, (1, None))
+
+    def spec_totals(self):
+        return self._spec
+
+    def latency_p95(self, window_s=None, started_after=None, group=None):
+        return self._p95[group]
+
+    def mean_depth(self, group=None):
+        return self._depths[group]
+
+    def capacity_headroom(self, group=None):
+        return self._headroom
+
+    def _note_admission_denied(self, where, once_per_episode=False):
+        self.denied += 1
+
+
+def spec_scaler(**kw):
+    kw.setdefault("autoscaler", "weighted_capacity")
+    kw.setdefault("autoscale_sustain_up", 1)
+    kw.setdefault("autoscale_sustain_down", 1)
+    kw.setdefault("autoscale_max_replicas", 8)
+    kw.setdefault("autoscale_low_depth", 0.5)
+    kw.setdefault("slo_p95_ms", 100.0)
+    return WeightedCapacityAutoscaler(ExecutionPolicy(**kw))
+
+
+def test_low_acceptance_force_shrinks_draft_without_sustain():
+    a = spec_scaler(autoscale_sustain_down=5, spec_min_acceptance=0.3,
+                    spec_min_proposed=100)
+    rs = SpecGroupRS({"chat": 2, "draft": 2},
+                     {"chat": 0.06, "draft": 0.02},
+                     {"chat": 1.0, "draft": 1.0}, headroom=2,
+                     roles={"draft": "draft"},
+                     bounds={"draft": (0, None)},
+                     spec=(500, 50))  # 10% acceptance: below the floor
+    # forced shrink bypasses the 5-tick sustain — one replica per tick
+    assert a.desired_groups("s", rs) == {"chat": 2, "draft": 1}
+    rs._counts["draft"] = 1
+    assert a.desired_groups("s", rs) == {"chat": 2, "draft": 0}
+    rs._counts["draft"] = 0
+    assert a.desired_groups("s", rs) is None  # at its explicit floor
+
+
+def test_low_acceptance_respects_default_floor():
+    a = spec_scaler(spec_min_acceptance=0.3, spec_min_proposed=100)
+    rs = SpecGroupRS({"chat": 2, "draft": 1},
+                     {"chat": 0.06, "draft": 0.02},
+                     {"chat": 1.0, "draft": 1.0}, headroom=2,
+                     roles={"draft": "draft"}, spec=(500, 0))
+    assert a.desired_groups("s", rs) is None  # min_replicas defaults to 1
+
+
+def test_acceptance_below_probe_threshold_is_not_judged():
+    a = spec_scaler(spec_min_acceptance=0.3, spec_min_proposed=1000)
+    rs = SpecGroupRS({"chat": 2, "draft": 2},
+                     {"chat": 0.06, "draft": 0.02},
+                     {"chat": 1.0, "draft": 5.0}, headroom=2,
+                     roles={"draft": "draft"},
+                     bounds={"draft": (0, None)}, spec=(500, 0))
+    # 500 < 1000 proposals observed: acceptance signal not yet trusted,
+    # and a paying draft is not idle overhead (no depth-based shrink)
+    assert a.desired_groups("s", rs) is None
+
+
+def test_acceptance_scales_draft_weight_making_it_the_donor():
+    a = spec_scaler(autoscale_max_replicas=4, spec_min_acceptance=0.1,
+                    spec_min_proposed=100)
+    # chat violates its SLO at set capacity; draft is mid-band but its
+    # acceptance-scaled weight (1.0 * 0.2) makes it the over-entitled
+    # donor even though raw weights are equal
+    rs = SpecGroupRS({"chat": 2, "draft": 2},
+                     {"chat": 0.2, "draft": 0.05},
+                     {"chat": 5.0, "draft": 1.0}, headroom=0,
+                     roles={"draft": "draft"},
+                     bounds={"draft": (0, None)}, spec=(1000, 200))
+    assert a.desired_groups("s", rs) == {"chat": 3, "draft": 1}
+
+
+def test_grower_pinned_by_per_group_max_replicas():
+    a = spec_scaler()
+    rs = SpecGroupRS({"chat": 2, "draft": 1},
+                     {"chat": 0.2, "draft": 0.06},
+                     {"chat": 5.0, "draft": 1.0}, headroom=3,
+                     bounds={"chat": (1, 2)})
+    assert a.desired_groups("s", rs) is None  # ceiling holds despite SLO
+
+
+def test_donor_respects_explicit_zero_floor():
+    a = spec_scaler(autoscale_max_replicas=3)
+    # chat needs a replica, set is at max; draft holds 1 but its floor is
+    # 0, so it can donate its last replica
+    rs = SpecGroupRS({"chat": 2, "draft": 1},
+                     {"chat": 0.2, "draft": None},
+                     {"chat": 5.0, "draft": 0.0}, headroom=0,
+                     roles={"draft": "draft"},
+                     bounds={"draft": (0, None)})
+    assert a.desired_groups("s", rs) == {"chat": 3, "draft": 0}
