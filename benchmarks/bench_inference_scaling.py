@@ -34,6 +34,15 @@ equivalence across all three engines, concurrency above the slot pool's
 ``max_num_seqs`` ceiling, measured physical-block sharing (copy-on-write
 reuse > 0), direct decode throughput no worse than the gather round-trip,
 and sane free/shared block telemetry.
+
+``--disagg`` compares DISAGGREGATED prefill/decode pools (paged-KV
+handoff on first token, per-phase TTFT/ITL accounting) against unified
+chunked prefill at equal replica count on a mixed long-prompt + chatty
+stream, plus a deterministic recompute-fallback scenario (decode pool
+pinned dry -> every import denied -> local recompute, never failure).
+Validation (``check_bench_json.py disagg``) gates TTFT and ITL p95 both
+>= 1.2x better under disaggregation, token-identical greedy output, zero
+wrong-role completions, and a non-zero exercised fallback.
 """
 from __future__ import annotations
 
@@ -546,6 +555,225 @@ def run_paged_service(*, n_replicas: int = 2, requests: int = 8,
 
 
 # ---------------------------------------------------------------------------
+# Disaggregated prefill/decode: per-phase SLOs vs unified chunked prefill
+# ---------------------------------------------------------------------------
+
+
+def _disagg_load(cfg, *, n_long: int, n_chat: int, long_len: int,
+                 chat_len: int, long_new: int, chat_new: int,
+                 seed: int = 0) -> list:
+    """Mixed stream: long-prompt (RAG-like) requests whose chunked
+    prefill is what steals decode budget in unified serving, interleaved
+    with chatty short-prompt/long-decode sessions whose ITL that theft
+    inflates.  Deterministically shuffled so both modes see the same
+    arrival order."""
+    rng = random.Random(seed)
+    reqs = ([([rng.randrange(1, cfg.vocab) for _ in range(long_len)],
+              long_new, "long") for _ in range(n_long)]
+            + [([rng.randrange(1, cfg.vocab) for _ in range(chat_len)],
+                chat_new, "chat") for _ in range(n_chat)])
+    rng.shuffle(reqs)
+    return reqs
+
+
+def run_disagg(*, n_replicas: int = 4, n_long: int = 8, n_chat: int = 16,
+               long_len: int = 96, chat_len: int = 8, long_new: int = 8,
+               chat_new: int = 16, block_size: int = 8, max_len: int = 128,
+               unified_budget: int = 32, prefill_budget: int = 256) -> list:
+    """Disaggregated prefill/decode vs unified chunked prefill at EQUAL
+    replica count, on a mixed long-prompt + chatty stream.
+
+    Unified serving must pick ONE ``max_num_batched_tokens``: small
+    chunks protect ITL but drag a long prompt's TTFT across many steps
+    (each also paying the whole-prefix gather for interleaved decode);
+    big chunks invert the pain.  Disaggregation removes the knob — the
+    prefill pool runs huge chunks with NO decode to stall, the decode
+    pool never sees a prefill chunk — so BOTH tails improve at the same
+    replica count.  Greedy outputs must match a single reference engine
+    token-for-token (the KV handoff moves state, never recomputes it
+    differently), and every disagg request must finish on a decode
+    replica via handoff (``wrong_role`` counts violations).
+
+    Two ``disagg_compare`` rows (mode unified | disagg) with
+    ``ttft_p95_ms`` / ``itl_p95_ms`` measured from per-request result
+    stamps over a COMPILED service (a discarded warm wave triggers every
+    jit bucket first); the disagg row carries the speedups the
+    ``check_bench_json.py disagg`` gate enforces (>= 1.2x on both)."""
+    from repro.core.autoscale import percentile
+    from repro.serving.client import llm_model_group
+
+    cfg = engine_cfg()
+    reqs = _disagg_load(cfg, n_long=n_long, n_chat=n_chat,
+                        long_len=long_len, chat_len=chat_len,
+                        long_new=long_new, chat_new=chat_new)
+    # reference: one engine, same seed-0 params as every replica
+    ref = make_engine_from_scratch(
+        cfg, seed=0, max_num_seqs=8, max_len=max_len, paged=True,
+        block_size=block_size, num_blocks=160,
+        max_num_batched_tokens=prefill_budget,
+        prefill_buckets=(16, 32, 64, 128))
+    ref_uids = [ref.submit(p, max_new_tokens=n) for p, n, _ in reqs]
+    ref_done = ref.run()
+    ref_out = [ref_done[u].output for u in ref_uids]
+
+    base_kw = dict(max_num_seqs=8, max_len=max_len, paged=True,
+                   block_size=block_size, num_blocks=160,
+                   prefill_buckets=(16, 32, 64, 128))
+
+    def one_mode(mode: str) -> dict:
+        rh = Rhapsody(
+            ResourceDescription(nodes=n_replicas, cores_per_node=16),
+            policy=ExecutionPolicy(routing="least_loaded", warmup=True),
+            n_workers=2)
+        try:
+            if mode == "disagg":
+                n_pre = n_replicas // 2
+                models = [
+                    llm_model_group(
+                        "prefill", cfg, role="prefill",
+                        paired_with="decode", replicas=n_pre,
+                        max_num_batched_tokens=prefill_budget, **base_kw),
+                    llm_model_group(
+                        "decode", cfg, role="decode",
+                        replicas=n_replicas - n_pre,
+                        max_num_batched_tokens=64, **base_kw),
+                ]
+                rs = rh.add_service(ServiceDescription(
+                    name="llm", replicas=n_replicas, models=models))
+                tag = {"model": "prefill"}
+            else:
+                rs = rh.add_service(ServiceDescription(
+                    name="llm", replicas=n_replicas,
+                    factory=llm_service_factory(
+                        cfg, max_num_batched_tokens=unified_budget,
+                        **base_kw)))
+                tag = {}
+
+            def wave(load):
+                futs = [rs.request(dict({"prompt": p, "max_new_tokens": n},
+                                        **tag)) for p, n, _ in load]
+                return [f.result(timeout=600) for f in futs]
+
+            # warm wave: same shape as the measured load so every jit
+            # bucket (big prefill chunks, decode batch sizes, handoff
+            # path) compiles BEFORE the timed wave; results discarded
+            wave(_disagg_load(cfg, n_long=max(2, n_replicas),
+                              n_chat=max(4, 2 * n_replicas),
+                              long_len=long_len, chat_len=chat_len,
+                              long_new=4, chat_new=6, seed=1))
+            res = wave(reqs)
+            ttfts = [r["ttft_s"] for r in res if r["ttft_s"] is not None]
+            itls = [r["itl_s"] for r in res if r["itl_s"] is not None]
+            match = all(r["tokens"] == o for r, o in zip(res, ref_out))
+            wrong_role = (sum(1 for r in res
+                              if not (r.get("handoff")
+                                      and r.get("role") == "decode"))
+                          if mode == "disagg" else 0)
+            stats = rs.stats()
+            hand = rs.handoff_totals()
+            tp = percentile(ttfts, 0.95)
+            ip = percentile(itls, 0.95)
+            return {
+                "scenario": "disagg_compare",
+                "mode": mode,
+                "replicas": n_replicas,
+                "requests": len(reqs),
+                "n_long": n_long, "n_chat": n_chat,
+                "long_len": long_len, "chat_len": chat_len,
+                "unified_budget": unified_budget,
+                "prefill_budget": prefill_budget,
+                "ttft_p95_ms": tp and tp * 1e3,
+                "itl_p95_ms": ip and ip * 1e3,
+                "tokens_match": match,
+                "wrong_role": wrong_role,
+                "handoffs": hand["imports"] + hand["recomputes"],
+                "recomputes": hand["recomputes"],
+                "per_group": {
+                    g: {k: gs[k] for k in
+                        ("role", "replicas", "requests", "ttft_p95_ms",
+                         "itl_p95_ms", "handoff_exports",
+                         "handoff_imports", "handoff_recomputes")}
+                    for g, gs in stats["per_group"].items()},
+            }
+        finally:
+            rh.close()
+
+    rows = [one_mode("unified"), one_mode("disagg")]
+    uni, dis = rows
+    dis["ttft_speedup"] = (uni["ttft_p95_ms"] or 0.0) \
+        / max(1e-9, dis["ttft_p95_ms"] or 0.0)
+    dis["itl_speedup"] = (uni["itl_p95_ms"] or 0.0) \
+        / max(1e-9, dis["itl_p95_ms"] or 0.0)
+    return rows
+
+
+def run_disagg_fallback(*, n_handoffs: int = 3, prompt_len: int = 24,
+                        new_tokens: int = 6) -> list:
+    """Recompute-on-miss: a decode pool too full to reserve an import's
+    blocks must fall back to RECOMPUTING the sequence's prompt locally —
+    degraded latency, never a failed request, and still token-identical
+    output.  Deterministic servicer-level drive: a 9-block decode pool
+    (one max_len=64 sequence needs all 8 usable) is pinned by a live
+    long-budget occupant, so every import is denied while it runs."""
+    from repro.serving.client import llm_service_factory
+
+    cfg = engine_cfg()
+    kw = dict(max_num_seqs=4, max_len=64, prefill_buckets=(16, 32),
+              paged=True, block_size=8)
+    pre = llm_service_factory(cfg, phase="prefill",
+                              max_num_batched_tokens=256, **kw)()
+    dec = llm_service_factory(cfg, phase="decode", num_blocks=9,
+                              max_num_batched_tokens=64, **kw)()
+    rng = random.Random(2)
+    prompts = [[rng.randrange(1, cfg.vocab) for _ in range(prompt_len)]
+               for _ in range(n_handoffs)]
+    ref = make_engine_from_scratch(cfg, seed=0,
+                                   max_num_batched_tokens=256, **kw)
+    ref_uids = [ref.submit(p, max_new_tokens=new_tokens) for p in prompts]
+    ref_done = ref.run()
+    ref_out = {tuple(p): ref_done[u].output
+               for p, u in zip(prompts, ref_uids)}
+
+    # occupant: reserves the decode pool dry for its whole decode
+    occ = dec.submit({"prompt": [3] * 30, "max_new_tokens": 30})
+    dec.step()  # admit it (reserve_left now pins all 8 blocks)
+    handoffs = []
+    for p in prompts:
+        pre.submit({"prompt": p, "max_new_tokens": new_tokens})
+    for _ in range(100000):
+        if len(handoffs) == n_handoffs:
+            break
+        for _, r in pre.step():
+            if r.get("_handoff") is not None:
+                handoffs.append(r["_handoff"])
+    results = {}
+    for pay in handoffs:  # every import denied -> recompute path
+        dec.submit({"prompt": list(pay["prompt"]), "_import": pay})
+    for _ in range(100000):
+        if len(results) == n_handoffs + 1:
+            break
+        for uid, r in dec.step():
+            results[uid] = r
+    hs = dec.handoff_stats()
+    # every recomputed sequence must reproduce the reference greedy
+    # output (recompute = full local prefill + decode, same params)
+    match = bool(handoffs)
+    for pay in handoffs:
+        want = ref_out[tuple(pay["prompt"])]
+        match = match and any(
+            r["tokens"] == want and r.get("recompute")
+            for u, r in results.items() if u != occ)
+    return [{
+        "scenario": "disagg_fallback",
+        "exports": n_handoffs,
+        "imports": hs["imports"],
+        "recomputes": hs["recomputes"],
+        "completed": len(results),
+        "tokens_match": match,
+    }]
+
+
+# ---------------------------------------------------------------------------
 # Cross-group speculative decoding: draft-propose / target-verify pipeline
 # ---------------------------------------------------------------------------
 
@@ -689,6 +917,12 @@ if __name__ == "__main__":
                     help="run the draft-propose / target-verify "
                          "speculative-decoding comparison (vanilla vs "
                          "high- and low-acceptance streams)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="run the disaggregated prefill/decode vs unified "
+                         "chunked-prefill comparison (mixed long-prompt + "
+                         "chatty stream at equal replica count) plus the "
+                         "recompute-fallback scenario")
+    ap.add_argument("--disagg-replicas", type=int, default=4)
     ap.add_argument("--spec-k", type=int, default=4)
     ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--branches", type=int, default=12)
@@ -701,6 +935,31 @@ if __name__ == "__main__":
     ap.add_argument("--shift-s", type=float, default=5.0)
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
+    if args.disagg:
+        rows = (run_disagg(n_replicas=args.disagg_replicas)
+                + run_disagg_fallback())
+        if args.json:
+            print(json.dumps(rows, indent=2))
+        else:
+            for r in rows:
+                if r["scenario"] == "disagg_fallback":
+                    print(f"[disagg] fallback exports={r['exports']} "
+                          f"imports={r['imports']} "
+                          f"recomputes={r['recomputes']} "
+                          f"completed={r['completed']} "
+                          f"match={r['tokens_match']}")
+                    continue
+                speed = ("" if r["mode"] == "unified" else
+                         f" ttft_speedup={r['ttft_speedup']:.2f}x "
+                         f"itl_speedup={r['itl_speedup']:.2f}x")
+                print(f"[disagg] {r['mode']:>8s} x{r['replicas']} "
+                      f"ttft_p95={r['ttft_p95_ms']:.0f}ms "
+                      f"itl_p95={r['itl_p95_ms']:.0f}ms "
+                      f"handoffs={r['handoffs']} "
+                      f"recomputes={r['recomputes']} "
+                      f"wrong_role={r['wrong_role']} "
+                      f"match={r['tokens_match']}{speed}")
+        raise SystemExit(0)
     if args.speculative:
         rows = run_speculative(k=args.spec_k)
         if args.json:

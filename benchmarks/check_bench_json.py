@@ -10,6 +10,7 @@ Usage::
     python benchmarks/check_bench_json.py multimodel /tmp/multimodel.json
     python benchmarks/check_bench_json.py paged      /tmp/paged.json
     python benchmarks/check_bench_json.py specdecode /tmp/specdecode.json
+    python benchmarks/check_bench_json.py disagg     /tmp/disagg.json
 
 Each checker takes the decoded rows and raises ``CheckFailed`` with a
 pointed message on the first violated invariant — these used to live as
@@ -192,6 +193,79 @@ def check_paged(rows: list) -> None:
                  "no replica reported block telemetry", tel)
 
 
+def check_disagg(rows: list) -> None:
+    """bench_inference_scaling --disagg: one ``disagg_compare`` row per
+    mode (unified | disagg) at EQUAL replica count plus the
+    ``disagg_fallback`` row.  Gates the tentpole claims: greedy tokens
+    identical to the single-engine reference in both modes (the KV
+    handoff moves state bit-exactly), every disagg request finished on a
+    decode replica via handoff (zero wrong-role completions, handoff
+    count covers the load), per-phase windows are PURE (the prefill
+    group never observes ITL, the decode group never observes TTFT),
+    disaggregation beats unified by >= 1.2x on BOTH TTFT p95 and ITL
+    p95, and the block-exhausted decode pool fell back to recompute —
+    completed requests, never failures."""
+    cmp_rows = [r for r in rows if r.get("scenario") == "disagg_compare"]
+    fb_rows = [r for r in rows if r.get("scenario") == "disagg_fallback"]
+    by = {r.get("mode"): r for r in cmp_rows}
+    _require(set(by) == {"unified", "disagg"},
+             "expected one row per mode", sorted(by))
+    uni, dis = by["unified"], by["disagg"]
+    _require(uni.get("replicas") == dis.get("replicas"),
+             "modes compared at unequal replica counts",
+             {"unified": uni.get("replicas"), "disagg": dis.get("replicas")})
+    for r in cmp_rows:
+        _require(r.get("requests", 0) > 0, "mode served nothing", r)
+        _require(r.get("tokens_match") is True,
+                 "mode disagrees with the reference greedy tokens", r)
+        _require(r.get("ttft_p95_ms") and r.get("itl_p95_ms"),
+                 "mode is missing a per-phase p95", r)
+        _require(r.get("wrong_role", 1) == 0,
+                 "request completed on a wrong-role replica", r)
+    _require(dis.get("handoffs", 0) >= dis["requests"],
+             "not every disagg request was handed off",
+             {"handoffs": dis.get("handoffs"),
+              "requests": dis["requests"]})
+    pg = dis.get("per_group") or {}
+    roles = {gs.get("role") for gs in pg.values()}
+    _require({"prefill", "decode"} <= roles,
+             "disagg row lacks a prefill/decode group pair", sorted(roles))
+    for g, gs in pg.items():
+        if gs.get("role") == "prefill":
+            _require(gs.get("ttft_p95_ms") is not None,
+                     "prefill group observed no TTFT", {g: gs})
+            _require(gs.get("itl_p95_ms") is None,
+                     "prefill group observed ITL — phase window leaked",
+                     {g: gs})
+            _require(gs.get("handoff_exports", 0) > 0,
+                     "prefill group exported nothing", {g: gs})
+        if gs.get("role") == "decode":
+            _require(gs.get("itl_p95_ms") is not None,
+                     "decode group observed no ITL", {g: gs})
+            _require(gs.get("ttft_p95_ms") is None,
+                     "decode group observed TTFT — phase window leaked",
+                     {g: gs})
+    _require(dis.get("ttft_speedup", 0) >= 1.2,
+             "disaggregation did not improve TTFT p95 by >= 1.2x",
+             {"ttft_speedup": dis.get("ttft_speedup"),
+              "unified_ms": uni.get("ttft_p95_ms"),
+              "disagg_ms": dis.get("ttft_p95_ms")})
+    _require(dis.get("itl_speedup", 0) >= 1.2,
+             "disaggregation did not improve ITL p95 by >= 1.2x",
+             {"itl_speedup": dis.get("itl_speedup"),
+              "unified_ms": uni.get("itl_p95_ms"),
+              "disagg_ms": dis.get("itl_p95_ms")})
+    _require(len(fb_rows) == 1, "expected one disagg_fallback row", rows)
+    fb = fb_rows[0]
+    _require(fb.get("recomputes", 0) >= 1,
+             "block-exhausted decode pool never exercised recompute", fb)
+    _require(fb.get("completed", 0) == fb.get("exports", 0) + 1,
+             "fallback lost a request (exports + occupant != completed)",
+             fb)
+    _require(fb.get("tokens_match") is True,
+             "recomputed sequences disagree with reference tokens", fb)
+
+
 def check_specdecode(rows: list) -> None:
     """bench_inference_scaling --speculative: three streams over the same
     prompts (vanilla / high_acceptance / low_acceptance), all three
@@ -238,6 +312,7 @@ CHECKS = {
     "multimodel": check_multimodel,
     "paged": check_paged,
     "specdecode": check_specdecode,
+    "disagg": check_disagg,
 }
 
 

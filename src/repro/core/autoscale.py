@@ -263,9 +263,19 @@ class WeightedCapacityAutoscaler(LatencySLOAutoscaler):
     group one replica per tick (no sustain) toward its floor: spec-decode
     turns itself off gracefully instead of burning cores.
 
+    Disaggregated serving closes the loop on prefill/decode-role groups:
+    a prefill group's direction is judged against its TTFT window and a
+    decode group's against its ITL window (``latency_p95(phase=...)``),
+    so the prefill:decode ratio tracks the traffic mix (long-prompt vs
+    chatty) instead of one blended end-to-end number.  Donor picks honor
+    ``ModelGroup.borrow_limit``: a donor is never taken more than its
+    limit below its weight-anchored entitlement.
+
     The manager consumes this policy through ``desired_groups(name, rs)``
     — one dict of per-group targets per tick, applied shrink-first so a
-    rebalance inside a full partition never needs transient headroom.
+    rebalance inside a full partition never needs transient headroom
+    (grows-first — warm handoff — when the partition has free headroom
+    for every grow; see ``ReplicaSet.scale_groups``).
     Single-group sets degenerate to plain per-set SLO scaling.
     """
 
@@ -286,17 +296,30 @@ class WeightedCapacityAutoscaler(LatencySLOAutoscaler):
                     d[k] = 0
         self._last_action[name] = time.perf_counter()
 
+    def _group_phase(self, rs, group: str) -> Optional[str]:
+        """Which latency window prices this group's SLO: disaggregated
+        prefill groups are judged on TTFT, decode groups on ITL, every
+        other role on end-to-end latency (None)."""
+        role_fn = getattr(rs, "group_role", None)
+        role = role_fn(group) if role_fn else "serve"
+        return {"prefill": "ttft", "decode": "itl"}.get(role)
+
     def _group_direction(self, name: str, rs, group: str) -> int:
-        """The LatencySLOAutoscaler direction logic, per model group."""
+        """The LatencySLOAutoscaler direction logic, per model group.
+        Prefill/decode-role groups read their per-phase window (TTFT /
+        ITL) instead of end-to-end latency, so each pool's SLO violation
+        grows it independently."""
         pol = self.policy
         slo_s = rs.group_slo_ms(group) / 1e3
         window = getattr(pol, "slo_window_s", 5.0)
         down = getattr(pol, "slo_down_factor", 0.5)
+        phase = self._group_phase(rs, group)
+        kw = {} if phase is None else {"phase": phase}
         p95 = rs.latency_p95(window_s=window,
                              started_after=self._last_action.get(name),
-                             group=group)
+                             group=group, **kw)
         if p95 is None:
-            if rs.latency_p95(window_s=window, group=group) is None:
+            if rs.latency_p95(window_s=window, group=group, **kw) is None:
                 # genuinely idle group with shallow queues may cool down
                 return (-1 if rs.mean_depth(group=group)
                         < pol.autoscale_low_depth else 0)
@@ -309,21 +332,33 @@ class WeightedCapacityAutoscaler(LatencySLOAutoscaler):
         return 0
 
     def _pick_donor(self, grower: str, targets: dict, dirs: dict,
-                    weights: dict, growers, bounds=None) -> Optional[str]:
+                    weights: dict, growers, bounds=None,
+                    borrows=None) -> Optional[str]:
         """Group to retire a replica from so ``grower`` can be admitted:
         not itself wanting to grow, above its per-group floor (default
         1), preferring the largest surplus over its weighted share and
-        then the coldest direction.  None when nobody can donate."""
+        then the coldest direction.  None when nobody can donate.
+
+        ``borrows`` (group -> ``ModelGroup.borrow_limit`` or None) caps
+        how far BELOW its weight-anchored entitlement a donor may be
+        taken: a group with ``borrow_limit=b`` never donates below
+        ``ceil(entitlement) - b`` replicas — a sustained burst on one
+        group borrows bounded capacity instead of hollowing its siblings
+        out to their absolute floors."""
         total = sum(targets.values())
         total_w = sum(weights.values()) or float(len(weights))
         best = None
         for g, n in targets.items():
             floor = (bounds or {}).get(g, (1, None))[0]
+            ent = total * weights[g] / total_w
+            borrow = (borrows or {}).get(g)
+            if borrow is not None:
+                floor = max(floor, math.ceil(ent) - borrow)
             if g == grower or g in growers or n <= floor:
                 continue
             if dirs.get(g, 0) > 0:
                 continue  # donating from a violating group helps nobody
-            surplus = n - total * weights[g] / total_w
+            surplus = n - ent
             key = (surplus, -dirs.get(g, 0))
             if best is None or key > best[0]:
                 best = (key, g)
@@ -343,6 +378,9 @@ class WeightedCapacityAutoscaler(LatencySLOAutoscaler):
         bounds_fn = getattr(rs, "group_bounds", None)
         bounds = {g: (bounds_fn(g) if bounds_fn else (1, None))
                   for g in counts}
+        borrow_fn = getattr(rs, "group_borrow_limit", None)
+        borrows = ({g: borrow_fn(g) for g in counts} if borrow_fn
+                   else None)
         # speculative-decoding feedback: the set-wide acceptance rate
         # (accepted / proposed across every spec session) prices a
         # draft-role group's entitlement.  Below the floor — once enough
@@ -401,7 +439,7 @@ class WeightedCapacityAutoscaler(LatencySLOAutoscaler):
             at_max = sum(targets.values()) >= pol.autoscale_max_replicas
             if at_max or (headroom is not None and headroom < 1):
                 donor = self._pick_donor(g, targets, dirs, weights, growers,
-                                         bounds=bounds)
+                                         bounds=bounds, borrows=borrows)
                 if donor is None:
                     # nothing to retire and nothing free: a sustained
                     # denial episode, visible on the set's stats

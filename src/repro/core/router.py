@@ -236,6 +236,14 @@ class Router:
         """Feed one member's resident prefix sequences (replica-set
         gossip); affinity-blind routers ignore it."""
 
+    def note_residency(self, affinity_group, member, seq: Sequence):
+        """Merge ONE resident sequence into ``member``'s gossiped
+        residency without replacing the rest — the disagg handoff path's
+        proactive re-home (the importer now holds the migrated blocks,
+        and waiting for the next full gossip pull would leave a staleness
+        window where follow-up turns route to the emptied exporter).
+        Affinity-blind routers ignore it."""
+
     def update_headroom(self, affinity_group, member, free: int,
                         capacity: int):
         """Feed one member's physical KV headroom (free / total blocks,
@@ -521,6 +529,17 @@ class RadixAffinityRouter(LeastLoadedRouter):
             # the engine's slot count (and the index's own LRU capacity)
             for s in list(seqs)[:1024]:
                 res.insert(tuple(s)[:self.max_prefix], member)
+
+    def note_residency(self, affinity_group, member, seq):
+        """Merge one sequence into ``member``'s residency (handoff
+        re-home): unlike ``update_residency`` this does NOT drop the
+        member's other gossiped prefixes."""
+        seq = tuple(seq)[:self.max_prefix]
+        if not seq:
+            return
+        with self._lock:
+            astate = self._affinity_state(affinity_group)
+            astate["residency"].insert(seq, member)
 
     def update_headroom(self, affinity_group, member, free, capacity):
         """Replace ``member``'s gossiped physical headroom (free / total

@@ -97,20 +97,37 @@ class ModelGroup:
     #                                     ExecutionPolicy.slo_p95_ms
     requirements: Optional[ResourceRequirements] = None  # per-replica
     #                                 claim shape; None -> desc.requirements
-    role: str = "serve"  # | "draft": a speculative-decoding draft group.
-    #   Draft groups share their target group's affinity namespace under
-    #   residency-aware routers (both legs of one prompt pin to the same
-    #   radix key, keeping both KV stems warm), and the weighted_capacity
-    #   autoscaler scales their entitlement by the set's measured
-    #   acceptance rate — a low-acceptance workload shrinks the draft
-    #   toward min_replicas instead of burning cores
+    role: str = "serve"  # | "draft" | "prefill" | "decode".
+    #   "draft": a speculative-decoding draft group.  Draft groups share
+    #   their target group's affinity namespace under residency-aware
+    #   routers (both legs of one prompt pin to the same radix key,
+    #   keeping both KV stems warm), and the weighted_capacity autoscaler
+    #   scales their entitlement by the set's measured acceptance rate —
+    #   a low-acceptance workload shrinks the draft toward min_replicas
+    #   instead of burning cores.
+    #   "prefill"/"decode": disaggregated serving pools for ONE model.
+    #   New prompts route to the prefill group (large chunked-prefill
+    #   budget, no decode interleave); on first token the sequence
+    #   migrates to the paired decode group via a paged-KV handoff
+    #   (engine.export_sequence -> engine.import_sequence), orchestrated
+    #   by the set (see ``ReplicaSet._handoff``).  The prefill group's
+    #   SLO is a TTFT target, the decode group's an ITL target — the
+    #   weighted_capacity autoscaler reads the matching per-phase latency
+    #   window for each (see ``latency_p95(phase=...)``).
     paired_with: Optional[str] = None  # draft role: target group sharing
-    #   the affinity namespace; None -> the first serve-role group
+    #   the affinity namespace; None -> the first serve-role group.
+    #   prefill role: the decode group sequences hand off to; None -> the
+    #   first decode-role group
     min_replicas: Optional[int] = None  # per-group autoscale floor; None
     #   -> 1 (every model keeps a replica).  An EXPLICIT 0 allows the
     #   rebalancer to retire the group entirely (spec-decode off)
     max_replicas: Optional[int] = None  # per-group autoscale ceiling;
     #   None -> bounded only by the set total / ledger
+    borrow_limit: Optional[int] = None  # burst-borrow cap: how many
+    #   replicas BELOW its weight-anchored entitlement this group may be
+    #   shrunk when acting as a donor in a weighted_capacity rebalance.
+    #   None -> unbounded (donate down to min_replicas); 0 -> never
+    #   donate below entitlement
 
 
 @dataclasses.dataclass
@@ -160,20 +177,47 @@ _STAT_KEYS = ("requests", "completed", "errors", "cost",
 
 
 class _Future:
-    __slots__ = ("_event", "_result", "_error")
+    __slots__ = ("_event", "_result", "_error", "_callbacks")
 
     def __init__(self):
         self._event = threading.Event()
         self._result = None
         self._error = None
+        self._callbacks: list = []
+
+    def add_done_callback(self, cb: Callable):
+        """Run ``cb(self)`` when the future resolves (immediately if it
+        already has) — the handoff orchestration chains the decode leg's
+        future into the one the original caller holds this way.  Callback
+        errors are swallowed: a misbehaving observer must not poison the
+        resolve path."""
+        if self._event.is_set():
+            try:
+                cb(self)
+            except Exception:
+                pass
+            return
+        self._callbacks.append(cb)
+        if self._event.is_set():  # resolved while appending: fire now
+            self._fire_callbacks()
+
+    def _fire_callbacks(self):
+        cbs, self._callbacks = self._callbacks, []
+        for cb in cbs:
+            try:
+                cb(self)
+            except Exception:
+                pass
 
     def set_result(self, r):
         self._result = r
         self._event.set()
+        self._fire_callbacks()
 
     def set_error(self, e):
         self._error = e
         self._event.set()
+        self._fire_callbacks()
 
     def result(self, timeout: Optional[float] = None):
         if not self._event.wait(timeout):
@@ -209,6 +253,12 @@ class ServiceEndpoint:
         #                    (None when the manager has no allocations)
         self.latency = LatencyWindow()  # end-to-end request latencies —
         #                    the SLO autoscaler's per-endpoint signal
+        # per-phase windows fed from result dicts that carry the engine's
+        # first_token_at stamps: ttft for prefill(/unified) replicas, itl
+        # (mean inter-token gap per request) for decode(/unified) ones —
+        # the per-role SLO signals of disaggregated serving
+        self.ttft = LatencyWindow()
+        self.itl = LatencyWindow()
 
     def bump(self, key: str, by: int = 1):
         # stats feed depth(), which drives routing and autoscaling — a
@@ -264,6 +314,13 @@ class ServiceInstance(threading.Thread):
         self._residency_listener = residency_listener
         self._drain = False
         self.error: Optional[BaseException] = None
+        # disaggregated serving: the replica set installs this on
+        # prefill-role replicas.  A servicer result dict carrying a
+        # "_handoff" payload (an exported sequence) is diverted here —
+        # the hook re-dispatches the decode leg and chains the futures —
+        # instead of resolving the caller's future with a half-finished
+        # generation.
+        self.on_handoff: Optional[Callable] = None
 
     def run(self):
         try:
@@ -377,10 +434,41 @@ class ServiceInstance(threading.Thread):
 
     def _resolve(self, uid, result):
         entry = self._pending.pop(uid, None)
-        if entry is not None:
-            entry[0].set_result(result)
-            self.endpoint.bump("completed")
-            self._observe(entry[2])
+        if entry is None:
+            return
+        fut, payload, meta = entry
+        if isinstance(result, dict):
+            self._observe_phases(result)
+            if result.get("_handoff") is not None \
+                    and self.on_handoff is not None:
+                # prefill leg done: this replica's work is complete (count
+                # it) but the REQUEST is not — divert to the handoff hook,
+                # which dispatches the decode leg and resolves the caller's
+                # future when that leg finishes
+                self.endpoint.bump("completed")
+                self._observe(meta)
+                try:
+                    self.on_handoff(fut, result, meta)
+                except BaseException as e:  # noqa: BLE001
+                    fut.set_error(e)
+                    self.endpoint.bump("errors")
+                return
+        fut.set_result(result)
+        self.endpoint.bump("completed")
+        self._observe(meta)
+
+    def _observe_phases(self, result: dict):
+        """Feed the endpoint's per-phase latency windows from a result
+        dict.  TTFT is observed where it was MEASURED: a decode-side final
+        result of a handed-off sequence carries the prefill replica's
+        ttft_s for the client, flagged ``handoff`` — the prefill endpoint
+        already observed it, so it is skipped here (phase-pure windows)."""
+        t = result.get("ttft_s")
+        if t is not None and not result.get("handoff"):
+            self.endpoint.ttft.observe(t)
+        i = result.get("itl_s")
+        if i is not None:
+            self.endpoint.itl.observe(i)
 
     def _drain_finished(self):
         if hasattr(self.servicer, "drain"):
@@ -546,6 +634,102 @@ class ReplicaSet:
             if other.role != "draft":
                 return g
         return group
+
+    def _decode_pair(self, group: str) -> Optional[str]:
+        """The decode-role group a prefill group hands sequences to:
+        ``paired_with`` when declared, else the first decode-role group.
+        None when the set has no decode pool (the prefill result is then
+        served to completion as-is)."""
+        mg = self.model_groups.get(group)
+        if mg is None or mg.role != "prefill":
+            return None
+        if mg.paired_with is not None \
+                and mg.paired_with in self.model_groups:
+            return mg.paired_with
+        for g, other in self.model_groups.items():
+            if other.role == "decode":
+                return g
+        return None
+
+    def _handoff(self, src_group: str, fut: _Future, result: dict, meta):
+        """Disaggregated-serving migration: a prefill replica finished a
+        sequence's prompt (and produced its first token) — dispatch the
+        exported paged-KV payload to the paired decode group and chain
+        that leg's future into the one the original caller holds.
+
+        Runs on the prefill replica's instance thread (from ``_resolve``);
+        route()/request() are thread-safe.  The original ``_t0`` rides
+        along so the decode endpoint's end-to-end window covers the WHOLE
+        request, and the importer's residency is gossiped to the router
+        immediately — follow-up turns with the same prefix route warm to
+        the new holder instead of the (now empty) prefill replica."""
+        payload = result.pop("_handoff", None)
+        dec = self._decode_pair(src_group)
+        if payload is None or dec is None:
+            # no decode pool configured: the prefill leg's result is final
+            fut.set_result(result)
+            return
+        req_payload = {"prompt": list(payload["prompt"]),
+                       "_import": payload}
+        router = self.manager.router
+        try:
+            # affinity accounting stays off: the prefill route already
+            # counted this request's outcome (same rule as reroutes)
+            ep = self.route(default_cost(req_payload), router,
+                            affinity_key=router.signature(req_payload),
+                            account_affinity=False, model=dec)
+        except KeyError as e:
+            fut.set_error(RuntimeError(
+                f"service {self.name}: decode group {dec!r} has no live "
+                f"replicas for handoff ({e})"))
+            return
+        f2 = ep.request(req_payload, _model=dec,
+                        _t0=meta.get("_t0", time.perf_counter()))
+        if getattr(router, "uses_residency", False):
+            # proactive re-home: the exported blocks now live on the
+            # importer — tell the router NOW instead of waiting for the
+            # next gossip pull
+            max_len = getattr(self.manager.policy,
+                              "affinity_max_prefix", 128)
+            seq = (list(payload.get("prompt") or [])
+                   + list(payload.get("output") or []))[:max_len]
+            if seq:
+                router.note_residency(
+                    (self.name, self._uid, self._affinity_alias(dec)),
+                    ep.replica_idx, seq)
+
+        def chain(done: _Future):
+            try:
+                fut.set_result(done.result(0))
+            except BaseException as e:  # noqa: BLE001
+                fut.set_error(e)
+
+        f2.add_done_callback(chain)
+
+    def handoff_totals(self) -> dict:
+        """Set-wide disaggregation counters summed over live replicas
+        whose servicers track them: ``exports`` (prefill side),
+        ``imports`` and ``recomputes`` (decode side, recompute = the
+        reservation-gated import was denied and the sequence re-entered
+        via the normal prompt path)."""
+        with self._lock:
+            pairs = [(ep, inst) for ep, inst
+                     in zip(self.endpoints, self.instances)
+                     if not ep.retired]
+        out = {"exports": 0, "imports": 0, "recomputes": 0}
+        for ep, inst in pairs:
+            fn = getattr(getattr(inst, "servicer", None),
+                         "handoff_stats", None)
+            if fn is None:
+                continue
+            try:
+                hs = fn()
+            except Exception:
+                continue  # crashed mid-read: next tick retries
+            if hs:
+                for k in out:
+                    out[k] += int(hs.get(k, 0))
+        return out
 
     def spec_totals(self) -> tuple:
         """Set-wide speculative-decoding counters ``(proposed, accepted)``
@@ -759,6 +943,7 @@ class ReplicaSet:
         # Slot-pool engines (and replicas still starting up) report None.
         block_tel: dict = {}  # replica_idx -> telemetry dict
         spec_tel: dict = {}  # replica_idx -> spec-decode session counters
+        handoff_tel: dict = {}  # replica_idx -> disagg handoff counters
         for ep, inst in zip(eps, insts):
             if ep.retired:
                 continue
@@ -780,16 +965,33 @@ class ReplicaSet:
                     ss = None
                 if ss:
                     spec_tel[ep.replica_idx] = ss
+            hfn = getattr(getattr(inst, "servicer", None),
+                          "handoff_stats", None)
+            if hfn is not None:
+                try:
+                    hs = hfn()
+                except Exception:
+                    hs = None
+                if hs:
+                    handoff_tel[ep.replica_idx] = hs
         all_samples: list = []
         ep_samples: dict = {}  # replica_idx -> latency snapshot (reused by
         #                        the per-group aggregation below)
+        ep_ttft: dict = {}  # replica_idx -> per-phase snapshots, same reuse
+        ep_itl: dict = {}
         for ep, p in zip(eps, per):
             samples = ep.latency.samples()
             ep_samples[ep.replica_idx] = samples
+            ep_ttft[ep.replica_idx] = ep.ttft.samples()
+            ep_itl[ep.replica_idx] = ep.itl.samples()
             p95 = percentile(samples, 0.95)
             p["group"] = ep.group
             p["latency_p95_ms"] = None if p95 is None else p95 * 1e3
             p["latency_histogram"] = ep.latency.histogram(samples=samples)
+            tp = percentile(ep_ttft[ep.replica_idx], 0.95)
+            ip = percentile(ep_itl[ep.replica_idx], 0.95)
+            p["ttft_p95_ms"] = None if tp is None else tp * 1e3
+            p["itl_p95_ms"] = None if ip is None else ip * 1e3
             p["block_telemetry"] = block_tel.get(ep.replica_idx)
             if not ep.retired:
                 all_samples.extend(samples)
@@ -823,10 +1025,27 @@ class ReplicaSet:
             gs["weight"] = self.group_weight(g)
             gs["slo_p95_ms"] = self.group_slo_ms(g)
             gsamples: list = []
+            gttft: list = []
+            gitl: list = []
             for ep in live:
                 gsamples.extend(ep_samples.get(ep.replica_idx, ()))
+                gttft.extend(ep_ttft.get(ep.replica_idx, ()))
+                gitl.extend(ep_itl.get(ep.replica_idx, ()))
             p95g = percentile(gsamples, 0.95)
             gs["latency_p95_ms"] = None if p95g is None else p95g * 1e3
+            # per-phase p95s: the disagg autoscaler's per-role signals
+            # (TTFT for prefill groups, ITL for decode groups); unified
+            # groups report both from the same replicas
+            tp = percentile(gttft, 0.95)
+            ip = percentile(gitl, 0.95)
+            gs["ttft_p95_ms"] = None if tp is None else tp * 1e3
+            gs["itl_p95_ms"] = None if ip is None else ip * 1e3
+            # disaggregation counters: exports on the prefill side,
+            # imports/recomputes on the decode side
+            ghand = [handoff_tel[ep.replica_idx] for ep in live
+                     if ep.replica_idx in handoff_tel]
+            for k in ("exports", "imports", "recomputes"):
+                gs["handoff_" + k] = sum(int(h.get(k, 0)) for h in ghand)
             claims = [ep.claim for ep in live if ep.claim is not None]
             gs["cores"] = sum(c.n_cores for c in claims)
             gs["gpus"] = sum(c.n_gpus for c in claims)
@@ -866,18 +1085,36 @@ class ReplicaSet:
 
     def latency_p95(self, window_s: Optional[float] = None,
                     started_after: Optional[float] = None,
-                    group: Optional[str] = None) -> Optional[float]:
+                    group: Optional[str] = None,
+                    phase: Optional[str] = None) -> Optional[float]:
         """p95 end-to-end latency (seconds) across live replicas, the SLO
         autoscaler's signal; optionally windowed, restricted to requests
         *started* after a given perf_counter instant, and/or to one model
-        group's replicas (the per-group rebalancer's signal)."""
+        group's replicas (the per-group rebalancer's signal).
+
+        ``phase`` selects a per-phase window instead of end-to-end:
+        ``"ttft"`` (time-to-first-token, a prefill-group's SLO) or
+        ``"itl"`` (mean inter-token latency per request, a decode-group's
+        SLO)."""
+        if phase not in (None, "ttft", "itl"):
+            raise ValueError(f"unknown latency phase {phase!r} "
+                             f"(expected None, 'ttft' or 'itl')")
         with self._lock:
             eps = [ep for ep in self.endpoints if not ep.retired
                    and (group is None or ep.group == group)]
         samples: list = []
         for ep in eps:
-            samples.extend(ep.latency.samples(window_s, started_after))
+            win = (ep.latency if phase is None
+                   else ep.ttft if phase == "ttft" else ep.itl)
+            samples.extend(win.samples(window_s, started_after))
         return percentile(samples, 0.95)
+
+    def group_borrow_limit(self, group: str) -> Optional[int]:
+        """The group's burst-borrow cap (``ModelGroup.borrow_limit``):
+        how far below its weight-anchored entitlement a donor may be
+        shrunk; None -> unbounded."""
+        bl = self.model_groups[group].borrow_limit
+        return None if bl is None else max(0, int(bl))
 
     def claimed(self, group: Optional[str] = None) -> dict:
         """Live resources this set's replicas hold on the shared ledger,
@@ -1039,6 +1276,9 @@ class ReplicaSet:
                                    warmup=self._warmup,
                                    residency_listener=self._on_engine_evict,
                                    factory=self._group_factory(gname))
+            if self.group_role(gname) == "prefill":
+                inst.on_handoff = (lambda fut, result, meta, _g=gname:
+                                   self._handoff(_g, fut, result, meta))
             self.endpoints.append(ep)
             self.instances.append(inst)
             self._gen += 1
@@ -1108,6 +1348,10 @@ class ReplicaSet:
                                    residency_listener=self._on_engine_evict,
                                    factory=self._group_factory(
                                        dead.endpoint.group))
+            if self.group_role(dead.endpoint.group) == "prefill":
+                inst.on_handoff = (
+                    lambda fut, result, meta, _g=dead.endpoint.group:
+                    self._handoff(_g, fut, result, meta))
             self.instances[idx] = inst
             self._gen += 1  # recovered replica starts with fresh history
         inst.start()
@@ -1175,9 +1419,18 @@ class ReplicaSet:
     def scale_groups(self, targets: dict,
                      ready_timeout: Optional[float] = None):
         """Apply per-group LIVE replica targets in ONE scaling action,
-        shrinks first: a rebalance inside a full partition retires the
-        donor group's replica (releasing its claim) before the growing
-        group claims — capacity-neutral moves need no free headroom.
+        shrinks first by default: a rebalance inside a full partition
+        retires the donor group's replica (releasing its claim) before
+        the growing group claims — capacity-neutral moves need no free
+        headroom.
+
+        WARM HANDOFF: when the partition has enough free headroom to
+        admit every grow WITHOUT the donors' released claims, the order
+        flips to grows-first — the growing group's replica spawns, warms
+        up and joins routing BEFORE the donor drains (a bounded
+        claim-overlap window), so a rebalance stops costing tail latency
+        on the growing group.  Inside a full partition the order stays
+        shrink-first (the grow could not be admitted anyway).
 
         Targets count live replicas (what ``group_counts()`` and the
         ``weighted_capacity`` scaler see), so a replica declared dead but
@@ -1199,7 +1452,22 @@ class ReplicaSet:
                         if not ep.retired:
                             live[ep.group] += 1
             adj = {g: targets[g] + (raw[g] - live[g]) for g in targets}
-            order = sorted(targets, key=lambda g: adj[g] >= raw[g])
+            grow_amt = {g: adj[g] - raw[g] for g in targets
+                        if adj[g] > raw[g]}
+            warm = bool(grow_amt)
+            total_grow = sum(grow_amt.values())
+            for g in grow_amt:
+                # conservative: each growing group's shape must fit the
+                # WHOLE grow count in free headroom (shapes are uniform
+                # in the common case; mixed shapes only over-require)
+                hr = self.capacity_headroom(g)
+                if hr is not None and hr < total_grow:
+                    warm = False
+                    break
+            if warm:
+                order = sorted(targets, key=lambda g: adj[g] < raw[g])
+            else:
+                order = sorted(targets, key=lambda g: adj[g] >= raw[g])
             for g in order:
                 self._scale_group_locked(g, adj[g], ready_timeout)
 

@@ -25,6 +25,14 @@ launch is just::
     python -m repro.launch.serve --smoke --models chat:2 draft:1 \
         --replicas 3 --requests 24
 
+``--disagg`` launches DISAGGREGATED serving instead: ``--replicas`` is
+split into a prefill pool (large chunked-prefill budget, no decode
+interleave; ``--prefill-replicas`` overrides the half-split) and a decode
+pool behind one service name.  Every request is addressed to the prefill
+group; on first token the sequence's paged KV blocks are exported and
+imported into a decode replica (recompute fallback when its pool is
+full), and per-phase TTFT/ITL p95s are reported per group.
+
 Reports aggregate + per-replica (and per-group) throughput, latency, and
 utilization — the runnable end of the inference-at-scale path the dry-run
 lowers at production shapes.
@@ -90,7 +98,21 @@ def main():
                     help="serve SEVERAL model groups from one replica set "
                          "(e.g. --models chat:2 draft:1); --replicas "
                          "becomes the total, split by weight")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated serving: split --replicas into a "
+                         "prefill pool (large chunked-prefill budget, no "
+                         "decode interleave) and a decode pool; sequences "
+                         "migrate on first token via a paged-KV handoff. "
+                         "Requires the paged cache; incompatible with "
+                         "--models")
+    ap.add_argument("--prefill-replicas", type=int, default=None,
+                    help="--disagg: prefill pool size (default: half of "
+                         "--replicas, at least 1)")
     args = ap.parse_args()
+    if args.disagg and args.models:
+        ap.error("--disagg and --models are mutually exclusive")
+    if args.disagg and args.paged is False:
+        ap.error("--disagg requires the paged KV cache (drop --no-paged)")
 
     cfg = (get_smoke_config(args.arch)
            if args.smoke or args.arch != "rhapsody-demo"
@@ -116,7 +138,30 @@ def main():
                      num_blocks=args.num_blocks)
     model_names: list = []
     try:
-        if args.models:
+        if args.disagg:
+            n_pre = args.prefill_replicas or max(1, args.replicas // 2)
+            n_dec = max(1, args.replicas - n_pre)
+            disagg_kw = dict(engine_kw, paged=True)
+            groups = [
+                llm_model_group(
+                    "prefill", cfg, role="prefill", paired_with="decode",
+                    replicas=n_pre, slo_p95_ms=args.slo_p95_ms,
+                    **dict(disagg_kw,
+                           # prefill replicas never interleave decode:
+                           # run the whole prompt in as few chunks as
+                           # possible
+                           max_num_batched_tokens=max(
+                               args.max_num_batched_tokens, args.max_len))),
+                llm_model_group(
+                    "decode", cfg, role="decode", replicas=n_dec,
+                    slo_p95_ms=args.slo_p95_ms, **disagg_kw),
+            ]
+            replica_set = rh.add_service(ServiceDescription(
+                name="llm", replicas=args.replicas, models=groups))
+            print(f"[serve] {cfg.name} disaggregated "
+                  f"{replica_set.group_counts()} ready:",
+                  rh.services.list())
+        elif args.models:
             groups = []
             for spec in args.models:
                 name, _, w = spec.partition(":")
@@ -143,7 +188,11 @@ def main():
 
         def payload(i, p):
             out = {"prompt": p, "max_new_tokens": args.max_new_tokens}
-            if model_names:  # address models round-robin across the stream
+            if args.disagg:  # clients always address the prefill pool;
+                #              the set migrates each sequence to a decode
+                #              replica on first token
+                out["model"] = "prefill"
+            elif model_names:  # address models round-robin across stream
                 out["model"] = model_names[i % len(model_names)]
             return out
 
@@ -177,6 +226,20 @@ def main():
                        "shared": t["shared_blocks"],
                        "cow": t["cow_copies"]}
                    for g, t in btel.items() if t is not None})
+        if args.disagg:
+            handed = sum(1 for r in results if r.get("handoff"))
+            print(f"[serve] disagg: {handed}/{len(results)} sequences "
+                  f"migrated prefill->decode; handoff totals:",
+                  replica_set.handoff_totals())
+            print("[serve] per-phase groups:",
+                  {g: {"replicas": s["replicas"],
+                       "role": s["role"],
+                       "requests": s["requests"],
+                       "ttft_p95_ms": s["ttft_p95_ms"]
+                       and round(s["ttft_p95_ms"], 1),
+                       "itl_p95_ms": s["itl_p95_ms"]
+                       and round(s["itl_p95_ms"], 1)}
+                   for g, s in stats["per_group"].items()})
         if model_names:
             print("[serve] per-model groups:",
                   {g: {"replicas": s["replicas"],

@@ -75,17 +75,48 @@ class LLMServicer:
     identical to target-only decode; sampled requests are refused by the
     session.  ``spec_stats()`` exposes the proposed/accepted counters the
     replica set aggregates per group for the autoscaler.
+
+    ``phase`` selects the replica's disaggregated-serving role:
+
+    * ``"serve"`` (default) — unified prefill+decode, as before.
+    * ``"prefill"`` — the replica ONLY chunk-prefills (no decode
+      interleave: ``engine.step_prefill_only``); the moment a sequence's
+      first token is out it is exported (``engine.export_sequence``) and
+      the step result carries the serialized KV under ``"_handoff"`` for
+      the replica set to re-dispatch to the paired decode group.
+    * ``"decode"`` — ``submit`` accepts payloads carrying ``"_import"``
+      (an exported sequence) and adopts the KV via
+      ``engine.import_sequence``; a full pool falls back to recomputing
+      the prompt here (counted in ``handoff_stats()``), never to
+      failure.
+
+    Both disagg phases require the paged engine (the handoff moves
+    physical KV blocks) and are incompatible with ``draft_group``.
     """
 
     def __init__(self, cfg: ModelConfig, params=None, *, seed: int = 0,
                  draft_group=None, spec_k: int = 4,
                  spec_min_acceptance: float = 0.0,
-                 spec_probe_proposals: int = 64, **engine_kw):
+                 spec_probe_proposals: int = 64, phase: str = "serve",
+                 **engine_kw):
+        if phase not in ("serve", "prefill", "decode"):
+            raise ValueError(
+                f"phase must be 'serve', 'prefill' or 'decode', "
+                f"not {phase!r}")
+        if phase != "serve" and draft_group is not None:
+            raise ValueError(
+                "speculative decoding and disaggregated phases do not "
+                "compose: a prefill/decode replica cannot host a draft")
+        self.phase = phase
         engine_kw = _resolve_paged(cfg, engine_kw)
         if params is None:
             self.engine = make_engine_from_scratch(cfg, seed=seed, **engine_kw)
         else:
             self.engine = InferenceEngine(cfg, params, **engine_kw)
+        if phase != "serve" and not self.engine.paged:
+            raise ValueError(
+                f"phase={phase!r} requires the block-paged engine (the "
+                f"KV handoff moves physical blocks)")
         self.session = None
         if draft_group is not None:
             draft = _resolve_draft_engine(draft_group, seed=seed)
@@ -96,8 +127,34 @@ class LLMServicer:
         # everything below drives this one surface: the session when
         # speculating, the bare engine otherwise (identical protocol)
         self._driver = self.session or self.engine
+        self._handoff_exports = 0
+        self._handoff_imports = 0
+        self._handoff_recomputes = 0
+        self._imported: set = set()
+        self._recomputed: set = set()
+        self._stream_leftovers: list = []
 
     def submit(self, payload, **meta) -> int:
+        handoff = payload.get("_import")
+        if handoff is not None and self.phase != "prefill":
+            uid = self.engine.import_sequence(handoff)
+            if uid is not None:
+                self._handoff_imports += 1
+                self._imported.add(uid)
+                return uid
+            # decode pool full (or incompatible blocks): recompute the
+            # prompt here instead of failing the request — the original
+            # submit stamp is preserved so end-to-end latency still
+            # spans the whole migration
+            self._handoff_recomputes += 1
+            uid = self.engine.submit(
+                handoff["prompt"],
+                max_new_tokens=handoff["max_new_tokens"],
+                temperature=handoff["temperature"],
+                eos_id=handoff["eos_id"])
+            self.engine.queue[-1].submitted_at = handoff["submitted_at"]
+            self._recomputed.add(uid)
+            return uid
         return self._driver.submit(
             payload["prompt"],
             max_new_tokens=payload.get("max_new_tokens", 16),
@@ -105,21 +162,129 @@ class LLMServicer:
             eos_id=payload.get("eos_id"),
         )
 
+    def _result(self, req) -> dict:
+        itl = None
+        if (req.first_token_at is not None and req.finished_at is not None
+                and len(req.output) > 1):
+            itl = ((req.finished_at - req.first_token_at)
+                   / (len(req.output) - 1))
+        res = {
+            "tokens": req.output,
+            "n_prompt": req.n_prompt,
+            "ttft_s": (req.first_token_at - req.submitted_at
+                       if req.first_token_at else None),
+            "itl_s": itl,
+            "latency_s": req.finished_at - req.submitted_at,
+        }
+        if req.uid in self._imported:
+            self._imported.discard(req.uid)
+            res["handoff"] = True
+            res["role"] = "decode"
+        elif req.uid in self._recomputed:
+            self._recomputed.discard(req.uid)
+            res["handoff"] = True
+            res["recompute"] = True
+            res["role"] = "decode"
+        elif self.phase != "serve":
+            res["role"] = self.phase
+        return res
+
     def step(self):
-        if not self._driver.has_work():
-            time.sleep(1e-4)
-            return []
-        self._driver.step()
         out = []
+        if self._stream_leftovers:
+            out, self._stream_leftovers = self._stream_leftovers, []
+        if not self._driver.has_work():
+            if not out:
+                time.sleep(1e-4)
+            return out
+        if self.phase == "prefill":
+            return out + self._step_prefill()
+        self._driver.step()
         for req in self._driver.collect_finished():
-            out.append((req.uid, {
-                "tokens": req.output,
-                "n_prompt": req.n_prompt,
-                "ttft_s": (req.first_token_at - req.submitted_at
-                           if req.first_token_at else None),
-                "latency_s": req.finished_at - req.submitted_at,
+            out.append((req.uid, self._result(req)))
+        return out
+
+    def _step_prefill(self):
+        """Prefill-role step: chunk-prefill only, then export every
+        sequence whose first token is out.  The handoff result keeps the
+        normal result shape (so a crash-replay or a drain still resolves
+        the future sanely) plus the serialized KV under ``"_handoff"``
+        for the replica set's re-dispatch hook."""
+        eng = self.engine
+        eng.step_prefill_only()
+        out = []
+        for req in eng.collect_finished():  # finished AT prefill (e.g.
+            out.append((req.uid, self._result(req)))  # max_new_tokens=1)
+        for uid in eng.exportable():
+            pay = eng.export_sequence(uid)
+            self._handoff_exports += 1
+            now = time.perf_counter()
+            out.append((uid, {
+                "_handoff": pay,
+                "tokens": list(pay["output"]),
+                "n_prompt": len(pay["prompt"]),
+                "ttft_s": (pay["first_token_at"] - pay["submitted_at"]
+                           if pay["first_token_at"] else None),
+                "itl_s": None,
+                "latency_s": now - pay["submitted_at"],
+                "role": "prefill",
             }))
         return out
+
+    def generate_stream(self, payload, *, max_steps: int = 100000, **meta):
+        """Synchronously drive ONE request to completion, yielding
+        ``{"token": t}`` per generated token and finally ``{"done":
+        True, **result}`` with the same keys ``step()`` reports
+        (``ttft_s``/``itl_s``/``latency_s``/``tokens``).  A
+        ``max_new_tokens <= 0`` payload yields only the final event with
+        ``ttft_s: None`` — an empty generation has no first token.
+
+        This drives the WHOLE engine (a convenience for tests, examples
+        and single-tenant tools, not the replica-set path); results of
+        other in-flight requests completing meanwhile are buffered and
+        returned by the next ``step()`` call rather than dropped."""
+        if self.phase == "prefill":
+            raise ValueError(
+                "generate_stream runs prefill+decode; a prefill-role "
+                "replica hands sequences off instead of decoding them")
+        n_prompt = len(payload.get("prompt", ()))
+        if payload.get("max_new_tokens", 16) <= 0:
+            yield {"done": True, "tokens": [], "n_prompt": n_prompt,
+                   "ttft_s": None, "itl_s": None, "latency_s": 0.0}
+            return
+        uid = self.submit(payload, **meta)
+        req = self._find_request(uid)
+        sent = 0
+        final = None
+        for _ in range(max_steps):
+            self._driver.step()
+            for r in self._driver.collect_finished():
+                res = self._result(r)
+                if r.uid == uid:
+                    final = res
+                else:
+                    self._stream_leftovers.append((r.uid, res))
+            if req is not None:
+                while sent < len(req.output):
+                    yield {"token": req.output[sent]}
+                    sent += 1
+            if final is not None:
+                break
+        if final is None:
+            raise RuntimeError(
+                f"generate_stream: request {uid} did not finish within "
+                f"{max_steps} steps")
+        yield {"done": True, **final}
+
+    def _find_request(self, uid):
+        eng = self.engine
+        for r in eng.queue:
+            if r.uid == uid:
+                return r
+        for r in eng.running.values():
+            if r.uid == uid:
+                return r
+        return None
 
     def residency_summary(self, max_len: int = 128):
         """Resident prefix sequences for router gossip (thread-safe: the
@@ -137,8 +302,13 @@ class LLMServicer:
     def warmup(self):
         """Prime the replica before it becomes routable: run one tiny
         request end-to-end so prefill/decode are compiled and the first
-        real request pays no compilation tail (autoscale warm-up)."""
-        self.engine.submit([1, 2, 3, 4], max_new_tokens=1)
+        real request pays no compilation tail (autoscale warm-up).  A
+        decode-role replica warms with max_new_tokens=2 — one real
+        decode step — because its working path is the batched decode an
+        imported sequence lands in, which a prefill-terminal
+        single-token warmup would never compile."""
+        mnt = 2 if self.phase == "decode" else 1
+        self.engine.submit([1, 2, 3, 4], max_new_tokens=mnt)
         self.engine.run(max_steps=64)
 
     @property
@@ -159,6 +329,19 @@ class LLMServicer:
         gossips to headroom-aware routers; None for slot-pool engines."""
         return self.engine.block_telemetry()
 
+    def handoff_stats(self):
+        """Disaggregation counters (exports on prefill replicas, imports
+        + recompute fallbacks on decode replicas), aggregated per group
+        by ``ReplicaSet.stats()``; None on unified replicas."""
+        if self.phase == "serve":
+            return None
+        return {
+            "role": self.phase,
+            "exports": self._handoff_exports,
+            "imports": self._handoff_imports,
+            "recomputes": self._handoff_recomputes,
+        }
+
 
 def llm_service_factory(cfg: ModelConfig, params=None, **engine_kw):
     """Factory suitable for ServiceDescription(factory=...).
@@ -178,7 +361,8 @@ def llm_model_group(name: str, cfg: ModelConfig, params=None, *,
                     requirements=None, role: str = "serve",
                     paired_with: Optional[str] = None,
                     min_replicas: Optional[int] = None,
-                    max_replicas: Optional[int] = None, **engine_kw):
+                    max_replicas: Optional[int] = None,
+                    borrow_limit: Optional[int] = None, **engine_kw):
     """One model config of a multi-model service: a ``ModelGroup`` whose
     factory builds an ``LLMServicer`` for ``cfg``.
 
@@ -201,11 +385,27 @@ def llm_model_group(name: str, cfg: ModelConfig, params=None, *,
     autoscaler scales the group's entitlement by the measured acceptance
     rate.  ``min_replicas``/``max_replicas`` bound autoscaling per group;
     an explicit ``min_replicas=0`` allows a cold draft group to be
-    scaled away entirely.
+    scaled away entirely.  ``borrow_limit`` caps how many replicas the
+    group may lend below its weight-anchored entitlement when the
+    ``weighted_capacity`` autoscaler picks it as the donor of a
+    capacity-neutral rebalance.
+
+    ``role="prefill"`` / ``role="decode"`` declare a DISAGGREGATED pair
+    sharing this set: clients address the prefill group, whose replicas
+    only chunk-prefill (``phase="prefill"`` servicers, typically with a
+    large ``max_num_batched_tokens``); on first token each sequence's KV
+    is exported and re-dispatched to the ``paired_with`` decode group
+    (named on the prefill group), whose replicas import it and serve
+    pure decode.  The prefill group's ``slo_p95_ms`` is then a TTFT
+    target and the decode group's an ITL target — the two-SLO split the
+    ``weighted_capacity`` autoscaler rebalances independently.
     """
+    if role in ("prefill", "decode"):
+        engine_kw.setdefault("phase", role)
     return ModelGroup(name=name,
                       factory=llm_service_factory(cfg, params, **engine_kw),
                       weight=weight, replicas=replicas,
                       slo_p95_ms=slo_p95_ms, requirements=requirements,
                       role=role, paired_with=paired_with,
-                      min_replicas=min_replicas, max_replicas=max_replicas)
+                      min_replicas=min_replicas, max_replicas=max_replicas,
+                      borrow_limit=borrow_limit)

@@ -98,7 +98,8 @@ import numpy as np
 from repro.core.prefix import RadixIndex
 from repro.models import ModelApi, get_model
 from repro.models.config import ModelConfig
-from .kvcache import (CachePool, PagedCachePool, gather_block_view,
+from .kvcache import (CachePool, PagedCachePool, extract_blocks,
+                      gather_block_view, insert_blocks,
                       scatter_block_writes)
 from .sampling import sample
 
@@ -387,6 +388,143 @@ class InferenceEngine:
             "cow_copies": self.stats.cow_copies,
             "evicted_residencies": self.stats.evicted_residencies,
         }
+
+    def step_prefill_only(self) -> list:
+        """One PREFILL-ROLE iteration (disaggregated serving): admit and
+        chunk-prefill, but never decode — a dedicated prefill replica
+        spends every step's full token budget on prompt chunks instead
+        of interleaving them with decode steps it will never own.
+        Sequences whose first token is out (and that are not already
+        done) sit in ``running`` awaiting ``export_sequence()``."""
+        if not self.paged:
+            raise ValueError("step_prefill_only requires a paged engine")
+        self._admit_paged()
+        self.stats.peak_running = max(self.stats.peak_running,
+                                      len(self.running))
+        self._prefill_step_paged()
+        self.stats.steps += 1
+        self.stats.active_slot_steps += len(self.running)
+        self.stats.slot_steps += max(self.max_num_seqs, len(self.running))
+        self.stats.shared_block_peak = max(self.stats.shared_block_peak,
+                                           self.pool.block_savings())
+        self.stats.free_blocks = self.pool.n_free
+        self.stats.reserved_blocks = self._reserved
+        return []
+
+    def exportable(self) -> list:
+        """Uids of running sequences ready for a prefill->decode handoff:
+        past prefill (first token emitted), not finished."""
+        if not self.paged:
+            return []
+        return [r.uid for r in self.running.values()
+                if r.output and not r.pending_tokens and not r.done]
+
+    def export_sequence(self, uid: int) -> dict:
+        """Export a running sequence for migration to another paged
+        engine (the disaggregated prefill->decode KV handoff).
+
+        The sequence must be past prefill: its KV covers positions
+        ``[0, pos)`` and the first generated token(s) are in ``output``.
+        Returns serialized ``[n_blocks, block_size, ...]`` K/V leaves
+        (``extract_blocks``) plus the metadata ``import_sequence`` needs
+        to resume decode bit-for-bit.  The request then RETIRES here:
+        its admission reserve is released and its blocks either transfer
+        to a residency entry (prefix reuse on — a follow-up turn hitting
+        this prefill replica resumes the prompt's KV for free) or free,
+        exactly mirroring ``_collect_finished_paged``."""
+        if not self.paged:
+            raise ValueError("export_sequence requires a paged engine")
+        req = self.running.get(uid)
+        if req is None:
+            raise KeyError(f"no running request {uid}")
+        if not req.output or req.pending_tokens:
+            raise ValueError(f"request {uid} has not finished prefill")
+        payload = {
+            "leaves": extract_blocks(self.pool.cache, req.table),
+            "block_size": self.block_size,
+            "n_blocks": len(req.table),
+            "pos": req.pos,
+            "prompt": list(req.prompt),
+            "output": list(req.output),
+            "last_token": req.last_token,
+            "max_new_tokens": req.max_new_tokens,
+            "temperature": req.temperature,
+            "eos_id": req.eos_id,
+            "cached_prefix": req.cached_prefix,
+            "truncated": req.truncated,
+            "submitted_at": req.submitted_at,
+            "first_token_at": req.first_token_at,
+        }
+        # retire the exported request (mirrors _collect_finished_paged):
+        # release the unconsumed reserve, keep the prompt KV resident
+        # when prefix reuse allows so later turns skip this prefill
+        del self.running[uid]
+        if req in self._prefill_order:
+            self._prefill_order.remove(req)
+        self._reserved -= req.reserve_left
+        req.reserve_left = 0
+        if self._prefix_reuse and not req.truncated and req.table:
+            seq = tuple(req.prompt) + tuple(req.output)
+            res_id = next(self._res_counter)
+            self._residency[res_id] = _Residency(tuple(req.table), len(seq))
+            for b in req.table:
+                self._res_holds[b] = self._res_holds.get(b, 0) + 1
+            self._prefix_index.insert(seq, res_id)
+        else:
+            for b in req.table:
+                self.pool.alloc.free(b)
+        req.table = []
+        self.stats.free_blocks = self.pool.n_free
+        self.stats.reserved_blocks = self._reserved
+        return payload
+
+    def import_sequence(self, payload: dict) -> Optional[int]:
+        """Adopt an exported sequence into freshly reserved blocks and
+        resume its decode here (the receiving half of the handoff).
+
+        Admission-gated exactly like ``_admit_paged``: the full
+        remaining generation must be covered by free + reclaimable
+        blocks net of existing reservations, or the import is REFUSED
+        (returns None) and the caller falls back to recomputing the
+        prompt — a full decode pool degrades to recompute-on-miss, never
+        to a deadlock.  Block-size mismatches are likewise refused (the
+        block rows cannot be remapped 1:1).  On success the request
+        joins ``running`` ready for the next decode batch, keeping the
+        original submit/first-token stamps so TTFT/ITL accounting spans
+        the migration."""
+        if not self.paged:
+            raise ValueError("import_sequence requires a paged engine")
+        if payload["block_size"] != self.block_size:
+            return None
+        pos = int(payload["pos"])
+        out = list(payload["output"])
+        if pos >= self.max_len:
+            return None
+        if len(self.running) >= self.max_running:
+            return None
+        remaining = max(0, int(payload["max_new_tokens"]) - len(out))
+        need = self._blocks_needed(pos + remaining, 0)
+        if not self._reserve(need):
+            return None
+        req = Request(uid=next(self._uid), prompt=list(payload["prompt"]),
+                      max_new_tokens=int(payload["max_new_tokens"]),
+                      temperature=float(payload["temperature"]),
+                      eos_id=payload["eos_id"], output=out,
+                      submitted_at=payload["submitted_at"],
+                      first_token_at=payload["first_token_at"],
+                      cached_prefix=int(payload.get("cached_prefix", 0)),
+                      truncated=bool(payload.get("truncated", False)),
+                      pos=pos, last_token=payload["last_token"])
+        req.reserve_left = need
+        n_blocks = int(payload["n_blocks"])
+        req.table = [self._alloc_block(req) for _ in range(n_blocks)]
+        self.pool.cache = insert_blocks(self.pool.cache, payload["leaves"],
+                                        req.table)
+        self.running[req.uid] = req
+        self._check_done(req)
+        self.stats.free_blocks = self.pool.n_free
+        self.stats.reserved_blocks = self._reserved
+        return req.uid
 
     def run(self, *, max_steps: int = 100000) -> dict:
         """Drain the queue; returns completed requests keyed by uid."""

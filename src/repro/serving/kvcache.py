@@ -341,6 +341,51 @@ def scatter_block_writes(store, view, write_phys, write_off, write_pos):
     return jax.tree_util.tree_map_with_path(s, store, view)
 
 
+def extract_blocks(store, blocks):
+    """Serialize physical blocks out of a paged store for migration.
+
+    Returns ``{leaf_path: host_array}`` where each array is the leaf's
+    rows at ``blocks`` with the block dim moved to the front —
+    ``[n_blocks, block_size, ...]`` — exactly what ``insert_blocks``
+    writes back on the receiving engine.  ``len`` leaves are omitted
+    (logical lengths are engine host state, carried in the handoff
+    metadata, not in the store)."""
+    idx = jnp.asarray(list(blocks), jnp.int32)
+    out = {}
+
+    def g(path, leaf):
+        keys = tuple(_path_keys(path))
+        if keys[-1] == "len":
+            return leaf
+        bdim = batch_dim_for(keys, leaf.ndim)
+        t = jnp.moveaxis(leaf, bdim, 0)
+        out[keys] = jax.device_get(t[idx])
+        return leaf
+
+    jax.tree_util.tree_map_with_path(g, store)
+    return out
+
+
+def insert_blocks(store, leaves, dst_blocks):
+    """Write serialized block rows (from ``extract_blocks``, possibly on
+    another engine) into this store at ``dst_blocks``.  Leaf paths must
+    match — both pools were built from the same ``cache_template`` — and
+    ``len`` leaves are untouched."""
+    idx = jnp.asarray(list(dst_blocks), jnp.int32)
+
+    def s(path, leaf):
+        keys = tuple(_path_keys(path))
+        src = leaves.get(keys)
+        if src is None:
+            return leaf
+        bdim = batch_dim_for(keys, leaf.ndim)
+        t = jnp.moveaxis(leaf, bdim, 0)
+        t = t.at[idx].set(jnp.asarray(src).astype(t.dtype))
+        return jnp.moveaxis(t, 0, bdim)
+
+    return jax.tree_util.tree_map_with_path(s, store)
+
+
 class PagedCachePool:
     """Block-paged physical KV store + allocator.
 
