@@ -3,14 +3,27 @@
 A population of agents issues LLM decisions through a middleware service and
 realizes each as HPC task submissions.  We verify sustained temporal overlap
 (no phase separation) and bounded decision->realization lag.
+
+``--qos`` runs the multi-tenant QoS campaign instead: agent sessions in two
+priority classes plus batch FUNCTION tasks on one ledger, three phases
+(unloaded high-class baseline; contended with QoS off; contended with QoS
+on).  CI gates on the emitted JSON via ``check_bench_json.py qos``:
+high-class p95 under saturating low-class load stays within 1.3x the
+unloaded baseline, the low class keeps >= 80% of its no-QoS throughput
+(weighted fairness is work-conserving, not starvation), preemptions match
+resumes, and per-tenant accounting conserves with zero cross-tenant rows.
 """
 from __future__ import annotations
+
+import argparse
+import json
+import time
 
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import (ResourceDescription, Rhapsody, ServiceDescription,
-                        TaskDescription)
+from repro.core import (ExecutionPolicy, ResourceDescription, Rhapsody,
+                        ServiceDescription, TaskDescription)
 from repro.core.agent import AgentConfig, run_agent_population
 from repro.serving.client import llm_service_factory
 from repro.substrate.simulation import surrogate_eval
@@ -72,6 +85,130 @@ def run_population(n_agents: int, n_decisions: int = 4) -> dict:
         rh.close()
 
 
+def _p95(xs):
+    return float(np.percentile(xs, 95)) if xs else None
+
+
+def _qos_phase(phase: str, cfg, *, qos_on: bool, with_low: bool,
+               n_high=2, n_low=6, high_decisions=24,
+               low_decisions=8) -> dict:
+    """One phase of the QoS campaign on a fresh single-replica service.
+
+    A SINGLE engine seat and six saturating low-class agents (pure
+    request loops, four decisions pipelined each: up to 24 outstanding
+    against one seat) keep the replica oversubscribed the whole phase, so high-class isolation has to come
+    from the scheduler (queue reordering + decode preemption), not from
+    idle capacity — and with one seat there is no batch sharing, so the
+    contended high-class latency is directly comparable to the unloaded
+    baseline: any excess IS queueing.  A batch of FUNCTION tasks rides the same ledger's worker
+    pool in every phase — the paper's hybrid AI-HPC mix, not an
+    inference-only microbench (and symmetric noise: the baseline pays
+    the same task-pool tax as the contended phases)."""
+    rh = Rhapsody(ResourceDescription(nodes=4, cores_per_node=16),
+                  policy=ExecutionPolicy(routing="round_robin"),
+                  n_workers=2)
+    try:
+        rs = rh.add_service(ServiceDescription(
+            name="llm", replicas=1,
+            factory=llm_service_factory(
+                cfg, max_num_seqs=1, max_len=80, paged=True, block_size=8,
+                num_blocks=26, prefill_buckets=(16, 32), qos=qos_on)))
+        rng = np.random.RandomState(0)
+
+        def high_payload(i):
+            return {"prompt": list(rng.randint(0, 512, size=16)),
+                    "max_new_tokens": 24}
+
+        def low_payload(i):
+            return {"prompt": list(rng.randint(0, 512, size=24)),
+                    "max_new_tokens": 16}
+
+        def make_task(i, j):
+            return TaskDescription(
+                fn=surrogate_eval, kwargs={"dim": 16, "hidden": 32,
+                                           "seed": i * 131 + j},
+                task_type="agent_tool")
+
+        def build(tag, highs, lows):
+            cfgs = [AgentConfig(name=f"{tag}hi{k}", service="llm",
+                                n_decisions=highs,
+                                tasks_per_decision=2,
+                                decision_payload=high_payload,
+                                make_task=make_task, think_time=0.15,
+                                tenant="interactive", priority="high")
+                    for k in range(n_high)]
+            if with_low:
+                cfgs += [AgentConfig(name=f"{tag}lo{k}", service="llm",
+                                     n_decisions=lows,
+                                     tasks_per_decision=0,
+                                     decision_payload=low_payload,
+                                     think_time=0.0, pipeline_depth=4,
+                                     tenant="batch", priority="low")
+                         for k in range(n_low)]
+            return cfgs
+
+        # dress rehearsal: an untimed miniature of the EXACT measured
+        # workload, so every JIT shape (prefill buckets, multi-seat decode
+        # batches, preemption readmits) is compiled before the clock
+        # starts — measured p95s reflect queueing, which is what QoS
+        # controls, not stray compiles
+        run_agent_population(rh, build("warm-", 2, 2))
+        # the batch FUNCTION leg: plain HPC tasks coexisting with both
+        # agent classes on the one resource ledger for the whole phase
+        batch_uids = rh.submit([make_task(97, j) for j in range(16)])
+        t0 = time.perf_counter()
+        summary = run_agent_population(rh, build("", high_decisions,
+                                                 low_decisions))
+        elapsed = time.perf_counter() - t0
+        # service-side per-class p95s (envelope submission -> servicer
+        # resolution): the isolation gate reads THESE — client-side agent
+        # latencies also include agent-thread wakeup under CPU load,
+        # which is harness noise, not scheduling
+        svc_high = rs.latency_p95(tenant_class="high", started_after=t0)
+        svc_low = rs.latency_p95(tenant_class="low", started_after=t0)
+        rh.wait(batch_uids)
+        batch_done = sum(1 for u in batch_uids
+                         if rh.tasks[u].state.name == "DONE")
+        by_cls = summary["latencies_by_class"]
+        stats = rh.get_service("llm").stats()
+        low_done = len(by_cls.get("low", []))
+        return {
+            "scenario": "qos_campaign",
+            "phase": phase,
+            "qos": qos_on,
+            "elapsed_s": elapsed,
+            "high_p95_s": svc_high,
+            "low_p95_s": svc_low,
+            "agent_high_p95_s": _p95(by_cls.get("high", [])),
+            "agent_low_p95_s": _p95(by_cls.get("low", [])),
+            "high_decisions": len(by_cls.get("high", [])),
+            "low_decisions": low_done,
+            "low_throughput_per_s": (low_done / elapsed if with_low
+                                     else None),
+            "decision_errors": summary["decision_errors"],
+            "agent_errors": summary["errors"],
+            "batch_tasks": len(batch_uids),
+            "batch_completed": batch_done,
+            "per_tenant": stats["per_tenant"],
+            "qos_counters": stats["qos"],
+            "expected_tenants": (["batch", "interactive"] if with_low
+                                 else ["interactive"]),
+        }
+    finally:
+        rh.close()
+
+
+def run_qos_campaign(**kw) -> list:
+    cfg = get_config("rhapsody-demo").scaled(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=512)
+    return [
+        _qos_phase("baseline_high", cfg, qos_on=True, with_low=False, **kw),
+        _qos_phase("no_qos", cfg, qos_on=False, with_low=True, **kw),
+        _qos_phase("qos", cfg, qos_on=True, with_low=True, **kw),
+    ]
+
+
 def main(rep: Reporter, *, populations=(4, 16)) -> dict:
     out = []
     for n in populations:
@@ -84,4 +221,20 @@ def main(rep: Reporter, *, populations=(4, 16)) -> dict:
 
 
 if __name__ == "__main__":
-    main(Reporter())
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--qos", action="store_true",
+                    help="run the multi-tenant QoS isolation campaign")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    if args.qos:
+        rows = run_qos_campaign()
+        if args.json:
+            print(json.dumps(rows, indent=2))
+        else:
+            for r in rows:
+                print(f"{r['phase']:>14}: high_p95="
+                      f"{(r['high_p95_s'] or 0) * 1e3:.1f}ms "
+                      f"low_tp={r['low_throughput_per_s'] or 0:.2f}/s "
+                      f"qos={r['qos_counters']}")
+    else:
+        main(Reporter())

@@ -11,6 +11,7 @@ Usage::
     python benchmarks/check_bench_json.py paged      /tmp/paged.json
     python benchmarks/check_bench_json.py specdecode /tmp/specdecode.json
     python benchmarks/check_bench_json.py disagg     /tmp/disagg.json
+    python benchmarks/check_bench_json.py qos        /tmp/qos.json
 
 Each checker takes the decoded rows and raises ``CheckFailed`` with a
 pointed message on the first violated invariant — these used to live as
@@ -306,6 +307,80 @@ def check_specdecode(rows: list) -> None:
              {"speedup": lo.get("speedup_vs_vanilla")})
 
 
+def check_qos(rows: list) -> None:
+    """bench_agentic --qos: three phases (unloaded high-class baseline;
+    contended QoS off; contended QoS on).  Gates the tentpole claims:
+    high-class p95 under saturating low-class load stays <= 1.3x the
+    unloaded baseline (isolation), low-class throughput under QoS stays
+    >= 0.8x its no-QoS run (weighted fairness is work-conserving, not
+    starvation), batch FUNCTION tasks all complete on the shared ledger,
+    every phase's per-tenant ledger conserves (requests == completed +
+    errors) with ZERO rows for tenants that phase never ran
+    (cross-tenant bleed), and the QoS phase's preemptions were all
+    resumed (token-identity is separately property-tested)."""
+    by = {r.get("phase"): r for r in rows}
+    _require(set(by) == {"baseline_high", "no_qos", "qos"},
+             "wrong phase set", sorted(by))
+    base, noq, q = by["baseline_high"], by["no_qos"], by["qos"]
+    for r in rows:
+        _require(r.get("scenario") == "qos_campaign",
+                 "row mislabels its scenario", r)
+        _require(r.get("high_decisions", 0) > 0,
+                 "phase completed no high-class decisions", r)
+        _require(r.get("decision_errors") == 0,
+                 "a decision request failed", r)
+        _require(not r.get("agent_errors"),
+                 "an agent thread crashed", r)
+        _require(r.get("batch_tasks", 0) > 0
+                 and r["batch_completed"] == r["batch_tasks"],
+                 "batch FUNCTION leg did not complete on the shared "
+                 "ledger", r)
+        _require(r.get("high_p95_s"), "phase has no high-class p95", r)
+        # zero cross-tenant accounting: exactly the tenants this phase
+        # ran, and each tenant's ledger conserves
+        pt = r.get("per_tenant") or {}
+        _require(sorted(pt) == r.get("expected_tenants"),
+                 "per-tenant rows do not match the tenants that ran",
+                 {"phase": r.get("phase"), "saw": sorted(pt),
+                  "expected": r.get("expected_tenants")})
+        for tenant, ts in pt.items():
+            _require(ts.get("requests") ==
+                     ts.get("completed", 0) + ts.get("errors", 0),
+                     "tenant ledger does not conserve",
+                     {"phase": r.get("phase"), tenant: ts})
+    _require(base.get("qos") is True and q.get("qos") is True,
+             "baseline/qos phases must run with QoS armed", rows)
+    _require(noq.get("qos") is False,
+             "no_qos phase ran with QoS armed", noq)
+    for r in (noq, q):
+        _require(r.get("low_decisions", 0) > 0,
+                 "contended phase completed no low-class decisions", r)
+        _require(r.get("low_throughput_per_s"),
+                 "contended phase has no low-class throughput", r)
+    # the isolation gate: saturating low-class load may not blow the
+    # high class past 1.3x its unloaded p95 once QoS is on
+    _require(q["high_p95_s"] <= 1.3 * base["high_p95_s"],
+             "QoS failed to isolate the high class",
+             {"qos_p95_s": q["high_p95_s"],
+              "baseline_p95_s": base["high_p95_s"]})
+    # work conservation: protecting the high class must not starve the
+    # low class below 80% of what it got with QoS off
+    _require(q["low_throughput_per_s"]
+             >= 0.8 * noq["low_throughput_per_s"],
+             "QoS starved the low class",
+             {"qos_tp": q["low_throughput_per_s"],
+              "no_qos_tp": noq["low_throughput_per_s"]})
+    qc = q.get("qos_counters")
+    _require(isinstance(qc, dict), "QoS phase reported no counters", q)
+    _require(qc.get("reporting_replicas", 0) >= 1,
+             "no replica reported QoS counters", qc)
+    _require(qc.get("engine_preemptions", 0)
+             == qc.get("engine_preempt_resumes", 0),
+             "a preempted sequence never resumed", qc)
+    _require(noq.get("qos_counters") is None,
+             "QoS-off phase still carries a scheduler", noq)
+
+
 CHECKS = {
     "affinity": check_affinity,
     "autoscale": check_autoscale,
@@ -313,6 +388,7 @@ CHECKS = {
     "paged": check_paged,
     "specdecode": check_specdecode,
     "disagg": check_disagg,
+    "qos": check_qos,
 }
 
 

@@ -4,6 +4,8 @@ from .autoscale import (AUTOSCALERS, Autoscaler, LatencySLOAutoscaler,
                         WeightedCapacityAutoscaler, autoscaler_from_policy)
 from .middleware import Rhapsody
 from .policy import ExecutionPolicy
+from .request import (AdmissionDenied, InferenceRequest, RouteContext,
+                      DEFAULT_CLASS_WEIGHTS)
 from .resources import (Allocation, Claim, Placement, ResourceDescription,
                         partition)
 from .service import (ModelGroup, ReplicaSet, ServiceDescription,
@@ -20,4 +22,6 @@ __all__ = [
     "autoscaler_from_policy",
     "TaskDescription", "TaskKind", "TaskState", "Task",
     "ResourceRequirements",
+    "InferenceRequest", "RouteContext", "AdmissionDenied",
+    "DEFAULT_CLASS_WEIGHTS",
 ]

@@ -308,13 +308,25 @@ class WeightedCapacityAutoscaler(LatencySLOAutoscaler):
         """The LatencySLOAutoscaler direction logic, per model group.
         Prefill/decode-role groups read their per-phase window (TTFT /
         ITL) instead of end-to-end latency, so each pool's SLO violation
-        grows it independently."""
+        grows it independently.
+
+        With ``policy.qos_protected_class`` set, the group is judged on
+        that priority class's end-to-end p95 whenever such samples exist
+        — the isolation signal: capacity follows the class the SLO
+        protects, not the saturating bulk traffic — falling back to the
+        usual phase/end-to-end window when the class is quiet."""
         pol = self.policy
         slo_s = rs.group_slo_ms(group) / 1e3
         window = getattr(pol, "slo_window_s", 5.0)
         down = getattr(pol, "slo_down_factor", 0.5)
         phase = self._group_phase(rs, group)
         kw = {} if phase is None else {"phase": phase}
+        cls = getattr(pol, "qos_protected_class", None)
+        if cls is not None and phase is None:
+            ckw = {"tenant_class": cls}
+            if rs.latency_p95(window_s=window, group=group,
+                              **ckw) is not None:
+                kw = ckw  # class samples exist: judge on the class
         p95 = rs.latency_p95(window_s=window,
                              started_after=self._last_action.get(name),
                              group=group, **kw)

@@ -87,7 +87,8 @@ class InMemoryStore(DataStore):
             if not ok:
                 raise KeyError(f"timeout waiting for {key}")
             value = self._data[key]
-        nbytes = value.nbytes if isinstance(value, np.ndarray) else 0
+        nbytes = (value.nbytes if isinstance(value, np.ndarray)
+                  else len(pickle.dumps(value, protocol=5)))
         self.stats.get_times.append(time.perf_counter() - t0)
         self.stats.get_bytes += nbytes
         return value
@@ -139,8 +140,11 @@ class FileSystemStore(DataStore):
             with open(path, "rb") as f:
                 value = pickle.load(f)
         self.stats.get_times.append(time.perf_counter() - t0)
+        # mirror put's accounting (ndarray: raw bytes; pickle: file
+        # size) so pickled payloads no longer read as zero bytes
         self.stats.get_bytes += (value.nbytes
-                                 if isinstance(value, np.ndarray) else 0)
+                                 if isinstance(value, np.ndarray)
+                                 else os.path.getsize(path))
         return value
 
     def delete(self, key):

@@ -20,7 +20,8 @@ from typing import Any, Iterable, Optional, Sequence, Union
 from .events import EventLog
 from .policy import ExecutionPolicy
 from .resources import Allocation, ResourceDescription, partition
-from .router import default_cost, request_model, router_from_policy
+from .request import AdmissionDenied, InferenceRequest
+from .router import default_cost, router_from_policy
 from .service import ServiceDescription, ServiceManager
 from .task import Task, TaskDescription, TaskKind, TaskState
 
@@ -160,8 +161,21 @@ class Rhapsody:
         ``service_*`` keys break out what live replica claims hold, and
         ``service_models`` slices those claims per model group — so a
         multi-model set's per-model footprint is first-class on the one
-        ledger, next to the tasks it coexists with."""
+        ledger, next to the tasks it coexists with.  ``tenants`` rolls
+        up per-tenant request accounting (requests/completed/errors and
+        router-bucket ``admission_denied``) across every service whose
+        replicas claim from that partition."""
         claimed = self.services.claimed()
+        tenants: dict = {name: {} for name in self.allocations}
+        for rs in list(self.services.replica_sets.values()):
+            pname = next((n for n, a in self.allocations.items()
+                          if a is rs.allocation), None)
+            if pname is None:
+                continue
+            for t, ts in rs.tenant_usage().items():
+                tt = tenants[pname].setdefault(t, {})
+                for k, v in ts.items():
+                    tt[k] = tt.get(k, 0) + v
         out = {}
         for name, alloc in self.allocations.items():
             u = alloc.utilization()
@@ -170,6 +184,7 @@ class Rhapsody:
             u["service_gpus"] = svc.get("gpus", 0)
             u["service_replicas"] = svc.get("replicas", 0)
             u["service_models"] = svc.get("models", {})
+            u["tenants"] = tenants.get(name, {})
             u["free"] = alloc.free_capacity()
             out[name] = u
         return out
@@ -263,28 +278,36 @@ class Rhapsody:
 
     def _dispatch_inference(self, task: Task):
         desc = task.desc
+        # the task's payload + metadata become one InferenceRequest
+        # envelope: ``wrap`` lifts the {"model": ...} tag and any
+        # tenant/priority/deadline_s metadata onto first-class fields,
+        # so QoS identity rides the task into the serving layer.
+        env = InferenceRequest.wrap(desc.payload, meta=dict(desc.metadata))
+        cost = default_cost(env.payload)
         try:
             replica_set = self.services.get(desc.service)
+            if not self.router.admit(env, cost=cost):
+                # rate limiting is backpressure to the CLIENT: the task
+                # fails immediately instead of queueing over-quota load
+                replica_set.note_tenant_denied(env.tenant)
+                raise AdmissionDenied(env.tenant)
             # the load-balancing spine: every INFERENCE task picks its
             # replica through the policy router (token-cost + queue-depth
             # aware), not a fixed endpoint; under prefix_affinity routing
             # the payload's prompt-prefix signature makes same-session
-            # requests stick to their cache-warm replica.  A payload
-            # carrying {"model": ...} is routed only among that model
-            # group's replicas (multi-model services); an unknown tag
-            # fails the task like an unknown service would.
-            endpoint = replica_set.route(
-                default_cost(desc.payload), self.router,
-                affinity_key=self.router.signature(desc.payload),
-                model=request_model(desc.payload))
-        except KeyError as e:
+            # requests stick to their cache-warm replica.  An envelope
+            # with ``model`` set routes only among that model group's
+            # replicas (multi-model services); an unknown tag fails the
+            # task like an unknown service would.
+            endpoint = replica_set.route(env, self.router, cost=cost)
+        except (KeyError, AdmissionDenied) as e:
             self._complete(task, None, e)
             return
         task.state = TaskState.RUNNING
         task.started_at = time.perf_counter()
         self.events.emit(task.uid, "RUNNING", desc.task_type,
                          f"replica={endpoint.replica_idx}")
-        fut = endpoint.request(desc.payload, **desc.metadata)
+        fut = endpoint.request_env(env)
         timeout = self.policy.inference_timeout_s
 
         def waiter():

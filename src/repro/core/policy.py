@@ -74,6 +74,24 @@ class ExecutionPolicy:
     # spec-decode turns off gracefully instead of burning cores
     spec_min_acceptance: float = 0.3  # acceptance floor for draft groups
     spec_min_proposed: int = 256  # proposals to observe before judging
+    # multi-tenant QoS (see repro.core.request / repro.serving.qos)
+    qos_class_weights: Optional[dict] = None  # priority-class -> weighted-
+    #                     fair share (None: DEFAULT_CLASS_WEIGHTS high=4
+    #                     normal=2 low=1); drives per-replica WFQ ordering
+    #                     and decode preemption
+    qos_protected_class: Optional[str] = None  # weighted_capacity judges a
+    #                     group's SLO on this class's p95 when samples
+    #                     exist (isolation signal: scale for the class the
+    #                     SLO protects, not the saturating bulk traffic)
+    qos_preempt: bool = True  # WFQ may preempt decoding sequences of
+    #                     lighter classes (retire paged KV to residency,
+    #                     resume token-identically) to admit a heavier
+    #                     class's queued request
+    tenant_rate: Optional[float] = None  # per-tenant admission rate
+    #                     (cost units/s; None = unlimited) enforced by a
+    #                     router token bucket BEFORE placement
+    tenant_burst_s: float = 2.0  # bucket depth in seconds at the rate
+    tenant_rates: Optional[dict] = None  # per-tenant rate overrides
     warmup: bool = False  # prime new replicas (servicer.warmup(): compile
     #                       + a token of decode) before the router sees them
     # fault tolerance

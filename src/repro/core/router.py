@@ -4,10 +4,19 @@ Two APIs on every router:
 
   * ``assign(requests, n_instances, cost)`` — batch: split a known request
     set into per-instance index lists (offline benchmarks, launchers).
-  * ``pick(cost, n_instances=..., group=...)`` — incremental: route ONE
-    request as it arrives; this is what the middleware dispatch path uses.
-    State is kept per ``group`` (one group per replicated service) so a
-    single shared router instance balances each replica set independently.
+  * ``route(env, ctx)`` — incremental: route ONE ``InferenceRequest``
+    envelope as it arrives given a ``RouteContext`` (candidate count,
+    balance group, live queue depths, stable member identities, sticky
+    namespace); this is what the middleware dispatch path uses.  State is
+    kept per ``ctx.group`` (one group per replicated service) so a single
+    shared router instance balances each replica set independently.
+    ``pick(cost, n_instances=..., ...)`` remains as a deprecation shim
+    over ``route`` for callers of the old keyword surface.
+
+Routers also own per-tenant token-bucket ADMISSION (``TenantThrottle``):
+``configure_tenants`` arms a cost-units/s rate per tenant (with burst)
+and ``admit(env, cost)`` gates a request before any placement state is
+touched — the first stage of multi-tenant QoS isolation.
 
 ``RandomRouter`` assigns uniformly at random; ``RoundRobinRouter`` cycles;
 the paper's ``TokenAwareBalancedRouter`` greedily equalizes BOTH request
@@ -47,10 +56,12 @@ from __future__ import annotations
 import hashlib
 import random
 import threading
+import time
 from collections import OrderedDict
 from typing import Any, Callable, Optional, Sequence
 
 from .prefix import RadixIndex
+from .request import InferenceRequest, RouteContext
 
 
 def default_cost(request) -> float:
@@ -135,6 +146,63 @@ def request_prefix(request, max_len: int = 128) -> Optional[tuple]:
     return prefix or None
 
 
+class TenantThrottle:
+    """Per-tenant token-bucket admission control.
+
+    Each tenant accrues ``rate`` cost units per second (its own override
+    from ``rates`` when present, else the default), up to a bucket depth
+    of ``rate * burst_s``.  A request of cost ``c`` is admitted iff the
+    bucket holds ``min(c, depth)`` tokens — the clamp keeps a single
+    request costlier than the whole burst admittable at full bucket
+    instead of starving its tenant forever.
+
+    ``rate=None`` means unlimited (tenants without an override are not
+    throttled); ``rate <= 0`` means deny everything for that tenant (a
+    hard off-switch).  Untenanted requests are never throttled — they
+    have no bucket to charge.  Denials are counted per tenant for the
+    replica set's ``per_tenant`` stats."""
+
+    def __init__(self, rate: Optional[float] = None,
+                 rates: Optional[dict] = None, burst_s: float = 2.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.rate = rate
+        self.rates = dict(rates or {})
+        self.burst_s = max(burst_s, 1e-9)
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._buckets: dict = {}  # tenant -> [tokens, last_refill]
+        self.denied: dict = {}  # tenant -> denial count
+
+    def rate_for(self, tenant) -> Optional[float]:
+        return self.rates.get(tenant, self.rate)
+
+    def admit(self, tenant, cost: float = 1.0) -> bool:
+        if tenant is None:
+            return True
+        rate = self.rate_for(tenant)
+        if rate is None:
+            return True
+        with self._lock:
+            if rate <= 0:
+                self.denied[tenant] = self.denied.get(tenant, 0) + 1
+                return False
+            depth = rate * self.burst_s
+            now = self._clock()
+            tokens, last = self._buckets.get(tenant, (depth, now))
+            tokens = min(depth, tokens + (now - last) * rate)
+            need = min(max(cost, 0.0), depth)
+            if tokens >= need:
+                self._buckets[tenant] = (tokens - need, now)
+                return True
+            self._buckets[tenant] = (tokens, now)
+            self.denied[tenant] = self.denied.get(tenant, 0) + 1
+            return False
+
+    def denials(self) -> dict:
+        with self._lock:
+            return dict(self.denied)
+
+
 class Router:
     """Base router: per-group incremental state + a generic batch assign.
 
@@ -159,46 +227,81 @@ class Router:
         # ``affinity_group`` so session assignments survive membership
         # changes (LRU-bounded like _groups)
         self._affinity: "OrderedDict[Any, dict]" = OrderedDict()
+        self._throttle: Optional[TenantThrottle] = None
 
     def signature(self, request) -> Optional[Any]:
         """Affinity key for ``request``; None for affinity-blind routers
         (so callers can pass ``signature(payload)`` unconditionally)."""
         return None
 
+    # -- per-tenant admission -----------------------------------------------
+    def configure_tenants(self, rate: Optional[float] = None,
+                          rates: Optional[dict] = None,
+                          burst_s: float = 2.0,
+                          clock: Callable[[], float] = time.monotonic):
+        """Arm per-tenant token-bucket admission (``TenantThrottle``).
+        ``rate`` is the default cost-units/s per tenant (None = tenants
+        without an override are unlimited); ``rates`` overrides per
+        tenant; ``burst_s`` sizes the bucket in seconds at the rate."""
+        self._throttle = TenantThrottle(rate=rate, rates=rates,
+                                        burst_s=burst_s, clock=clock)
+
+    def admit(self, env: InferenceRequest, cost: float = 1.0) -> bool:
+        """Token-bucket admission for one envelope; True when no throttle
+        is configured or the tenant's bucket covers the cost.  Callers
+        check this BEFORE ``route()`` so a denied request never perturbs
+        placement state."""
+        if self._throttle is None:
+            return True
+        return self._throttle.admit(env.tenant, cost)
+
+    def admission_denials(self) -> dict:
+        """Per-tenant denial counts (empty when no throttle is armed)."""
+        return self._throttle.denials() if self._throttle else {}
+
     # -- incremental API ----------------------------------------------------
-    def pick(self, cost: float = 1.0, *, n_instances: int,
-             group: str = "default",
-             queue_depths: Optional[Sequence[float]] = None,
-             affinity_key: Optional[Any] = None,
-             info: Optional[dict] = None,
-             members: Optional[Sequence] = None,
-             affinity_group: Optional[Any] = None) -> int:
-        """Route one request of estimated ``cost``; returns a replica index.
+    def route(self, env: InferenceRequest, ctx: RouteContext,
+              cost: Optional[float] = None) -> int:
+        """Route one envelope given its candidate-set context; returns a
+        replica index into the candidates.
 
-        ``affinity_key`` (see ``request_signature``/``request_prefix``)
-        lets sticky routers pin requests sharing a prompt prefix to one
-        replica; ``info``, if given, is filled with ``{"affinity":
-        "hit"|"miss"|"spill"}`` so the caller can account KV-reuse without
-        a second lookup.
+        ``env.affinity`` (see ``request_signature``/``request_prefix``;
+        derived from ``env.payload`` via ``signature()`` when unset) lets
+        sticky routers pin requests sharing a prompt prefix to one
+        replica; ``ctx.info``, if given, is filled with ``{"affinity":
+        "hit"|"miss"|"spill"}`` so the caller can account KV-reuse
+        without a second lookup.
 
-        ``members`` names the current candidates with STABLE identities
-        (e.g. replica indices that are never reused); sticky routers store
-        assignments against those identities, so a membership change
-        re-homes only sessions whose member actually left.  Defaults to
-        positions ``0..n-1``.  ``affinity_group`` keys the sticky state
-        (defaults to ``group``); pass something stable across membership
-        changes to carry assignments through autoscale/crash churn.
+        ``ctx.members`` names the current candidates with STABLE
+        identities (e.g. replica indices that are never reused); sticky
+        routers store assignments against those identities, so a
+        membership change re-homes only sessions whose member actually
+        left.  Defaults to positions ``0..n-1``.  ``ctx.affinity_group``
+        keys the sticky state (defaults to ``ctx.group``); pass something
+        stable across membership changes to carry assignments through
+        autoscale/crash churn.
+
+        ``cost`` defaults to ``default_cost(env.payload)``.
         """
+        n_instances = ctx.n_instances
         if n_instances <= 0:
             raise ValueError("n_instances must be >= 1")
+        members = ctx.members
         if members is not None and len(members) != n_instances:
             raise ValueError("members must have n_instances entries")
+        if cost is None:
+            cost = default_cost(env.payload)
+        affinity_key = env.affinity
+        if affinity_key is None and self.uses_affinity \
+                and env.payload is not None:
+            affinity_key = self.signature(env.payload)
         if n_instances == 1 and (affinity_key is None
                                  or not self.uses_affinity):
             return 0  # trivial: skip state bookkeeping entirely
         # keyed picks on an affinity router take the full path even at
         # n=1, so first contact still counts as a miss and hit rates stay
         # comparable across replica counts
+        group, info = ctx.group, ctx.info
         with self._lock:
             state = self._groups.pop(group, None)
             if state is None or state["n"] != n_instances:
@@ -213,13 +316,32 @@ class Router:
             astate = None
             if self.uses_affinity:
                 astate = self._affinity_state(
-                    group if affinity_group is None else affinity_group)
+                    group if ctx.affinity_group is None
+                    else ctx.affinity_group)
             mem = tuple(members) if members is not None \
                 else tuple(range(n_instances))
-            idx = self._pick_affinity(state, cost, queue_depths,
+            idx = self._pick_affinity(state, cost, ctx.queue_depths,
                                       affinity_key, info,
                                       astate=astate, members=mem)
         return idx
+
+    def pick(self, cost: float = 1.0, *, n_instances: int,
+             group: str = "default",
+             queue_depths: Optional[Sequence[float]] = None,
+             affinity_key: Optional[Any] = None,
+             info: Optional[dict] = None,
+             members: Optional[Sequence] = None,
+             affinity_group: Optional[Any] = None) -> int:
+        """Deprecated keyword-surface shim over ``route(env, ctx)``.
+
+        Kept for callers of the pre-envelope API; new code should build
+        an ``InferenceRequest`` (or let ``ReplicaSet.request`` wrap the
+        payload) and pass a ``RouteContext``."""
+        env = InferenceRequest(payload=None, affinity=affinity_key)
+        ctx = RouteContext(n_instances=n_instances, group=group,
+                           queue_depths=queue_depths, members=members,
+                           affinity_group=affinity_group, info=info)
+        return self.route(env, ctx, cost=cost)
 
     def _affinity_state(self, key) -> dict:
         """Get-or-create the sticky state for one affinity group (caller
@@ -663,4 +785,10 @@ def router_from_policy(policy) -> Router:
             "headroom_watermark": getattr(
                 policy, "affinity_headroom_watermark", 0.1),
         }
-    return make_router(kind, **kw)
+    r = make_router(kind, **kw)
+    rate = getattr(policy, "tenant_rate", None)
+    rates = getattr(policy, "tenant_rates", None)
+    if rate is not None or rates:
+        r.configure_tenants(rate=rate, rates=rates,
+                            burst_s=getattr(policy, "tenant_burst_s", 2.0))
+    return r

@@ -68,8 +68,8 @@ import time
 from typing import Any, Callable, Optional
 
 from .autoscale import LatencyWindow, autoscaler_from_policy, percentile
-from .router import (Router, default_cost, request_model,
-                     router_from_policy)
+from .request import AdmissionDenied, InferenceRequest, RouteContext
+from .router import Router, default_cost, router_from_policy
 from .task import ResourceRequirements
 
 
@@ -176,6 +176,24 @@ _STAT_KEYS = ("requests", "completed", "errors", "cost",
               "prefix_hits", "prefix_misses")
 
 
+def _merge_tenant_stats(snaps, folded, denied) -> dict:
+    """Merge per-endpoint tenant counters (``snaps``: list of
+    {tenant: {requests, completed, errors}}), folded retired aggregates
+    and router-bucket denial counts into one per-tenant view."""
+    per_tenant: dict = {t: dict(v) for t, v in folded.items()}
+    for snap in snaps:
+        for t, ts in snap.items():
+            tt = per_tenant.setdefault(
+                t, {"requests": 0, "completed": 0, "errors": 0})
+            for k in ("requests", "completed", "errors"):
+                tt[k] = tt.get(k, 0) + ts.get(k, 0)
+    for t, n in denied.items():
+        tt = per_tenant.setdefault(
+            t, {"requests": 0, "completed": 0, "errors": 0})
+        tt["admission_denied"] = tt.get("admission_denied", 0) + n
+    return per_tenant
+
+
 class _Future:
     __slots__ = ("_event", "_result", "_error", "_callbacks")
 
@@ -259,23 +277,52 @@ class ServiceEndpoint:
         # the per-role SLO signals of disaggregated serving
         self.ttft = LatencyWindow()
         self.itl = LatencyWindow()
+        # multi-tenant QoS accounting: per-tenant request counters and
+        # per-priority-class end-to-end latency windows (the isolation
+        # signal — "is the high class's p95 flat while low saturates")
+        self.tenant_stats: dict = {}  # tenant -> {requests/completed/errors}
+        self.class_latency: dict = {}  # qos class -> LatencyWindow
 
-    def bump(self, key: str, by: int = 1):
+    def bump(self, key: str, by: int = 1, tenant: Optional[str] = None):
         # stats feed depth(), which drives routing and autoscaling — a
         # lost += under concurrent clients would skew a control signal
         with self._stats_lock:
             self.stats[key] += by
+            if tenant is not None:
+                ts = self.tenant_stats.setdefault(
+                    tenant, {"requests": 0, "completed": 0, "errors": 0})
+                if key in ts:
+                    ts[key] += by
 
-    def observe_latency(self, seconds: float):
+    def observe_latency(self, seconds: float,
+                        qos_class: Optional[str] = None):
         self.latency.observe(seconds)
+        if qos_class is not None:
+            win = self.class_latency.get(qos_class)
+            if win is None:
+                win = self.class_latency.setdefault(qos_class,
+                                                    LatencyWindow())
+            win.observe(seconds)
 
     def request(self, payload, **meta) -> _Future:
+        """Legacy keyword surface: wraps the payload into an
+        ``InferenceRequest`` (lifting the pre-envelope ``_t0``/``_model``
+        meta side-channels onto it) and enqueues.  New code builds the
+        envelope itself and calls ``request_env``."""
+        t0 = meta.pop("_t0", None)
+        model = meta.pop("_model", None)
+        env = InferenceRequest.wrap(payload, model=model, meta=meta)
+        if t0 is not None:
+            env.submitted_at = t0
+        return self.request_env(env)
+
+    def request_env(self, env: InferenceRequest) -> _Future:
+        """Enqueue one envelope on this replica.  ``env.submitted_at``
+        was stamped when the envelope was first built, so replays,
+        reroutes and handoffs all observe true end-to-end latency."""
         fut = _Future()
-        self.bump("requests")
-        # stamp the submit time once: replays and reroutes carry meta
-        # through, so the latency window sees true end-to-end time
-        meta.setdefault("_t0", time.perf_counter())
-        self.requests.put((payload, meta, fut))
+        self.bump("requests", tenant=env.tenant)
+        self.requests.put((env, fut))
         # closes the route()/retire race: if this endpoint was retired
         # between the route decision and the put, hand the queue (which
         # now holds this request) to the replica set for rerouting
@@ -316,10 +363,10 @@ class ServiceInstance(threading.Thread):
         self.error: Optional[BaseException] = None
         # disaggregated serving: the replica set installs this on
         # prefill-role replicas.  A servicer result dict carrying a
-        # "_handoff" payload (an exported sequence) is diverted here —
-        # the hook re-dispatches the decode leg and chains the futures —
-        # instead of resolving the caller's future with a half-finished
-        # generation.
+        # "handoff_export" payload (an exported sequence) is diverted
+        # here — the hook re-dispatches the decode leg and chains the
+        # futures — instead of resolving the caller's future with a
+        # half-finished generation.
         self.on_handoff: Optional[Callable] = None
 
     def run(self):
@@ -357,15 +404,14 @@ class ServiceInstance(threading.Thread):
             self.error = e
             self.endpoint.ready.clear()
             # preemption-safe: replay in-flight requests on the relaunched
-            # instance (bounded by _replays), else fail their futures
-            for uid, (fut, payload, meta) in self._pending.items():
-                replays = meta.get("_replays", 0)
-                if replays < 2:
-                    meta = dict(meta, _replays=replays + 1)
-                    self.endpoint.requests.put((payload, meta, fut))
+            # instance (bounded by env.replays), else fail their futures
+            for uid, (fut, env) in self._pending.items():
+                if env.replays < 2:
+                    env.replays += 1
+                    self.endpoint.requests.put((env, fut))
                 else:
                     fut.set_error(e)
-                    self.endpoint.bump("errors")
+                    self.endpoint.bump("errors", tenant=env.tenant)
             # same post-put re-check as request(): if this endpoint was
             # retired while we crashed, hand the replays to the reroute
             if self.endpoint.retired and self.endpoint.on_retired:
@@ -375,11 +421,11 @@ class ServiceInstance(threading.Thread):
                 # non-drain stop with work still in flight: fail those
                 # futures now instead of letting clients hit their own
                 # (much longer) timeouts
-                for uid, (fut, payload, meta) in self._pending.items():
+                for uid, (fut, env) in self._pending.items():
                     if not fut.done():
                         fut.set_error(RuntimeError(
                             f"service {self.desc.name} stopped"))
-                        self.endpoint.bump("errors")
+                        self.endpoint.bump("errors", tenant=env.tenant)
                 self._pending.clear()
             if hasattr(self.servicer, "teardown") and self.servicer is not None:
                 try:
@@ -394,68 +440,70 @@ class ServiceInstance(threading.Thread):
         moved = False
         for _ in range(64):
             try:
-                payload, meta, fut = self.endpoint.requests.get_nowait()
+                env, fut = self.endpoint.requests.get_nowait()
             except queue.Empty:
                 break
             moved = True
+            kw = env.servicer_kwargs()
             if hasattr(self.servicer, "submit"):
-                kw = {k: v for k, v in meta.items()
-                      if not k.startswith("_")}
+                if getattr(self.servicer, "accepts_envelope", False):
+                    # envelope-aware servicers (LLMServicer) get the full
+                    # record (tenant/priority/handoff); plain test
+                    # servicers keep the bare payload + public meta
+                    kw["envelope"] = env
                 try:
-                    uid = self.servicer.submit(payload, **kw)
+                    uid = self.servicer.submit(env.payload, **kw)
                 except BaseException as e:  # noqa: BLE001
                     # crash mid-submit: requeue THIS request for replay on
                     # the relaunched instance before propagating
-                    replays = meta.get("_replays", 0)
-                    if replays < 2:
-                        self.endpoint.requests.put(
-                            (payload, dict(meta, _replays=replays + 1), fut))
+                    if env.replays < 2:
+                        env.replays += 1
+                        self.endpoint.requests.put((env, fut))
                     else:
                         fut.set_error(e)
-                        self.endpoint.bump("errors")
+                        self.endpoint.bump("errors", tenant=env.tenant)
                     raise
-                self._pending[uid] = (fut, payload, meta)
-            else:  # sync RPC servicer (same private-key filter as submit)
-                kw = {k: v for k, v in meta.items()
-                      if not k.startswith("_")}
+                self._pending[uid] = (fut, env)
+            else:  # sync RPC servicer (same public-meta kwargs as submit)
                 try:
-                    fut.set_result(self.servicer.handle(payload, **kw))
-                    self.endpoint.bump("completed")
-                    self._observe(meta)
+                    fut.set_result(self.servicer.handle(env.payload, **kw))
+                    self.endpoint.bump("completed", tenant=env.tenant)
+                    self._observe(env)
                 except BaseException as e:  # noqa: BLE001
                     fut.set_error(e)
-                    self.endpoint.bump("errors")
+                    self.endpoint.bump("errors", tenant=env.tenant)
         return moved
 
-    def _observe(self, meta):
-        t0 = meta.get("_t0")
-        if t0 is not None:
-            self.endpoint.observe_latency(time.perf_counter() - t0)
+    def _observe(self, env: InferenceRequest):
+        if env.submitted_at is not None:
+            self.endpoint.observe_latency(
+                time.perf_counter() - env.submitted_at,
+                qos_class=env.priority)
 
     def _resolve(self, uid, result):
         entry = self._pending.pop(uid, None)
         if entry is None:
             return
-        fut, payload, meta = entry
+        fut, env = entry
         if isinstance(result, dict):
             self._observe_phases(result)
-            if result.get("_handoff") is not None \
+            if result.get("handoff_export") is not None \
                     and self.on_handoff is not None:
                 # prefill leg done: this replica's work is complete (count
                 # it) but the REQUEST is not — divert to the handoff hook,
                 # which dispatches the decode leg and resolves the caller's
                 # future when that leg finishes
-                self.endpoint.bump("completed")
-                self._observe(meta)
+                self.endpoint.bump("completed", tenant=env.tenant)
+                self._observe(env)
                 try:
-                    self.on_handoff(fut, result, meta)
+                    self.on_handoff(fut, result, env)
                 except BaseException as e:  # noqa: BLE001
                     fut.set_error(e)
-                    self.endpoint.bump("errors")
+                    self.endpoint.bump("errors", tenant=env.tenant)
                 return
         fut.set_result(result)
-        self.endpoint.bump("completed")
-        self._observe(meta)
+        self.endpoint.bump("completed", tenant=env.tenant)
+        self._observe(env)
 
     def _observe_phases(self, result: dict):
         """Feed the endpoint's per-phase latency windows from a result
@@ -547,6 +595,11 @@ class ReplicaSet:
         self._retired_agg = {k: 0 for k in _STAT_KEYS}
         self._retired_agg_groups: dict = {}  # group -> same shape, so the
         #                                      per_group stats survive folds
+        self._retired_agg_tenants: dict = {}  # tenant -> {requests,
+        #                     completed, errors}: folded endpoints'
+        #                     tenant_stats, so per_tenant survives folds
+        self._tenant_denied: dict = {}  # tenant -> request admissions the
+        #                     router's token bucket refused (pre-placement)
         self._scaling = False  # an async autoscale grow/shrink in flight
         self._scale_lock = threading.Lock()  # serializes scale_to callers
         self._gen = 0  # bumped on every membership change so recurring
@@ -651,40 +704,46 @@ class ReplicaSet:
                 return g
         return None
 
-    def _handoff(self, src_group: str, fut: _Future, result: dict, meta):
+    def _handoff(self, src_group: str, fut: _Future, result: dict,
+                 env: InferenceRequest):
         """Disaggregated-serving migration: a prefill replica finished a
         sequence's prompt (and produced its first token) — dispatch the
         exported paged-KV payload to the paired decode group and chain
         that leg's future into the one the original caller holds.
 
         Runs on the prefill replica's instance thread (from ``_resolve``);
-        route()/request() are thread-safe.  The original ``_t0`` rides
-        along so the decode endpoint's end-to-end window covers the WHOLE
-        request, and the importer's residency is gossiped to the router
+        route()/request() are thread-safe.  The decode leg's envelope
+        carries the ORIGINAL ``submitted_at`` (and tenant/priority) so
+        the decode endpoint's end-to-end window covers the WHOLE request,
+        and the importer's residency is gossiped to the router
         immediately — follow-up turns with the same prefix route warm to
         the new holder instead of the (now empty) prefill replica."""
-        payload = result.pop("_handoff", None)
+        payload = result.pop("handoff_export", None)
         dec = self._decode_pair(src_group)
         if payload is None or dec is None:
             # no decode pool configured: the prefill leg's result is final
             fut.set_result(result)
             return
-        req_payload = {"prompt": list(payload["prompt"]),
-                       "_import": payload}
+        req_payload = {"prompt": list(payload["prompt"])}
         router = self.manager.router
+        env2 = InferenceRequest(
+            payload=req_payload, model=dec, tenant=env.tenant,
+            priority=env.priority, deadline_s=env.deadline_s,
+            handoff=payload,
+            submitted_at=(env.submitted_at
+                          if env.submitted_at is not None
+                          else time.perf_counter()),
+            affinity=router.signature(req_payload))
         try:
             # affinity accounting stays off: the prefill route already
             # counted this request's outcome (same rule as reroutes)
-            ep = self.route(default_cost(req_payload), router,
-                            affinity_key=router.signature(req_payload),
-                            account_affinity=False, model=dec)
+            ep = self.route(env2, router, account_affinity=False)
         except KeyError as e:
             fut.set_error(RuntimeError(
                 f"service {self.name}: decode group {dec!r} has no live "
                 f"replicas for handoff ({e})"))
             return
-        f2 = ep.request(req_payload, _model=dec,
-                        _t0=meta.get("_t0", time.perf_counter()))
+        f2 = ep.request_env(env2)
         if getattr(router, "uses_residency", False):
             # proactive re-home: the exported blocks now live on the
             # importer — tell the router NOW instead of waiting for the
@@ -805,42 +864,74 @@ class ReplicaSet:
         return {g: counts[g] for g in self.model_groups}  # declaration order
 
     def request(self, payload, model: Optional[str] = None,
-                **meta) -> _Future:
+                tenant: Optional[str] = None,
+                priority: Optional[str] = None,
+                deadline_s: Optional[float] = None, **meta) -> _Future:
+        """Submit one request: wraps bare payloads into an
+        ``InferenceRequest`` (the normalization adapter — existing
+        callers keep working unchanged), admits it through the router's
+        per-tenant token bucket, routes it within its model group, and
+        enqueues the envelope on the chosen replica.  A denied admission
+        resolves the future with ``AdmissionDenied`` immediately — rate
+        limiting is backpressure to the CLIENT, never queued load."""
         router = self.manager.router
-        if model is None:
-            model = request_model(payload)
-        ep = self.route(default_cost(payload), router,
-                        affinity_key=router.signature(payload), model=model)
-        if model is not None:
-            # private meta (filtered from servicer kwargs) so a reroute
-            # after a retire re-routes within the SAME model group even
-            # when the payload itself carries no tag
-            meta.setdefault("_model", model)
-        return ep.request(payload, **meta)
+        env = InferenceRequest.wrap(payload, model=model, tenant=tenant,
+                                    priority=priority,
+                                    deadline_s=deadline_s, meta=meta)
+        cost = default_cost(env.payload)
+        if not router.admit(env, cost):
+            self.note_tenant_denied(env.tenant)
+            fut = _Future()
+            fut.set_error(AdmissionDenied(env.tenant))
+            return fut
+        ep = self.route(env, router, cost=cost)
+        return ep.request_env(env)
 
-    def route(self, cost: float, router: Router,
-              affinity_key: Optional[int] = None,
-              account_affinity: bool = True,
-              model: Optional[str] = None) -> ServiceEndpoint:
-        """Pick the replica endpoint for one request of estimated cost.
+    def note_tenant_denied(self, tenant: Optional[str]):
+        """Count one router-bucket admission denial against ``tenant``
+        (surfaced per tenant in ``stats()['per_tenant']``)."""
+        with self._lock:
+            self._tenant_denied[tenant] = \
+                self._tenant_denied.get(tenant, 0) + 1
 
-        ``affinity_key`` (``router.signature(payload)``) makes sticky
-        routers pin same-prefix requests to one replica; the outcome is
-        accounted on the chosen endpoint as ``prefix_hits``/``prefix_misses``
-        unless ``account_affinity`` is False (reroutes: the original route
-        already counted this request's outcome, counting the second hop too
-        would break hits+misses == keyed requests).
+    def tenant_usage(self) -> dict:
+        """Lightweight per-tenant accounting snapshot — same shape as
+        ``stats()['per_tenant']`` but without the full stats tick (no
+        gossip pull, no dead-replica reap)."""
+        with self._lock:
+            snaps = [{t: dict(ts) for t, ts in ep.tenant_stats.items()}
+                     for ep in self.endpoints + self._retired]
+            folded = {t: dict(v)
+                      for t, v in self._retired_agg_tenants.items()}
+            denied = dict(self._tenant_denied)
+        return _merge_tenant_stats(snaps, folded, denied)
 
-        ``model`` (see ``request_model``) narrows the candidates to ONE
-        model group's replicas before any affinity/least-loaded logic runs
-        — multi-model sets never route a request to a wrong-model replica.
-        Untagged requests go to the first declared group; unknown tags
-        raise ``KeyError`` (a routing error, not a silent misroute).
+    def route(self, env: InferenceRequest, router: Router,
+              cost: Optional[float] = None,
+              account_affinity: bool = True) -> ServiceEndpoint:
+        """Pick the replica endpoint for one envelope.
+
+        ``env.affinity`` (derived from the payload by the router when
+        unset) makes sticky routers pin same-prefix requests to one
+        replica; the outcome is accounted on the chosen endpoint as
+        ``prefix_hits``/``prefix_misses`` unless ``account_affinity`` is
+        False (reroutes: the original route already counted this
+        request's outcome, counting the second hop too would break
+        hits+misses == keyed requests).
+
+        ``env.model`` (see ``InferenceRequest.wrap``) narrows the
+        candidates to ONE model group's replicas before any
+        affinity/least-loaded logic runs — multi-model sets never route
+        a request to a wrong-model replica.  Untagged requests go to the
+        first declared group; unknown tags raise ``KeyError`` (a routing
+        error, not a silent misroute).
 
         Only READY replicas are candidates: a freshly spawned replica is
         in ``endpoints`` before its factory finishes, and routing to it
         would queue work nothing admits yet."""
-        gsel = self._resolve_group(model)
+        gsel = self._resolve_group(env.model)
+        if cost is None:
+            cost = default_cost(env.payload)
         with self._lock:
             pairs = [(ep, inst) for ep, inst
                      in zip(self.endpoints, self.instances)
@@ -862,10 +953,8 @@ class ReplicaSet:
             successor = self._successor
         if not eps:
             if successor is not None:  # name was re-launched; follow it
-                return successor.route(cost, router,
-                                       affinity_key=affinity_key,
-                                       account_affinity=account_affinity,
-                                       model=model)
+                return successor.route(env, router, cost=cost,
+                                       account_affinity=account_affinity)
             raise KeyError(f"service {self.name} has no live replicas"
                            + (f" for model {gsel!r}" if self.multi_model
                               else ""))
@@ -900,11 +989,12 @@ class ReplicaSet:
         # and two legs would evict each other's assignment every request.
         gaff = (self._affinity_alias(gsel)
                 if getattr(router, "uses_residency", False) else gsel)
-        idx = router.pick(cost, n_instances=len(eps), group=group,
-                          queue_depths=[ep.depth() for ep in eps],
-                          affinity_key=affinity_key, info=info,
-                          members=members,
-                          affinity_group=(self.name, self._uid, gaff))
+        ctx = RouteContext(n_instances=len(eps), group=group,
+                           queue_depths=[ep.depth() for ep in eps],
+                           members=members,
+                           affinity_group=(self.name, self._uid, gaff),
+                           info=info)
+        idx = router.route(env, ctx, cost=cost)
         eps[idx].bump("cost", cost)
         if account_affinity:
             affinity = info.get("affinity")
@@ -934,6 +1024,12 @@ class ReplicaSet:
             folded = dict(self._retired_agg)
             folded_groups = {g: dict(v)
                              for g, v in self._retired_agg_groups.items()}
+            tenant_snaps = [{t: dict(ts)
+                             for t, ts in ep.tenant_stats.items()}
+                            for ep in eps + self._retired]
+            folded_tenants = {t: dict(v)
+                              for t, v in self._retired_agg_tenants.items()}
+            tenant_denied = dict(self._tenant_denied)
             dead = self._dead_count
             denied = self._admission_denied
         retired = [p for _, p in retired_pairs]
@@ -944,6 +1040,7 @@ class ReplicaSet:
         block_tel: dict = {}  # replica_idx -> telemetry dict
         spec_tel: dict = {}  # replica_idx -> spec-decode session counters
         handoff_tel: dict = {}  # replica_idx -> disagg handoff counters
+        qos_tel: dict = {}  # replica_idx -> WFQ/preemption counters
         for ep, inst in zip(eps, insts):
             if ep.retired:
                 continue
@@ -974,6 +1071,15 @@ class ReplicaSet:
                     hs = None
                 if hs:
                     handoff_tel[ep.replica_idx] = hs
+            qfn = getattr(getattr(inst, "servicer", None),
+                          "qos_stats", None)
+            if qfn is not None:
+                try:
+                    qs = qfn()
+                except Exception:
+                    qs = None
+                if qs:
+                    qos_tel[ep.replica_idx] = qs
         all_samples: list = []
         ep_samples: dict = {}  # replica_idx -> latency snapshot (reused by
         #                        the per-group aggregation below)
@@ -1009,6 +1115,23 @@ class ReplicaSet:
         p95 = percentile(all_samples, 0.95)
         agg["latency_p95_ms"] = None if p95 is None else p95 * 1e3
         agg["per_replica"] = per
+        # per-tenant accounting: live + retired + folded endpoint counters
+        # plus router-bucket denials — the QoS bench's conservation check
+        # (requests == completed + errors per tenant) reads THIS
+        agg["per_tenant"] = _merge_tenant_stats(tenant_snaps,
+                                                folded_tenants,
+                                                tenant_denied)
+        # WFQ/preemption counters summed over the qos-armed replicas (the
+        # QoS bench asserts preemptions == resumes off THIS); None when no
+        # replica has a scheduler armed
+        if qos_tel:
+            agg["qos"] = {k: sum(int(q.get(k, 0))
+                                 for q in qos_tel.values())
+                          for k in ("preempted", "engine_preemptions",
+                                    "engine_preempt_resumes")}
+            agg["qos"]["reporting_replicas"] = len(qos_tel)
+        else:
+            agg["qos"] = None
         # per-model-group view: endpoints, request/hit accounting, latency
         # windows, and live ledger claims — the multi-model operator (and
         # the weighted-capacity rebalancer's bench validation) reads THIS
@@ -1086,7 +1209,8 @@ class ReplicaSet:
     def latency_p95(self, window_s: Optional[float] = None,
                     started_after: Optional[float] = None,
                     group: Optional[str] = None,
-                    phase: Optional[str] = None) -> Optional[float]:
+                    phase: Optional[str] = None,
+                    tenant_class: Optional[str] = None) -> Optional[float]:
         """p95 end-to-end latency (seconds) across live replicas, the SLO
         autoscaler's signal; optionally windowed, restricted to requests
         *started* after a given perf_counter instant, and/or to one model
@@ -1095,17 +1219,27 @@ class ReplicaSet:
         ``phase`` selects a per-phase window instead of end-to-end:
         ``"ttft"`` (time-to-first-token, a prefill-group's SLO) or
         ``"itl"`` (mean inter-token latency per request, a decode-group's
-        SLO)."""
+        SLO).  ``tenant_class`` restricts the end-to-end window to one
+        QoS priority class (``policy.qos_protected_class`` isolation
+        signal); returns None when no replica has samples for it."""
         if phase not in (None, "ttft", "itl"):
             raise ValueError(f"unknown latency phase {phase!r} "
                              f"(expected None, 'ttft' or 'itl')")
+        if tenant_class is not None and phase is not None:
+            raise ValueError("tenant_class and phase are exclusive "
+                             "(per-class windows are end-to-end only)")
         with self._lock:
             eps = [ep for ep in self.endpoints if not ep.retired
                    and (group is None or ep.group == group)]
         samples: list = []
         for ep in eps:
-            win = (ep.latency if phase is None
-                   else ep.ttft if phase == "ttft" else ep.itl)
+            if tenant_class is not None:
+                win = ep.class_latency.get(tenant_class)
+                if win is None:
+                    continue
+            else:
+                win = (ep.latency if phase is None
+                       else ep.ttft if phase == "ttft" else ep.itl)
             samples.extend(win.samples(window_s, started_after))
         return percentile(samples, 0.95)
 
@@ -1277,8 +1411,8 @@ class ReplicaSet:
                                    residency_listener=self._on_engine_evict,
                                    factory=self._group_factory(gname))
             if self.group_role(gname) == "prefill":
-                inst.on_handoff = (lambda fut, result, meta, _g=gname:
-                                   self._handoff(_g, fut, result, meta))
+                inst.on_handoff = (lambda fut, result, env, _g=gname:
+                                   self._handoff(_g, fut, result, env))
             self.endpoints.append(ep)
             self.instances.append(inst)
             self._gen += 1
@@ -1350,8 +1484,8 @@ class ReplicaSet:
                                        dead.endpoint.group))
             if self.group_role(dead.endpoint.group) == "prefill":
                 inst.on_handoff = (
-                    lambda fut, result, meta, _g=dead.endpoint.group:
-                    self._handoff(_g, fut, result, meta))
+                    lambda fut, result, env, _g=dead.endpoint.group:
+                    self._handoff(_g, fut, result, env))
             self.instances[idx] = inst
             self._gen += 1  # recovered replica starts with fresh history
         inst.start()
@@ -1555,37 +1689,34 @@ class ReplicaSet:
         """Move requests still queued on a retired endpoint to live ones."""
         while True:
             try:
-                payload, meta, fut = ep.requests.get_nowait()
+                env, fut = ep.requests.get_nowait()
             except queue.Empty:
                 return
+            cost = default_cost(env.payload)
             # the request is leaving this endpoint: un-count it so the
             # retired replica's folded stats don't double-count it with
             # the target's own increment (route() re-adds cost there)
-            ep.bump("requests", -1)
-            ep.bump("cost", -default_cost(payload))
+            ep.bump("requests", -1, tenant=env.tenant)
+            ep.bump("cost", -cost)
             router = self.manager.router
             try:
                 # sticky keys still steer the reroute, but the affinity
                 # outcome is NOT re-counted: the original route() already
-                # accounted this request.  The model tag (stashed in meta
-                # by request(), or carried by the payload) keeps the
+                # accounted this request.  ``env.model`` keeps the
                 # reroute inside the SAME model group.
-                target = self.route(default_cost(payload), router,
-                                    affinity_key=router.signature(payload),
-                                    account_affinity=False,
-                                    model=(meta.get("_model")
-                                           or request_model(payload)))
+                target = self.route(env, router, cost=cost,
+                                    account_affinity=False)
             except KeyError:
                 # keep the request accounted where it died so stats()
                 # still balances (requests = completed + errors + depth)
-                ep.bump("requests", 1)
-                ep.bump("cost", default_cost(payload))
-                ep.bump("errors")
+                ep.bump("requests", 1, tenant=env.tenant)
+                ep.bump("cost", cost)
+                ep.bump("errors", tenant=env.tenant)
                 fut.set_error(RuntimeError(
                     f"service {self.name} scaled to zero"))
                 continue
-            target.bump("requests")
-            target.requests.put((payload, meta, fut))
+            target.bump("requests", tenant=env.tenant)
+            target.requests.put((env, fut))
             # same post-put re-check as request(): the target may have
             # been retired between route() and the put
             if target.retired and target.on_retired is not None:
@@ -1639,6 +1770,11 @@ class ReplicaSet:
                 for k in self._retired_agg:
                     self._retired_agg[k] += old.stats[k]
                     gagg[k] += old.stats[k]
+                for t, ts in old.tenant_stats.items():
+                    tagg = self._retired_agg_tenants.setdefault(
+                        t, {"requests": 0, "completed": 0, "errors": 0})
+                    for k in tagg:
+                        tagg[k] += ts.get(k, 0)
         with self._gossip_lock:  # after any in-flight gossip pull, so a
             # pull that snapshotted these endpoints can't resurrect them
             for ep in endpoints:
@@ -1726,11 +1862,11 @@ class ReplicaSet:
         err = RuntimeError(f"service {self.name} stopped")
         while True:
             try:
-                _, _, fut = ep.requests.get_nowait()
+                env, fut = ep.requests.get_nowait()
             except queue.Empty:
                 return
             fut.set_error(err)
-            ep.bump("errors")
+            ep.bump("errors", tenant=env.tenant)
 
     def _drain_into(self, other: "ReplicaSet", join_timeout: float = 5.0):
         """Retire this whole set, moving queued work to ``other`` — used

@@ -9,6 +9,7 @@ from repro.core.service import ModelGroup
 from repro.models.config import ModelConfig
 from .engine import (InferenceEngine, SpecDecodeSession,
                      make_engine_from_scratch)
+from .qos import WFQScheduler
 
 
 def _resolve_paged(cfg: ModelConfig, engine_kw: dict) -> dict:
@@ -82,23 +83,34 @@ class LLMServicer:
     * ``"prefill"`` — the replica ONLY chunk-prefills (no decode
       interleave: ``engine.step_prefill_only``); the moment a sequence's
       first token is out it is exported (``engine.export_sequence``) and
-      the step result carries the serialized KV under ``"_handoff"`` for
-      the replica set to re-dispatch to the paired decode group.
-    * ``"decode"`` — ``submit`` accepts payloads carrying ``"_import"``
-      (an exported sequence) and adopts the KV via
+      the step result carries the serialized KV under ``"handoff_export"``
+      for the replica set to re-dispatch to the paired decode group.
+    * ``"decode"`` — ``submit`` accepts envelopes whose ``handoff``
+      field carries an exported sequence and adopts the KV via
       ``engine.import_sequence``; a full pool falls back to recomputing
       the prompt here (counted in ``handoff_stats()``), never to
       failure.
 
     Both disagg phases require the paged engine (the handoff moves
     physical KV blocks) and are incompatible with ``draft_group``.
+
+    ``qos=True`` (or an explicit ``qos_class_weights`` dict) arms a
+    per-replica ``WFQScheduler``: admission is ordered by weighted-fair
+    virtual finish times over (tenant, priority-class) flows, and — on
+    paged engines with ``qos_preempt`` — a blocked heavier-class head
+    preempts lighter decoding sequences (KV retires to residency and
+    resumes token-identically).  Tenant/class identity arrives on the
+    ``InferenceRequest`` envelope (``accepts_envelope``).
     """
+
+    accepts_envelope = True  # submit() takes the envelope keyword
 
     def __init__(self, cfg: ModelConfig, params=None, *, seed: int = 0,
                  draft_group=None, spec_k: int = 4,
                  spec_min_acceptance: float = 0.0,
                  spec_probe_proposals: int = 64, phase: str = "serve",
-                 **engine_kw):
+                 qos: bool = False, qos_class_weights=None,
+                 qos_preempt: bool = True, **engine_kw):
         if phase not in ("serve", "prefill", "decode"):
             raise ValueError(
                 f"phase must be 'serve', 'prefill' or 'decode', "
@@ -133,34 +145,47 @@ class LLMServicer:
         self._imported: set = set()
         self._recomputed: set = set()
         self._stream_leftovers: list = []
+        self._qos = None
+        if qos or qos_class_weights is not None:
+            self._qos = WFQScheduler(class_weights=qos_class_weights,
+                                     preempt=qos_preempt)
 
-    def submit(self, payload, **meta) -> int:
-        handoff = payload.get("_import")
+    def submit(self, payload, *, envelope=None, **meta) -> int:
+        tenant = envelope.tenant if envelope is not None else None
+        qos_class = envelope.priority if envelope is not None else "normal"
+        handoff = envelope.handoff if envelope is not None else None
         if handoff is not None and self.phase != "prefill":
             uid = self.engine.import_sequence(handoff)
             if uid is not None:
                 self._handoff_imports += 1
                 self._imported.add(uid)
-                return uid
-            # decode pool full (or incompatible blocks): recompute the
-            # prompt here instead of failing the request — the original
-            # submit stamp is preserved so end-to-end latency still
-            # spans the whole migration
-            self._handoff_recomputes += 1
-            uid = self.engine.submit(
-                handoff["prompt"],
-                max_new_tokens=handoff["max_new_tokens"],
-                temperature=handoff["temperature"],
-                eos_id=handoff["eos_id"])
-            self.engine.queue[-1].submitted_at = handoff["submitted_at"]
-            self._recomputed.add(uid)
-            return uid
-        return self._driver.submit(
-            payload["prompt"],
-            max_new_tokens=payload.get("max_new_tokens", 16),
-            temperature=payload.get("temperature", 0.0),
-            eos_id=payload.get("eos_id"),
-        )
+            else:
+                # decode pool full (or incompatible blocks): recompute
+                # the prompt here instead of failing the request — the
+                # original submit stamp is preserved so end-to-end
+                # latency still spans the whole migration
+                self._handoff_recomputes += 1
+                uid = self.engine.submit(
+                    handoff["prompt"],
+                    max_new_tokens=handoff["max_new_tokens"],
+                    temperature=handoff["temperature"],
+                    eos_id=handoff["eos_id"],
+                    tenant=tenant, qos_class=qos_class)
+                self.engine.queue[-1].submitted_at = handoff["submitted_at"]
+                self._recomputed.add(uid)
+        else:
+            uid = self._driver.submit(
+                payload["prompt"],
+                max_new_tokens=payload.get("max_new_tokens", 16),
+                temperature=payload.get("temperature", 0.0),
+                eos_id=payload.get("eos_id"),
+                tenant=tenant, qos_class=qos_class,
+            )
+        if self._qos is not None:
+            req = self._find_request(uid)
+            if req is not None:
+                self._qos.on_submit(req)
+        return uid
 
     def _result(self, req) -> dict:
         itl = None
@@ -199,8 +224,12 @@ class LLMServicer:
             return out
         if self.phase == "prefill":
             return out + self._step_prefill()
+        if self._qos is not None:
+            self._qos.schedule(self.engine)
         self._driver.step()
         for req in self._driver.collect_finished():
+            if self._qos is not None:
+                self._qos.on_finish(req.uid)
             out.append((req.uid, self._result(req)))
         return out
 
@@ -208,19 +237,25 @@ class LLMServicer:
         """Prefill-role step: chunk-prefill only, then export every
         sequence whose first token is out.  The handoff result keeps the
         normal result shape (so a crash-replay or a drain still resolves
-        the future sanely) plus the serialized KV under ``"_handoff"``
-        for the replica set's re-dispatch hook."""
+        the future sanely) plus the serialized KV under
+        ``"handoff_export"`` for the replica set's re-dispatch hook."""
         eng = self.engine
+        if self._qos is not None:
+            self._qos.schedule(eng)
         eng.step_prefill_only()
         out = []
-        for req in eng.collect_finished():  # finished AT prefill (e.g.
-            out.append((req.uid, self._result(req)))  # max_new_tokens=1)
+        for req in eng.collect_finished():  # finished AT prefill
+            if self._qos is not None:  # (e.g. max_new_tokens=1)
+                self._qos.on_finish(req.uid)
+            out.append((req.uid, self._result(req)))
         for uid in eng.exportable():
             pay = eng.export_sequence(uid)
             self._handoff_exports += 1
+            if self._qos is not None:
+                self._qos.on_finish(uid)
             now = time.perf_counter()
             out.append((uid, {
-                "_handoff": pay,
+                "handoff_export": pay,
                 "tokens": list(pay["output"]),
                 "n_prompt": len(pay["prompt"]),
                 "ttft_s": (pay["first_token_at"] - pay["submitted_at"]
@@ -328,6 +363,17 @@ class LLMServicer:
         copies, evictions) the replica set aggregates per group and
         gossips to headroom-aware routers; None for slot-pool engines."""
         return self.engine.block_telemetry()
+
+    def qos_stats(self):
+        """WFQ scheduler counters (scheduler-initiated preemptions, the
+        virtual clock, live flow count) plus the engine's preemption /
+        resume totals; None when QoS is not armed on this replica."""
+        if self._qos is None:
+            return None
+        out = self._qos.stats()
+        out["engine_preemptions"] = self.engine.stats.preemptions
+        out["engine_preempt_resumes"] = self.engine.stats.preempt_resumes
+        return out
 
     def handoff_stats(self):
         """Disaggregation counters (exports on prefill replicas, imports

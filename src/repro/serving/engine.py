@@ -111,6 +111,10 @@ class Request:
     max_new_tokens: int = 16
     temperature: float = 0.0
     eos_id: Optional[int] = None
+    # multi-tenant QoS identity (accounting + weighted-fair queueing +
+    # preemption order; see repro.serving.qos)
+    tenant: Optional[str] = None
+    qos_class: str = "normal"
     # filled by the engine
     output: list = dataclasses.field(default_factory=list)
     submitted_at: float = 0.0
@@ -170,6 +174,10 @@ class EngineStats:
     peak_running: int = 0  # high-water concurrent admitted sequences
     shared_block_peak: int = 0  # max physical blocks saved by sharing
     evicted_residencies: int = 0  # resident sequences dropped for space
+    preemptions: int = 0  # decoding sequences requeued by the WFQ
+    #                       scheduler (KV retired to residency)
+    preempt_resumes: int = 0  # preempted sequences re-admitted (resumed
+    #                           from residency or re-prefilled)
     # live gauges (refreshed every paged step, not cumulative): the
     # pool's unallocated blocks and the admission-reserved blocks not
     # yet allocated — the "why is admission stalling" signal operators
@@ -328,10 +336,11 @@ class InferenceEngine:
     # Public API
     # ------------------------------------------------------------------
     def submit(self, prompt, *, max_new_tokens=16, temperature=0.0,
-               eos_id=None) -> int:
+               eos_id=None, tenant=None, qos_class="normal") -> int:
         req = Request(uid=next(self._uid), prompt=list(prompt),
                       max_new_tokens=max_new_tokens, temperature=temperature,
-                      eos_id=eos_id, submitted_at=time.perf_counter())
+                      eos_id=eos_id, submitted_at=time.perf_counter(),
+                      tenant=tenant, qos_class=qos_class or "normal")
         self.queue.append(req)
         return req.uid
 
@@ -387,6 +396,8 @@ class InferenceEngine:
             "shared_blocks": self.pool.block_savings(),
             "cow_copies": self.stats.cow_copies,
             "evicted_residencies": self.stats.evicted_residencies,
+            "preemptions": self.stats.preemptions,
+            "preempt_resumes": self.stats.preempt_resumes,
         }
 
     def step_prefill_only(self) -> list:
@@ -779,6 +790,11 @@ class InferenceEngine:
     def _admit_paged(self):
         while self.queue and len(self.running) < self.max_running:
             req = self.queue[0]
+            if req.output:  # preempted mid-generation: dedicated resume
+                if not self._readmit_preempted(req):
+                    break
+                self.queue.pop(0)
+                continue
             if self._prefix_reuse and self._try_resume_paged(req):
                 self.queue.pop(0)
                 continue
@@ -843,6 +859,97 @@ class InferenceEngine:
         if d < ent.length and d < m:
             self.stats.prefix_partial_hits += 1
         self.stats.prefix_cached_tokens += covered
+        return True
+
+    def preempt_sequence(self, uid: int) -> bool:
+        """Preempt a DECODING sequence: retire its paged KV to a residency
+        entry (block references move, exactly like finish-time retirement)
+        and push the request back onto the queue, where the WFQ scheduler
+        re-orders it by virtual finish time.  Resuming is cheap — the
+        readmit path forks the residency back (usually the sequence's own,
+        still warm) and catches up from the last covered position, so the
+        resumed transcript is token-identical to uninterrupted decode.
+
+        Only decode-phase sequences are preemptable: mid-prefill requests
+        hold no emitted tokens worth preserving (the scheduler simply
+        won't admit them), finished ones retire normally, and truncated
+        ones cannot retire to residency (their KV does not cover the
+        prompt).  Returns False when ``uid`` is not preemptable."""
+        if not self.paged:
+            return False
+        req = self.running.get(uid)
+        if (req is None or req.done or req.pending_tokens
+                or not req.output or req.truncated or not req.table):
+            return False
+        del self.running[uid]
+        if req in self._prefill_order:
+            self._prefill_order.remove(req)
+        self._reserved -= req.reserve_left
+        req.reserve_left = 0
+        if self._prefix_reuse:
+            seq = tuple(req.prompt) + tuple(req.output)
+            res_id = next(self._res_counter)
+            self._residency[res_id] = _Residency(tuple(req.table), len(seq))
+            for b in req.table:
+                self._res_holds[b] = self._res_holds.get(b, 0) + 1
+            self._prefix_index.insert(seq, res_id)
+        else:
+            for b in req.table:
+                self.pool.alloc.free(b)
+        req.table = []
+        req.pos = 0
+        req.last_token = None
+        self.queue.append(req)
+        self.stats.preemptions += 1
+        self.stats.free_blocks = self.pool.n_free
+        self.stats.reserved_blocks = self._reserved
+        return True
+
+    def _readmit_preempted(self, req: Request) -> bool:
+        """Re-admit a preempted request: the catch-up 'prompt' is the full
+        transcript so far (prompt + emitted output, ending with the last
+        emitted token).  The deepest resident prefix — normally the
+        sequence's own retirement, unless eviction claimed it — is forked
+        back and only the tail is re-fed; the catch-up chunk's final
+        logits row then produces exactly the token uninterrupted decode
+        would have produced next (greedy), so preemption is invisible in
+        the transcript."""
+        seq = list(req.prompt) + list(req.output)
+        L = len(seq)
+        remaining = req.max_new_tokens - len(req.output)
+        bs = self.block_size
+        best = None
+        if self._prefix_reuse:
+            for res_id, d in self._prefix_index.match_lengths(seq).items():
+                ent = self._residency.get(res_id)
+                if ent is None:
+                    continue
+                covered = min(d, ent.length - 1, L - 1)
+                if covered >= bs and (best is None or covered > best[0]):
+                    best = (covered, res_id, ent)
+        covered, shared, pinned = 0, (), 0
+        if best is not None:
+            covered, res_id, ent = best
+            shared = ent.blocks[:-(-covered // bs)]
+            alloc = self.pool.alloc
+            pinned = sum(1 for b in set(shared)
+                         if self._res_holds.get(b, 0) > 0
+                         and alloc.refcount(b) == self._res_holds[b])
+        need = self._blocks_needed(L + remaining, covered)
+        if not self._reserve(need, pinned=pinned):
+            return False
+        for b in shared:
+            self.pool.alloc.fork(b)
+        if best is not None:
+            self._residency.move_to_end(res_id)
+            self.stats.prefix_cached_tokens += covered
+        req.table = list(shared)
+        req.pos = covered
+        req.pending_tokens = list(seq[covered:])
+        req.reserve_left = need
+        self.running[req.uid] = req
+        self._prefill_order.append(req)
+        self.stats.preempt_resumes += 1
         return True
 
     def _alloc_block(self, req: Request) -> int:
@@ -960,7 +1067,11 @@ class InferenceEngine:
                     tok = int(jnp.argmax(logits_last))
                 req.output.append(tok)
                 req.last_token = tok
-                req.first_token_at = time.perf_counter()
+                if req.first_token_at is None:
+                    # preempted-and-resumed sequences re-run this path
+                    # (their catch-up "prompt" ends mid-generation); TTFT
+                    # must keep the ORIGINAL first-token stamp
+                    req.first_token_at = time.perf_counter()
                 self._check_done(req)
 
     def _decode_step_paged(self) -> list:
@@ -1139,7 +1250,7 @@ class SpecDecodeSession:
         }
 
     def submit(self, prompt, *, max_new_tokens=16, temperature=0.0,
-               eos_id=None) -> int:
+               eos_id=None, tenant=None, qos_class="normal") -> int:
         if temperature and temperature > 0:
             raise ValueError(
                 "SpecDecodeSession serves greedy (temperature=0) requests "
@@ -1165,13 +1276,15 @@ class SpecDecodeSession:
             # _pair_ready, which a disabled session never runs
             return self.target.submit(prompt,
                                       max_new_tokens=max_new_tokens,
-                                      eos_id=eos_id)
+                                      eos_id=eos_id, tenant=tenant,
+                                      qos_class=qos_class)
         # inflate the target budget so admission (paged: the block
         # reservation; both: _check_done) covers the speculative
         # overshoot; restored to the real budget when the pair activates
         uid = self.target.submit(prompt,
                                  max_new_tokens=max_new_tokens + self.k + 1,
-                                 eos_id=eos_id)
+                                 eos_id=eos_id, tenant=tenant,
+                                 qos_class=qos_class)
         treq = self.target.queue[-1]
         dreq = None
         if self.spec_enabled:

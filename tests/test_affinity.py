@@ -7,8 +7,9 @@ import time
 
 import pytest
 
-from repro.core import (ExecutionPolicy, ResourceDescription, Rhapsody,
-                        ServiceDescription, TaskDescription, TaskKind)
+from repro.core import (ExecutionPolicy, InferenceRequest,
+                        ResourceDescription, Rhapsody, ServiceDescription,
+                        TaskDescription, TaskKind)
 
 
 class Echo:
@@ -113,14 +114,14 @@ def test_spill_rehomes_session_under_load():
         rs = rh.add_service(ServiceDescription(name="svc", factory=Gated,
                                                replicas=2))
         key_payload = {"prompt": [5] * 40, "block": True}
-        home = rs.route(40.0, rh.router,
-                        affinity_key=rh.router.signature(key_payload))
+        home = rs.route(InferenceRequest(payload=key_payload), rh.router,
+                        cost=40.0)
         # pile blocked requests onto the sticky home
         futs = [home.request(dict(key_payload)) for _ in range(6)]
         for f in futs:  # depth builds: 6 outstanding on home, 0 elsewhere
             assert not f.done()
-        spilled = rs.route(40.0, rh.router,
-                           affinity_key=rh.router.signature(key_payload))
+        spilled = rs.route(InferenceRequest(payload=key_payload), rh.router,
+                           cost=40.0)
         assert spilled is not home
         GATE.set()
         for f in futs:
@@ -145,8 +146,8 @@ def test_assignments_carry_across_autoscale_membership_change(routing):
                     for s in range(6)]
 
         def route_home(p):
-            return rs.route(40.0, rh.router,
-                            affinity_key=rh.router.signature(p)).replica_idx
+            return rs.route(InferenceRequest(payload=p), rh.router,
+                            cost=40.0).replica_idx
 
         home = {s: route_home(p) for s, p in enumerate(payloads)}
         assert set(home.values()) == {0, 1, 2}  # first contacts spread
@@ -292,8 +293,8 @@ def test_degraded_replica_does_not_strand_sessions():
         rs = rh.add_service(ServiceDescription(name="svc", factory=DiesOnBoom,
                                                replicas=2))
         payload = {"prompt": [4] * 40}
-        home = rs.route(40.0, rh.router,
-                        affinity_key=rh.router.signature(payload))
+        home = rs.route(InferenceRequest(payload=payload), rh.router,
+                        cost=40.0)
         with pytest.raises((SystemError, RuntimeError)):
             home.request({"prompt": [4] * 40, "boom": True}).result(10.0)
         deadline = time.perf_counter() + 5

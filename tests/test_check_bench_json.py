@@ -11,7 +11,8 @@ import pytest
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 from benchmarks.check_bench_json import (CheckFailed, check_affinity,  # noqa: E402
                                          check_autoscale, check_multimodel,
-                                         check_paged, check_specdecode, main)
+                                         check_paged, check_qos,
+                                         check_specdecode, main)
 
 
 def affinity_rows():
@@ -104,12 +105,48 @@ def specdecode_rows():
     ]
 
 
+def qos_rows():
+    def tenant(req, done, err=0):
+        return {"requests": req, "completed": done, "errors": err}
+
+    base = {"scenario": "qos_campaign", "decision_errors": 0,
+            "agent_errors": [], "batch_tasks": 16, "batch_completed": 16,
+            "high_decisions": 48}
+    return [
+        {**base, "phase": "baseline_high", "qos": True,
+         "high_p95_s": 0.08, "low_p95_s": None, "low_decisions": 0,
+         "low_throughput_per_s": None,
+         "per_tenant": {"interactive": tenant(52, 52)},
+         "qos_counters": {"preempted": 0, "engine_preemptions": 0,
+                          "engine_preempt_resumes": 0,
+                          "reporting_replicas": 1},
+         "expected_tenants": ["interactive"]},
+        {**base, "phase": "no_qos", "qos": False,
+         "high_p95_s": 0.30, "low_p95_s": 0.25, "low_decisions": 48,
+         "low_throughput_per_s": 5.0,
+         "per_tenant": {"interactive": tenant(52, 52),
+                        "batch": tenant(56, 56)},
+         "qos_counters": None,
+         "expected_tenants": ["batch", "interactive"]},
+        {**base, "phase": "qos", "qos": True,
+         "high_p95_s": 0.09, "low_p95_s": 0.40, "low_decisions": 48,
+         "low_throughput_per_s": 4.6,
+         "per_tenant": {"interactive": tenant(52, 52),
+                        "batch": tenant(56, 56)},
+         "qos_counters": {"preempted": 3, "engine_preemptions": 3,
+                          "engine_preempt_resumes": 3,
+                          "reporting_replicas": 1},
+         "expected_tenants": ["batch", "interactive"]},
+    ]
+
+
 def test_good_rows_pass():
     check_affinity(affinity_rows())
     check_autoscale(autoscale_rows())
     check_multimodel(multimodel_rows())
     check_paged(paged_rows())
     check_specdecode(specdecode_rows())
+    check_qos(qos_rows())
 
 
 def test_affinity_catches_missing_policy_and_dead_hits():
@@ -242,6 +279,52 @@ def test_specdecode_catches_floor_and_fallback_failures():
     rows[1]["enabled"] = False  # high-acceptance session shut down
     with pytest.raises(CheckFailed):
         check_specdecode(rows)
+
+
+def test_qos_catches_blown_isolation_and_starvation():
+    rows = qos_rows()
+    rows[2]["high_p95_s"] = 2.0 * rows[0]["high_p95_s"]  # isolation lost
+    with pytest.raises(CheckFailed):
+        check_qos(rows)
+    rows = qos_rows()
+    rows[2]["low_throughput_per_s"] = 0.5 * rows[1]["low_throughput_per_s"]
+    with pytest.raises(CheckFailed):
+        check_qos(rows)  # fairness collapsed into starvation
+    rows = qos_rows()
+    rows[1]["low_decisions"] = 0  # contention never materialized
+    with pytest.raises(CheckFailed):
+        check_qos(rows)
+    with pytest.raises(CheckFailed):
+        check_qos(qos_rows()[:2])  # a phase is missing
+
+
+def test_qos_catches_tenant_bleed_and_lost_work():
+    rows = qos_rows()
+    # the unloaded baseline saw a tenant that never ran: cross-tenant
+    rows[0]["per_tenant"]["batch"] = {"requests": 1, "completed": 1,
+                                      "errors": 0}
+    with pytest.raises(CheckFailed):
+        check_qos(rows)
+    rows = qos_rows()
+    rows[2]["per_tenant"]["batch"]["completed"] -= 1  # ledger leak
+    with pytest.raises(CheckFailed):
+        check_qos(rows)
+    rows = qos_rows()
+    rows[2]["batch_completed"] = 15  # HPC leg starved off the ledger
+    with pytest.raises(CheckFailed):
+        check_qos(rows)
+    rows = qos_rows()
+    rows[2]["qos_counters"]["engine_preempt_resumes"] = 2  # lost a victim
+    with pytest.raises(CheckFailed):
+        check_qos(rows)
+    rows = qos_rows()
+    rows[1]["qos_counters"] = rows[2]["qos_counters"]  # QoS-off not off
+    with pytest.raises(CheckFailed):
+        check_qos(rows)
+    rows = qos_rows()
+    rows[2]["decision_errors"] = 1  # a decision was dropped
+    with pytest.raises(CheckFailed):
+        check_qos(rows)
 
 
 def test_main_exit_codes(tmp_path):

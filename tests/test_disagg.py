@@ -12,6 +12,7 @@ from repro.configs import get_config, get_smoke_config
 from repro.core import (ExecutionPolicy, ModelGroup, ResourceDescription,
                         ResourceRequirements, Rhapsody, ServiceDescription,
                         WeightedCapacityAutoscaler)
+from repro.core.request import InferenceRequest
 from repro.core.service import _Future
 from repro.models import get_model, nn
 from repro.serving.client import LLMServicer, llm_model_group
@@ -165,12 +166,15 @@ def test_servicer_recompute_fallback_token_identity(dense_lm):
             break
         for _uid, res in pre.step():
             assert res.get("role") == "prefill"
-            assert res.get("_handoff") is not None
-            handoffs.append(res["_handoff"])
+            assert res.get("handoff_export") is not None
+            handoffs.append(res["handoff_export"])
     assert pre.handoff_stats() == {"role": "prefill",
                                    "exports": len(prompts),
                                    "imports": 0, "recomputes": 0}
-    new_uids = [dec.submit({"prompt": list(pay["prompt"]), "_import": pay})
+    new_uids = [dec.submit({"prompt": list(pay["prompt"])},
+                           envelope=InferenceRequest(
+                               payload={"prompt": list(pay["prompt"])},
+                               handoff=pay))
                 for pay in handoffs]
     hs = dec.handoff_stats()
     assert hs["imports"] == 0 and hs["recomputes"] == len(prompts)

@@ -424,3 +424,168 @@ def test_block_allocator_cow_conservation(num_blocks, ops):
     while refs:
         alloc.free(refs.pop())
     assert alloc.n_free == alloc.capacity
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant QoS: WFQ scheduling + preemption never change tokens, and
+# per-tenant accounting conserves under mixed (including failing) load
+# ---------------------------------------------------------------------------
+
+_QOS_LM: dict = {}  # built once; @given can't take module fixtures
+
+
+def _qos_lm():
+    if not _QOS_LM:
+        import jax
+
+        from repro.configs import get_config
+        from repro.models import get_model, nn
+
+        cfg = get_config("rhapsody-demo").scaled(
+            n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+            d_ff=128, vocab=512)
+        api = get_model(cfg)
+        params, _ = nn.split(api.init(jax.random.PRNGKey(0), cfg))
+        _QOS_LM["v"] = (cfg, params)
+    return _QOS_LM["v"]
+
+
+_QOS_ENGINE_KW = dict(max_num_seqs=4, max_num_batched_tokens=64, max_len=64,
+                      block_size=8, num_blocks=32, prefill_buckets=(16, 32))
+
+_qos_specs = st.lists(
+    st.tuples(st.integers(1, 99),                     # prompt token value
+              st.integers(3, 12),                     # prompt length
+              st.sampled_from(["high", "normal", "low"])),
+    min_size=2, max_size=4)
+
+
+def _run_under_wfq(eng, sched, uids, *, force_preempt_after=None,
+                   max_forced=2):
+    """Drive an engine to completion under the WFQ scheduler, optionally
+    force-preempting up to ``max_forced`` low-class decodes once they have
+    emitted ``force_preempt_after`` tokens (on top of whatever pressure
+    preemption the scheduler does on its own)."""
+    done: dict = {}
+    forced: set = set()
+    for _ in range(2000):
+        sched.schedule(eng)
+        eng.step()
+        for r in eng.collect_finished():
+            done[r.uid] = r
+            sched.on_finish(r.uid)
+        if force_preempt_after is not None and len(forced) < max_forced:
+            for uid, req in list(eng.running.items()):
+                if (uid not in forced and req.qos_class == "low"
+                        and len(req.output) >= force_preempt_after
+                        and eng.preempt_sequence(uid)):
+                    forced.add(uid)
+                    break
+        if len(done) == len(uids):
+            return done
+    raise AssertionError("engine did not drain under WFQ")
+
+
+@settings(max_examples=5, deadline=None)
+@given(specs=_qos_specs, preempt_after=st.integers(1, 4))
+def test_wfq_preempt_resume_token_identity_paged(specs, preempt_after):
+    """Random two-class mixes on the paged engine, with the scheduler armed
+    AND extra forced preemptions at random decode depths: every transcript
+    is token-identical to an unscheduled reference run, and every
+    preemption is matched by a resume."""
+    from repro.serving.engine import InferenceEngine
+    from repro.serving.qos import WFQScheduler
+
+    cfg, params = _qos_lm()
+    kw = {**_QOS_ENGINE_KW, "paged": True}
+    ref = InferenceEngine(cfg, params, **kw)
+    ref_uids = [ref.submit([tok] * ln, max_new_tokens=6)
+                for tok, ln, _cls in specs]
+    ref_done = ref.run()
+
+    eng = InferenceEngine(cfg, params, **kw)
+    sched = WFQScheduler(preempt=True)
+    uids = []
+    for i, (tok, ln, cls) in enumerate(specs):
+        uid = eng.submit([tok] * ln, max_new_tokens=6,
+                         tenant=f"t{i}", qos_class=cls)
+        sched.on_submit(eng.queue[-1])
+        uids.append(uid)
+    done = _run_under_wfq(eng, sched, uids,
+                          force_preempt_after=preempt_after)
+
+    for ru, u in zip(ref_uids, uids):
+        assert done[u].output == ref_done[ru].output
+    assert eng.stats.preemptions == eng.stats.preempt_resumes
+    assert eng.stats.preemptions >= sched.preempted
+
+
+@settings(max_examples=5, deadline=None)
+@given(specs=_qos_specs)
+def test_wfq_reorder_token_identity_dense(specs):
+    """On the dense (slot-pool) engine WFQ can only reorder the queue —
+    no preemption — and reordering alone never changes any transcript."""
+    from repro.serving.engine import InferenceEngine
+    from repro.serving.qos import WFQScheduler
+
+    cfg, params = _qos_lm()
+    kw = {**_QOS_ENGINE_KW, "paged": False}
+    ref = InferenceEngine(cfg, params, **kw)
+    ref_uids = [ref.submit([tok] * ln, max_new_tokens=6)
+                for tok, ln, _cls in specs]
+    ref_done = ref.run()
+
+    eng = InferenceEngine(cfg, params, **kw)
+    sched = WFQScheduler(preempt=True)  # preempt flag is a no-op unpaged
+    uids = []
+    for i, (tok, ln, cls) in enumerate(specs):
+        uid = eng.submit([tok] * ln, max_new_tokens=6,
+                         tenant=f"t{i}", qos_class=cls)
+        sched.on_submit(eng.queue[-1])
+        uids.append(uid)
+    done = _run_under_wfq(eng, sched, uids)
+
+    for ru, u in zip(ref_uids, uids):
+        assert done[u].output == ref_done[ru].output
+    assert eng.stats.preemptions == 0
+
+
+@settings(max_examples=5, deadline=None)
+@given(load=st.lists(st.tuples(st.sampled_from(["acme", "bulk"]),
+                               st.sampled_from(["high", "low"]),
+                               st.booleans()),          # request fails?
+                     min_size=1, max_size=16))
+def test_per_tenant_accounting_conserves_under_mixed_load(load):
+    """Per-tenant ``requests == completed + errors`` holds for every
+    tenant under a random two-class mix where any request may fail."""
+    from repro.core import (ExecutionPolicy, ResourceDescription, Rhapsody,
+                            ServiceDescription)
+
+    class Flaky:
+        def handle(self, payload):
+            if payload.get("boom"):
+                raise RuntimeError("boom")
+            return "ok"
+
+    rh = Rhapsody(ResourceDescription(nodes=1, cores_per_node=8),
+                  policy=ExecutionPolicy(routing="round_robin"), n_workers=2)
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=Flaky,
+                                               replicas=2))
+        futs = [rs.request({"prompt": [1], "boom": boom},
+                           tenant=tenant, priority=prio)
+                for tenant, prio, boom in load]
+        for f in futs:
+            try:
+                f.result(timeout=20)
+            except RuntimeError:
+                pass
+        pt = rs.stats()["per_tenant"]
+        for tenant in {t for t, _, _ in load}:
+            s = pt[tenant]
+            assert s["requests"] == s["completed"] + s["errors"]
+            assert s["requests"] == sum(1 for t, _, _ in load if t == tenant)
+            assert s["errors"] == sum(1 for t, _, b in load
+                                      if t == tenant and b)
+    finally:
+        rh.close()

@@ -1,0 +1,397 @@
+"""Multi-tenant QoS: the InferenceRequest envelope adapter, per-tenant
+token-bucket admission, weighted-fair queueing with decode preemption
+(token-identical resume), per-tenant/per-class service accounting, and the
+protected-class autoscaler signal."""
+import time
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core import (DEFAULT_CLASS_WEIGHTS, AdmissionDenied,
+                        ExecutionPolicy, InferenceRequest,
+                        ResourceDescription, Rhapsody, RouteContext,
+                        ServiceDescription)
+from repro.core.router import make_router, router_from_policy
+from repro.models import get_model, nn
+from repro.serving.engine import InferenceEngine
+from repro.serving.qos import WFQScheduler
+
+
+# ---------------------------------------------------------------------------
+# InferenceRequest.wrap: the one normalization adapter
+# ---------------------------------------------------------------------------
+
+
+def test_wrap_lifts_model_tag_and_keeps_it_in_payload():
+    env = InferenceRequest.wrap({"prompt": [1, 2], "model": "chat"})
+    assert env.model == "chat"
+    assert env.payload["model"] == "chat"  # single-model servicers saw it
+
+
+def test_wrap_lifts_qos_meta_keys_off_servicer_kwargs():
+    env = InferenceRequest.wrap({"prompt": [1]},
+                                meta={"tenant": "acme", "priority": "high",
+                                      "deadline_s": 1.5, "echo": True})
+    assert (env.tenant, env.priority, env.deadline_s) == ("acme", "high", 1.5)
+    assert env.servicer_kwargs() == {"echo": True}  # lifted keys are gone
+
+
+def test_wrap_explicit_kwargs_win_over_meta_and_payload():
+    env = InferenceRequest.wrap({"prompt": [1], "model": "a"},
+                                model="b", tenant="t2", priority="low",
+                                meta={"tenant": "t1", "priority": "high"})
+    assert env.model == "b"
+    assert (env.tenant, env.priority) == ("t2", "low")
+
+
+def test_wrap_existing_envelope_is_merged_not_rebuilt():
+    env = InferenceRequest(payload=[1, 2], tenant="a")
+    t0 = env.submitted_at
+    out = InferenceRequest.wrap(env, priority="high", meta={"k": 1})
+    assert out is env
+    assert out.submitted_at == t0  # latency stamp survives re-wrapping
+    assert out.priority == "high" and out.meta["k"] == 1
+
+
+def test_envelope_defaults_priority_and_stamps_submitted_at():
+    env = InferenceRequest(payload=[1])
+    assert env.priority == "normal"
+    assert env.submitted_at is not None
+    assert env.servicer_kwargs() == {}
+    env2 = InferenceRequest(payload=[1], meta={"_private": 1, "pub": 2})
+    assert env2.servicer_kwargs() == {"pub": 2}
+
+
+# ---------------------------------------------------------------------------
+# TenantThrottle: token-bucket admission at the router
+# ---------------------------------------------------------------------------
+
+
+def _env(tenant=None, cost_tokens=1):
+    return InferenceRequest(payload=[0] * cost_tokens, tenant=tenant)
+
+
+def test_unarmed_router_admits_everything():
+    r = make_router("round_robin")
+    assert r.admit(_env("anyone"), cost=1e9)
+    assert r.admission_denials() == {}
+
+
+def test_token_bucket_rate_limits_and_refills():
+    now = [0.0]
+    r = make_router("round_robin")
+    r.configure_tenants(rate=10.0, burst_s=1.0, clock=lambda: now[0])
+    # bucket depth = 10: ten unit-cost admits, then denial
+    assert all(r.admit(_env("t"), cost=1.0) for _ in range(10))
+    assert not r.admit(_env("t"), cost=1.0)
+    now[0] += 0.5  # refills 5 tokens
+    assert all(r.admit(_env("t"), cost=1.0) for _ in range(5))
+    assert not r.admit(_env("t"), cost=1.0)
+    assert r.admission_denials() == {"t": 2}
+
+
+def test_tenant_overrides_and_hard_off_switch():
+    now = [0.0]
+    r = make_router("round_robin")
+    r.configure_tenants(rate=None, rates={"slow": 1.0, "off": 0.0},
+                        burst_s=1.0, clock=lambda: now[0])
+    assert r.admit(_env("unlisted"), cost=1e6)  # default None: unlimited
+    assert r.admit(_env(None), cost=1e6)  # untenanted: never throttled
+    assert r.admit(_env("slow"), cost=1.0)
+    assert not r.admit(_env("slow"), cost=1.0)
+    assert not r.admit(_env("off"), cost=0.001)  # rate<=0 denies all
+    assert r.admission_denials() == {"slow": 1, "off": 1}
+
+
+def test_oversized_request_admits_at_full_bucket_not_never():
+    """cost > bucket depth is clamped: a single huge request drains the
+    full bucket instead of starving its tenant forever."""
+    now = [0.0]
+    r = make_router("round_robin")
+    r.configure_tenants(rate=10.0, burst_s=1.0, clock=lambda: now[0])
+    assert r.admit(_env("t"), cost=500.0)  # clamped to depth 10
+    assert not r.admit(_env("t"), cost=1.0)  # bucket drained
+    now[0] += 1.0
+    assert r.admit(_env("t"), cost=500.0)  # refilled: admits again
+
+
+def test_router_from_policy_arms_tenant_throttle():
+    pol = ExecutionPolicy(tenant_rate=5.0, tenant_burst_s=1.0,
+                          tenant_rates={"vip": None})
+    r = router_from_policy(pol)
+    assert r._throttle is not None
+    assert r._throttle.rate_for("anyone") == 5.0
+    assert r._throttle.rate_for("vip") is None
+    assert router_from_policy(ExecutionPolicy())._throttle is None
+
+
+# ---------------------------------------------------------------------------
+# WFQScheduler: virtual-finish ordering (stub engine)
+# ---------------------------------------------------------------------------
+
+
+class _Req:
+    def __init__(self, uid, qos_class, tenant="t", n=10):
+        self.uid = uid
+        self.qos_class = qos_class
+        self.tenant = tenant
+        self.prompt = [0] * n
+        self.max_new_tokens = 0
+        self.output = []
+        self.done = False
+        self.pending_tokens = []
+        self.truncated = False
+
+
+class _StubEngine:
+    paged = False
+
+    def __init__(self):
+        self.queue = []
+        self.running = {}
+
+
+def test_wfq_orders_heavier_classes_ahead_under_contention():
+    sched = WFQScheduler()
+    eng = _StubEngine()
+    reqs = [_Req(1, "low"), _Req(2, "high"), _Req(3, "normal"),
+            _Req(4, "high")]
+    for r in reqs:
+        eng.queue.append(r)
+        sched.on_submit(r)
+    sched.schedule(eng)
+    # equal cost 10 across weights 4/2/1: high finishes at 2.5, its
+    # SECOND request at 5.0 (ties normal's first, stable order holds),
+    # and both still beat low's first at 10.0
+    assert [r.uid for r in eng.queue] == [2, 3, 4, 1]
+
+
+def test_wfq_idle_flow_banks_no_credit():
+    """A flow that slept does not return with an ancient virtual clock:
+    its start time is pulled up to the global virtual time (the WFQ
+    start-time rule), so sleeping earns no retroactive share."""
+    sched = WFQScheduler()
+    eng = _StubEngine()
+    # the busy flow advances the global virtual clock
+    for uid in range(1, 8):
+        r = _Req(uid, "normal", tenant="busy", n=100)
+        eng.queue.append(r)
+        sched.on_submit(r)
+    for _ in range(7):  # each schedule() pass advances V to the head
+        sched.schedule(eng)
+        sched.on_finish(eng.queue.pop(0).uid)
+    v = sched.stats()["virtual_clock"]
+    assert v > 0
+    # a long-idle flow submits: its stamp starts AT the global clock,
+    # not at its own zero — cost/weight past V, not past 0
+    idle = _Req(100, "low", tenant="idle", n=10)
+    eng.queue.append(idle)
+    sched.on_submit(idle)
+    assert sched._finish[100] == pytest.approx(v + 10 / 1.0)
+
+
+def test_wfq_weights_fall_back_for_unknown_classes():
+    sched = WFQScheduler()
+    assert sched.weight_of("high") == DEFAULT_CLASS_WEIGHTS["high"]
+    assert sched.weight_of("no-such-class") == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Engine preemption: retire to residency, resume token-identically
+# ---------------------------------------------------------------------------
+
+ENGINE_KW = dict(max_num_seqs=4, max_num_batched_tokens=64, max_len=64,
+                 paged=True, block_size=8, num_blocks=32,
+                 prefill_buckets=(16, 32))
+
+
+@pytest.fixture(scope="module")
+def dense_lm():
+    cfg = get_config("rhapsody-demo").scaled(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=512)
+    api = get_model(cfg)
+    params, _ = nn.split(api.init(jax.random.PRNGKey(0), cfg))
+    return cfg, api, params
+
+
+def test_preempt_resume_token_identity(dense_lm):
+    cfg, api, params = dense_lm
+    prompts = [[5] * 12, [9] * 7]
+    ref = InferenceEngine(cfg, params, **ENGINE_KW)
+    ref_uids = [ref.submit(p, max_new_tokens=10) for p in prompts]
+    ref_done = ref.run()
+
+    eng = InferenceEngine(cfg, params, **ENGINE_KW)
+    uids = [eng.submit(p, max_new_tokens=10, tenant="a", qos_class="low")
+            for p in prompts]
+    # decode until the first request has emitted a few tokens, then
+    # preempt it mid-generation (KV retires to residency)
+    for _ in range(100):
+        eng.step()
+        eng.collect_finished()
+        req = eng.running.get(uids[0])
+        if req is not None and len(req.output) >= 3:
+            break
+    else:
+        pytest.fail("first request never reached mid-decode")
+    first_token_at = eng.running[uids[0]].first_token_at
+    assert eng.preempt_sequence(uids[0])
+    assert uids[0] not in eng.running
+    assert eng.stats.preemptions == 1
+    done = dict(ref_done)  # shape check below uses same keys
+    done = {}
+    for _ in range(2000):
+        if not eng.has_work():
+            break
+        eng.step()
+        for req in eng.collect_finished():
+            done[req.uid] = req
+    assert set(done) == set(uids)
+    assert eng.stats.preempt_resumes == 1
+    for uid, ruid in zip(uids, ref_uids):
+        assert done[uid].output == ref_done[ruid].output
+    # the original TTFT stamp survives the preempt/resume round trip
+    assert done[uids[0]].first_token_at == first_token_at
+
+
+def test_preempt_refuses_non_decode_phases(dense_lm):
+    cfg, api, params = dense_lm
+    eng = InferenceEngine(cfg, params, **ENGINE_KW)
+    uid = eng.submit([3] * 12, max_new_tokens=4)
+    assert not eng.preempt_sequence(uid)  # still queued, nothing to retire
+    done = eng.run()
+    assert not eng.preempt_sequence(uid)  # finished: nothing to preempt
+    assert done[uid].output
+
+
+def test_wfq_preempts_lighter_decode_for_blocked_high_head(dense_lm):
+    """The full QoS squeeze: low-class decodes hold the whole pool; a
+    high-class arrival cannot be admitted; the scheduler preempts the
+    lightest victim, the head admits, and every transcript stays
+    token-identical to an uncontended reference."""
+    cfg, api, params = dense_lm
+    kw = {**ENGINE_KW, "num_blocks": 7, "max_len": 32, "max_num_seqs": 2}
+    prompts = {"low1": [5] * 12, "low2": [7] * 12, "high": [9] * 12}
+    ref = InferenceEngine(cfg, params, **kw)
+    ref_uids = {k: ref.submit(p, max_new_tokens=8)
+                for k, p in prompts.items()}
+    ref_done = {}
+    for k in prompts:  # one at a time: no contention in the reference
+        while ref_uids[k] not in ref_done:
+            ref.step()
+            for r in ref.collect_finished():
+                ref_done[r.uid] = r
+
+    eng = InferenceEngine(cfg, params, **kw)
+    sched = WFQScheduler()
+    uids = {}
+    for k in ("low1", "low2"):
+        uids[k] = eng.submit(prompts[k], max_new_tokens=8,
+                             tenant="batch", qos_class="low")
+        sched.on_submit(next(r for r in eng.queue if r.uid == uids[k]))
+    # let the low requests occupy the pool and start decoding
+    for _ in range(100):
+        sched.schedule(eng)
+        eng.step()
+        if all(u in eng.running and eng.running[u].output
+               and not eng.running[u].pending_tokens
+               for u in uids.values()):
+            break
+    else:
+        pytest.fail("low-class requests never reached decode")
+    uids["high"] = eng.submit(prompts["high"], max_new_tokens=8,
+                              tenant="agent", qos_class="high")
+    sched.on_submit(next(r for r in eng.queue
+                         if r.uid == uids["high"]))
+    done = {}
+    for _ in range(2000):
+        if not eng.has_work():
+            break
+        sched.schedule(eng)
+        eng.step()
+        for r in eng.collect_finished():
+            done[r.uid] = r
+    assert sched.preempted >= 1
+    assert eng.stats.preemptions >= 1
+    assert eng.stats.preemptions == eng.stats.preempt_resumes
+    for k in prompts:
+        assert done[uids[k]].output == ref_done[ref_uids[k]].output, k
+
+
+# ---------------------------------------------------------------------------
+# Service layer: per-tenant accounting + admission denial end to end
+# ---------------------------------------------------------------------------
+
+
+class Echo:
+    def handle(self, payload):
+        time.sleep(0.001)
+        return ("ok", payload)
+
+
+def _rh(**policy_kw):
+    return Rhapsody(ResourceDescription(nodes=1, cores_per_node=8),
+                    policy=ExecutionPolicy(**policy_kw), n_workers=2)
+
+
+def test_per_tenant_stats_conservation():
+    rh = _rh(routing="round_robin")
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=Echo,
+                                               replicas=2))
+        futs = [rs.request({"prompt": [1] * 4}, tenant=t, priority=p)
+                for t, p in [("acme", "high")] * 3 + [("bulk", "low")] * 5
+                + [(None, None)] * 2]
+        for f in futs:
+            f.result(timeout=20)
+        stats = rs.stats()
+        pt = stats["per_tenant"]
+        assert pt["acme"] == {"requests": 3, "completed": 3, "errors": 0}
+        assert pt["bulk"] == {"requests": 5, "completed": 5, "errors": 0}
+        assert None not in pt  # untenanted traffic has no tenant row
+        assert stats["requests"] == 10  # ... but counts in the aggregate
+        # tenants also roll up onto the shared-ledger view
+        tu = rh.utilization()["default"]["tenants"]
+        assert tu["acme"]["completed"] == 3
+    finally:
+        rh.close()
+
+
+def test_admission_denied_surfaces_to_client_and_stats():
+    rh = _rh(routing="round_robin", tenant_rate=2.0, tenant_burst_s=1.0)
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=Echo,
+                                               replicas=1))
+        # unit costs: bucket depth 2 -> two admits, then denial
+        ok = [rs.request([1], tenant="t") for _ in range(2)]
+        denied = rs.request([1], tenant="t")
+        with pytest.raises(AdmissionDenied) as ei:
+            denied.result(timeout=5)
+        assert ei.value.tenant == "t"
+        for f in ok:
+            f.result(timeout=20)
+        pt = rs.stats()["per_tenant"]
+        assert pt["t"]["admission_denied"] == 1
+        assert pt["t"]["requests"] == 2  # denied request never counted in
+        assert rh.router.admission_denials() == {"t": 1}
+    finally:
+        rh.close()
+
+
+def test_class_latency_windows_feed_protected_class_p95():
+    rh = _rh(routing="round_robin")
+    try:
+        rs = rh.add_service(ServiceDescription(name="svc", factory=Echo,
+                                               replicas=1))
+        for p in ("high", "high", "low"):
+            rs.request([1], tenant="x", priority=p).result(timeout=20)
+        # per-class windows only hold their own class's samples
+        assert rs.latency_p95(tenant_class="high") is not None
+        assert rs.latency_p95(tenant_class="low") is not None
+        assert rs.latency_p95(tenant_class="nobody") is None
+        with pytest.raises(ValueError):
+            rs.latency_p95(tenant_class="high", phase="ttft")
+    finally:
+        rh.close()

@@ -1,8 +1,10 @@
-"""Router unit tests: balance invariants, determinism, incremental pick()
-API, the queue-depth-aware least-loaded policy, prefix-affinity
-(sticky-session) routing, and radix longest-prefix-match routing."""
+"""Router unit tests: balance invariants, determinism, the incremental
+route() API (envelope + RouteContext), the queue-depth-aware least-loaded
+policy, prefix-affinity (sticky-session) routing, radix longest-prefix-
+match routing, the legacy pick() shim, and per-tenant admission."""
 import pytest
 
+from repro.core.request import InferenceRequest, RouteContext
 from repro.core.router import (ROUTERS, LeastLoadedRouter,
                                PrefixAffinityRouter, RadixAffinityRouter,
                                RandomRouter, RoundRobinRouter,
@@ -16,6 +18,19 @@ def _requests(lens):
 
 
 LENS = [3, 50, 7, 120, 1, 44, 9, 80, 80, 2, 17, 61]
+
+
+def pick(r, cost=1.0, *, n_instances, group="default", queue_depths=None,
+         affinity_key=None, info=None, members=None, affinity_group=None,
+         payload=None):
+    """route() through the primary envelope surface with pick()-shaped
+    arguments — the whole suite exercises the new API while reading like
+    the routing decisions it checks."""
+    env = InferenceRequest(payload=payload, affinity=affinity_key)
+    ctx = RouteContext(n_instances=n_instances, group=group,
+                       queue_depths=queue_depths, members=members,
+                       affinity_group=affinity_group, info=info)
+    return r.route(env, ctx, cost=cost)
 
 
 # ---------------------------------------------------------------------------
@@ -82,60 +97,60 @@ def test_random_router_deterministic_under_seed():
 
 def test_pick_round_robin_cycles():
     r = RoundRobinRouter()
-    picks = [r.pick(n_instances=3, group="g") for _ in range(7)]
+    picks = [pick(r, n_instances=3, group="g") for _ in range(7)]
     assert picks == [0, 1, 2, 0, 1, 2, 0]
 
 
 def test_pick_single_instance_is_zero():
     for kind in sorted(ROUTERS):
-        assert make_router(kind).pick(5.0, n_instances=1) == 0
+        assert pick(make_router(kind), 5.0, n_instances=1) == 0
 
 
 def test_pick_rejects_bad_n():
     with pytest.raises(ValueError):
-        RoundRobinRouter().pick(n_instances=0)
+        pick(RoundRobinRouter(), n_instances=0)
 
 
 def test_pick_groups_are_independent():
     r = RoundRobinRouter()
-    assert r.pick(n_instances=2, group="a") == 0
-    assert r.pick(n_instances=2, group="b") == 0
-    assert r.pick(n_instances=2, group="a") == 1
-    assert r.pick(n_instances=2, group="b") == 1
+    assert pick(r, n_instances=2, group="a") == 0
+    assert pick(r, n_instances=2, group="b") == 0
+    assert pick(r, n_instances=2, group="a") == 1
+    assert pick(r, n_instances=2, group="b") == 1
 
 
 def test_pick_balanced_tracks_cumulative_load():
     r = TokenAwareBalancedRouter()
-    first = r.pick(100.0, n_instances=2, group="g")
-    second = r.pick(1.0, n_instances=2, group="g")
+    first = pick(r, 100.0, n_instances=2, group="g")
+    second = pick(r, 1.0, n_instances=2, group="g")
     assert second != first  # heavy request loads one side; next goes other
-    third = r.pick(1.0, n_instances=2, group="g")
+    third = pick(r, 1.0, n_instances=2, group="g")
     assert third == second  # still lighter than the 100-token side
 
 
 def test_pick_resizes_when_replica_count_changes():
     r = TokenAwareBalancedRouter()
     for _ in range(6):
-        assert r.pick(1.0, n_instances=2, group="g") in (0, 1)
+        assert pick(r, 1.0, n_instances=2, group="g") in (0, 1)
     # autoscale grows the set: new replicas must receive traffic
-    picks = [r.pick(1.0, n_instances=4, group="g") for _ in range(8)]
+    picks = [pick(r, 1.0, n_instances=4, group="g") for _ in range(8)]
     assert set(picks) & {2, 3}
     # ... and shrinking stays in range
-    picks = [r.pick(1.0, n_instances=2, group="g") for _ in range(4)]
+    picks = [pick(r, 1.0, n_instances=2, group="g") for _ in range(4)]
     assert set(picks) <= {0, 1}
 
 
 def test_least_loaded_prefers_shallow_queue():
     r = LeastLoadedRouter()
-    idx = r.pick(1.0, n_instances=3, group="g", queue_depths=[5, 0, 9])
+    idx = pick(r, 1.0, n_instances=3, group="g", queue_depths=[5, 0, 9])
     assert idx == 1
-    idx = r.pick(1.0, n_instances=3, group="g", queue_depths=[0, 4, 4])
+    idx = pick(r, 1.0, n_instances=3, group="g", queue_depths=[0, 4, 4])
     assert idx == 0
 
 
 def test_least_loaded_falls_back_without_depths():
     r = LeastLoadedRouter()
-    picks = {r.pick(1.0, n_instances=2, group="g") for _ in range(4)}
+    picks = {pick(r, 1.0, n_instances=2, group="g") for _ in range(4)}
     assert picks == {0, 1}  # balanced fallback spreads
 
 
@@ -198,22 +213,22 @@ def test_signature_method_only_on_affinity_router():
 def test_prefix_affinity_sticks_same_key_to_same_replica():
     r = make_router("prefix_affinity")
     k = request_signature({"prompt": [3] * 40})
-    first = r.pick(1.0, n_instances=4, group="g", affinity_key=k)
+    first = pick(r, 1.0, n_instances=4, group="g", affinity_key=k)
     for _ in range(10):
-        assert r.pick(1.0, n_instances=4, group="g", affinity_key=k) == first
+        assert pick(r, 1.0, n_instances=4, group="g", affinity_key=k) == first
 
 
 def test_prefix_affinity_reports_hit_miss_via_info():
     r = make_router("prefix_affinity")
     k = request_signature({"prompt": [3] * 40})
     info = {}
-    r.pick(1.0, n_instances=4, group="g", affinity_key=k, info=info)
+    pick(r, 1.0, n_instances=4, group="g", affinity_key=k, info=info)
     assert info["affinity"] == "miss"
     info = {}
-    r.pick(1.0, n_instances=4, group="g", affinity_key=k, info=info)
+    pick(r, 1.0, n_instances=4, group="g", affinity_key=k, info=info)
     assert info["affinity"] == "hit"
     info = {}
-    r.pick(1.0, n_instances=4, group="g", info=info)  # unkeyed: no report
+    pick(r, 1.0, n_instances=4, group="g", info=info)  # unkeyed: no report
     assert "affinity" not in info
 
 
@@ -221,7 +236,7 @@ def test_prefix_affinity_distinct_sessions_spread():
     """First-seen keys fall through to least-loaded, so distinct sessions
     land on distinct replicas instead of piling up."""
     r = make_router("prefix_affinity")
-    homes = [r.pick(10.0, n_instances=4, group="g",
+    homes = [pick(r, 10.0, n_instances=4, group="g",
                     affinity_key=request_signature({"prompt": [s] * 40}))
              for s in range(4)]
     assert sorted(homes) == [0, 1, 2, 3]
@@ -230,17 +245,17 @@ def test_prefix_affinity_distinct_sessions_spread():
 def test_prefix_affinity_spills_when_sticky_replica_backed_up():
     r = make_router("prefix_affinity", spill_factor=2.0)
     k = request_signature({"prompt": [1] * 40})
-    home = r.pick(1.0, n_instances=3, group="g", affinity_key=k)
+    home = pick(r, 1.0, n_instances=3, group="g", affinity_key=k)
     depths = [0.0] * 3
     depths[home] = 50.0  # way past spill_factor * (min + 1)
     info = {}
-    spilled = r.pick(1.0, n_instances=3, group="g", affinity_key=k,
+    spilled = pick(r, 1.0, n_instances=3, group="g", affinity_key=k,
                      queue_depths=depths, info=info)
     assert spilled != home
     assert info["affinity"] == "spill"
     # the session re-homed: next pick (no pressure) sticks to the new home
     info = {}
-    assert r.pick(1.0, n_instances=3, group="g", affinity_key=k,
+    assert pick(r, 1.0, n_instances=3, group="g", affinity_key=k,
                   info=info) == spilled
     assert info["affinity"] == "hit"
 
@@ -248,23 +263,23 @@ def test_prefix_affinity_spills_when_sticky_replica_backed_up():
 def test_prefix_affinity_spill_disabled_by_nonpositive_factor():
     r = make_router("prefix_affinity", spill_factor=0.0)
     k = request_signature({"prompt": [1] * 40})
-    home = r.pick(1.0, n_instances=3, group="g", affinity_key=k)
+    home = pick(r, 1.0, n_instances=3, group="g", affinity_key=k)
     depths = [0.0] * 3
     depths[home] = 1e9
-    assert r.pick(1.0, n_instances=3, group="g", affinity_key=k,
+    assert pick(r, 1.0, n_instances=3, group="g", affinity_key=k,
                   queue_depths=depths) == home
 
 
 def test_prefix_affinity_resize_keeps_surviving_homes():
     r = make_router("prefix_affinity")
     keys = [request_signature({"prompt": [s] * 40}) for s in range(4)]
-    homes = {k: r.pick(1.0, n_instances=4, group="g", affinity_key=k)
+    homes = {k: pick(r, 1.0, n_instances=4, group="g", affinity_key=k)
              for k in keys}
     # shrink to 2: sessions homed on replicas 0/1 keep them, the rest
     # re-home in range; grow back keeps everything in range
     for n in (2, 4, 3):
         for k in keys:
-            idx = r.pick(1.0, n_instances=n, group="g", affinity_key=k)
+            idx = pick(r, 1.0, n_instances=n, group="g", affinity_key=k)
             assert 0 <= idx < n
             if homes[k] < n <= 2:  # surviving home after the first shrink
                 assert idx == homes[k]
@@ -273,7 +288,7 @@ def test_prefix_affinity_resize_keeps_surviving_homes():
 def test_prefix_affinity_map_is_lru_bounded():
     r = make_router("prefix_affinity", map_capacity=8)
     for s in range(50):
-        r.pick(1.0, n_instances=2, group="g",
+        pick(r, 1.0, n_instances=2, group="g",
                affinity_key=request_signature({"prompt": [s, s + 1] * 20}))
     assert len(r._affinity["g"]["amap"]) <= 8
 
@@ -283,11 +298,11 @@ def test_prefix_affinity_single_instance_miss_then_hit():
     so hit rates mean the same thing at every replica count."""
     r = make_router("prefix_affinity")
     info = {}
-    assert r.pick(1.0, n_instances=1, group="g",
+    assert pick(r, 1.0, n_instances=1, group="g",
                   affinity_key=1234, info=info) == 0
     assert info["affinity"] == "miss"
     info = {}
-    assert r.pick(1.0, n_instances=1, group="g",
+    assert pick(r, 1.0, n_instances=1, group="g",
                   affinity_key=1234, info=info) == 0
     assert info["affinity"] == "hit"
 
@@ -332,7 +347,7 @@ def test_affinity_survives_membership_change_with_stable_members(kind):
     r = make_router(kind, spill_factor=0.0)
     keys = [r.signature({"prompt": [s] * 40}) for s in range(6)]
     members = (10, 11, 12)
-    home = {k: members[r.pick(1.0, n_instances=3, group="m3",
+    home = {k: members[pick(r, 1.0, n_instances=3, group="m3",
                               affinity_key=k, members=members,
                               affinity_group="svc")]
             for k in keys}
@@ -340,7 +355,7 @@ def test_affinity_survives_membership_change_with_stable_members(kind):
     # member 12 dies: a new membership (and new balance group) forms
     survivors = (10, 11)
     for k in keys:
-        idx = r.pick(1.0, n_instances=2, group="m2", affinity_key=k,
+        idx = pick(r, 1.0, n_instances=2, group="m2", affinity_key=k,
                      members=survivors, affinity_group="svc")
         if home[k] in survivors:
             assert survivors[idx] == home[k], "surviving home lost"
@@ -349,15 +364,15 @@ def test_affinity_survives_membership_change_with_stable_members(kind):
     # grow back with a NEW member id (13, never 12): homes keep holding
     grown = (10, 11, 13)
     for k in keys:
-        idx = r.pick(1.0, n_instances=3, group="m3b", affinity_key=k,
+        idx = pick(r, 1.0, n_instances=3, group="m3b", affinity_key=k,
                      members=grown, affinity_group="svc")
         assert grown[idx] == home[k]
 
 
 def test_pick_rejects_mismatched_members():
     with pytest.raises(ValueError):
-        make_router("prefix_affinity").pick(
-            1.0, n_instances=2, affinity_key=1, members=(1, 2, 3))
+        pick(make_router("prefix_affinity"),
+             1.0, n_instances=2, affinity_key=1, members=(1, 2, 3))
 
 
 # ---------------------------------------------------------------------------
@@ -388,12 +403,12 @@ def test_radix_sticks_through_divergence_past_hash_window():
     assert request_signature(a1) == request_signature(b1)  # hash collides
     r = make_router("radix_affinity", min_match=8)
     depths = [0.0, 0.0, 50.0]  # r2 busy: first contacts spread over r0/r1
-    ha = r.pick(1.0, n_instances=3, group="g", queue_depths=depths,
+    ha = pick(r, 1.0, n_instances=3, group="g", queue_depths=depths,
                 affinity_key=r.signature(a1))
     # overload the first home so session b's stem match spills off it
     d2 = list(depths)
     d2[ha] = 50.0
-    hb = r.pick(1.0, n_instances=3, group="g", queue_depths=d2,
+    hb = pick(r, 1.0, n_instances=3, group="g", queue_depths=d2,
                 affinity_key=r.signature(b1))
     assert hb != ha
     # turn 2 grows each transcript: longest-match returns each session to
@@ -401,11 +416,11 @@ def test_radix_sticks_through_divergence_past_hash_window():
     a2 = {"prompt": a1["prompt"] + [9, 9, 9]}
     b2 = {"prompt": b1["prompt"] + [8, 8, 8]}
     info = {}
-    assert r.pick(1.0, n_instances=3, group="g",
+    assert pick(r, 1.0, n_instances=3, group="g",
                   affinity_key=r.signature(a2), info=info) == ha
     assert info["affinity"] == "hit"
     info = {}
-    assert r.pick(1.0, n_instances=3, group="g",
+    assert pick(r, 1.0, n_instances=3, group="g",
                   affinity_key=r.signature(b2), info=info) == hb
     assert info["affinity"] == "hit"
 
@@ -414,10 +429,10 @@ def test_radix_short_common_prefix_routes_by_load():
     """Matches below min_match are noise (e.g. two unrelated prompts that
     open with the same token): route by load, account a miss."""
     r = make_router("radix_affinity", min_match=8)
-    r.pick(1.0, n_instances=2, group="g",
+    pick(r, 1.0, n_instances=2, group="g",
            affinity_key=r.signature({"prompt": [1, 2, 3, 4] * 10}))
     info = {}
-    r.pick(1.0, n_instances=2, group="g",
+    pick(r, 1.0, n_instances=2, group="g",
            affinity_key=r.signature({"prompt": [1, 2, 9, 9] * 10}),
            info=info)
     assert info["affinity"] == "miss"  # only 2 tokens shared
@@ -434,7 +449,7 @@ def test_radix_spills_to_second_longest_match():
     r.update_residency("svc", 0, [prompt])
     r.update_residency("svc", 1, [prompt[:16]])
     info = {}
-    idx = r.pick(1.0, n_instances=3, group="g", members=(0, 1, 2),
+    idx = pick(r, 1.0, n_instances=3, group="g", members=(0, 1, 2),
                  affinity_group="svc", queue_depths=[50.0, 1.0, 0.0],
                  affinity_key=tuple(prompt), info=info)
     assert idx == 1  # second-longest match beats the idle cold replica
@@ -448,7 +463,7 @@ def test_radix_residency_gossip_creates_first_contact_hits():
     r = make_router("radix_affinity", min_match=4)
     r.update_residency("svc", 2, [[5, 6, 7, 8, 9, 10]])
     info = {}
-    idx = r.pick(1.0, n_instances=3, group="g", members=(1, 2, 3),
+    idx = pick(r, 1.0, n_instances=3, group="g", members=(1, 2, 3),
                  affinity_group="svc",
                  affinity_key=(5, 6, 7, 8, 9, 10, 11), info=info)
     assert (1, 2, 3)[idx] == 2
@@ -458,11 +473,11 @@ def test_radix_residency_gossip_creates_first_contact_hits():
 def test_radix_forget_member_rehomes_its_sessions():
     r = make_router("radix_affinity", min_match=4)
     key = r.signature({"prompt": [3] * 20})
-    home = r.pick(1.0, n_instances=2, group="g", members=(0, 1),
+    home = pick(r, 1.0, n_instances=2, group="g", members=(0, 1),
                   affinity_group="svc", affinity_key=key)
     r.forget_member("svc", (0, 1)[home])
     info = {}
-    r.pick(1.0, n_instances=2, group="g", members=(0, 1),
+    pick(r, 1.0, n_instances=2, group="g", members=(0, 1),
            affinity_group="svc", affinity_key=key, info=info)
     assert info["affinity"] == "miss"  # no stale assignment survived
 
@@ -470,11 +485,11 @@ def test_radix_forget_member_rehomes_its_sessions():
 def test_radix_unkeyed_and_hash_keys_fall_back_to_load():
     r = make_router("radix_affinity")
     info = {}
-    r.pick(1.0, n_instances=2, group="g", info=info)
+    pick(r, 1.0, n_instances=2, group="g", info=info)
     assert "affinity" not in info
     # an int key (e.g. from request_signature) is not a token prefix:
     # route by load rather than misindexing it
-    assert r.pick(1.0, n_instances=2, group="g", affinity_key=12345) in (0, 1)
+    assert pick(r, 1.0, n_instances=2, group="g", affinity_key=12345) in (0, 1)
 
 
 def test_radix_equal_depth_matches_prefer_shallow_queue():
@@ -485,7 +500,7 @@ def test_radix_equal_depth_matches_prefer_shallow_queue():
     stem = [1, 2, 3, 4, 5, 6, 7, 8]
     r.update_residency("svc", 0, [stem])
     r.update_residency("svc", 1, [stem])
-    idx = r.pick(1.0, n_instances=2, group="g", members=(0, 1),
+    idx = pick(r, 1.0, n_instances=2, group="g", members=(0, 1),
                  affinity_group="svc", queue_depths=[3.0, 0.0],
                  affinity_key=tuple(stem + [9]))
     assert idx == 1
@@ -508,7 +523,7 @@ def test_radix_headroom_starved_match_spills_to_next_match():
     r.update_headroom("svc", 0, 1, 32)   # ...but 1/32 free: starved
     r.update_headroom("svc", 1, 16, 32)
     info = {}
-    idx = r.pick(1.0, n_instances=3, group="g", members=(0, 1, 2),
+    idx = pick(r, 1.0, n_instances=3, group="g", members=(0, 1, 2),
                  affinity_group="svc", queue_depths=[0.0, 0.0, 0.0],
                  affinity_key=tuple(prompt), info=info)
     assert idx == 1
@@ -528,12 +543,12 @@ def test_radix_headroom_recovery_restores_the_deep_match():
     # member 1's queue is deeper, so once member 0 is healthy again the
     # equal-depth tie (0's residency vs the session memory the first pick
     # left on 1) resolves back to 0
-    assert r.pick(1.0, n_instances=2, group="g", members=(0, 1),
+    assert pick(r, 1.0, n_instances=2, group="g", members=(0, 1),
                   affinity_group="svc", queue_depths=[0.0, 1.0],
                   affinity_key=tuple(prompt)) == 1
     r.update_headroom("svc", 0, 20, 32)  # pool drained back above water
     info = {}
-    assert r.pick(1.0, n_instances=2, group="g", members=(0, 1),
+    assert pick(r, 1.0, n_instances=2, group="g", members=(0, 1),
                   affinity_group="svc", queue_depths=[0.0, 1.0],
                   affinity_key=tuple(prompt), info=info) == 0
     assert info["affinity"] == "hit"
@@ -550,7 +565,7 @@ def test_radix_headroom_all_starved_falls_back_by_load():
     r.update_headroom("svc", 0, 0, 32)
     r.update_headroom("svc", 1, 1, 32)
     info = {}
-    idx = r.pick(1.0, n_instances=3, group="g", members=(0, 1, 2),
+    idx = pick(r, 1.0, n_instances=3, group="g", members=(0, 1, 2),
                  affinity_group="svc", queue_depths=[5.0, 5.0, 0.0],
                  affinity_key=tuple(prompt), info=info)
     assert idx == 2  # least-loaded, cache-cold — but not about to evict
@@ -563,7 +578,7 @@ def test_radix_headroom_disabled_by_nonpositive_watermark():
     r.update_residency("svc", 0, [prompt])
     r.update_headroom("svc", 0, 0, 32)  # zero free, but weighting is off
     info = {}
-    assert r.pick(1.0, n_instances=2, group="g", members=(0, 1),
+    assert pick(r, 1.0, n_instances=2, group="g", members=(0, 1),
                   affinity_group="svc", affinity_key=tuple(prompt),
                   info=info) == 0
     assert info["affinity"] == "hit"
@@ -579,7 +594,7 @@ def test_radix_forget_member_drops_its_headroom():
     # re-gossiped residency with no headroom report routes normally
     r.update_residency("svc", 0, [prompt])
     info = {}
-    assert r.pick(1.0, n_instances=2, group="g", members=(0, 1),
+    assert pick(r, 1.0, n_instances=2, group="g", members=(0, 1),
                   affinity_group="svc", affinity_key=tuple(prompt),
                   info=info) == 0
     assert info["affinity"] == "hit"
@@ -598,3 +613,68 @@ def test_router_from_policy_threads_headroom_watermark():
     r = router_from_policy(P())
     assert isinstance(r, RadixAffinityRouter)
     assert r.headroom_watermark == 0.33
+
+
+# ---------------------------------------------------------------------------
+# route(): envelope-native behavior + the legacy pick() shim
+# ---------------------------------------------------------------------------
+
+
+def test_route_derives_affinity_from_envelope_payload():
+    """An envelope with no explicit affinity key still routes sticky:
+    route() derives the key from the payload with the router's own
+    signature()."""
+    r = make_router("prefix_affinity")
+    payload = {"prompt": [3] * 40}
+    first = r.route(InferenceRequest(payload=payload),
+                    RouteContext(n_instances=4, group="g"))
+    for _ in range(5):
+        assert r.route(InferenceRequest(payload=payload),
+                       RouteContext(n_instances=4, group="g")) == first
+
+
+def test_route_explicit_affinity_wins_over_payload():
+    r = make_router("prefix_affinity")
+    k = request_signature({"prompt": [9] * 40})
+    home = pick(r, n_instances=4, group="g", affinity_key=k)
+    env = InferenceRequest(payload={"prompt": [1] * 40}, affinity=k)
+    assert r.route(env, RouteContext(n_instances=4, group="g")) == home
+
+
+def test_route_default_cost_comes_from_payload():
+    r = TokenAwareBalancedRouter()
+    heavy = InferenceRequest(payload={"prompt": [0] * 100})
+    light = InferenceRequest(payload={"prompt": [0]})
+    first = r.route(heavy, RouteContext(n_instances=2, group="g"))
+    second = r.route(light, RouteContext(n_instances=2, group="g"))
+    assert second != first  # 100-token side loaded; light goes other way
+
+
+def test_route_rejects_bad_context():
+    with pytest.raises(ValueError):
+        RoundRobinRouter().route(InferenceRequest(payload=None),
+                                 RouteContext(n_instances=0))
+    with pytest.raises(ValueError):
+        make_router("prefix_affinity").route(
+            InferenceRequest(payload=None, affinity=1),
+            RouteContext(n_instances=2, members=(1, 2, 3)))
+
+
+def test_pick_shim_matches_route():
+    """The deprecated pick() surface stays: same decisions, same state,
+    as an equivalent route() call."""
+    a, b = RoundRobinRouter(), RoundRobinRouter()
+    for _ in range(7):
+        assert a.pick(n_instances=3, group="g") == \
+            pick(b, n_instances=3, group="g")
+
+
+def test_pick_shim_threads_affinity_and_info():
+    r = make_router("prefix_affinity")
+    info = {}
+    home = r.pick(1.0, n_instances=4, group="g", affinity_key=77, info=info)
+    assert info["affinity"] == "miss"
+    info = {}
+    assert r.pick(1.0, n_instances=4, group="g", affinity_key=77,
+                  info=info) == home
+    assert info["affinity"] == "hit"
